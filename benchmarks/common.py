@@ -1,0 +1,57 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def artifact_path(name: str) -> str:
+    os.makedirs(ART, exist_ok=True)
+    return os.path.join(ART, name)
+
+
+def save_json(name: str, obj) -> str:
+    p = artifact_path(name)
+    with open(p, "w") as f:
+        json.dump(obj, f, indent=1, default=_np_default)
+    return p
+
+
+def _np_default(o):
+    if isinstance(o, (np.integer,)):
+        return int(o)
+    if isinstance(o, (np.floating,)):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(type(o))
+
+
+def cumulative_regret(problem, utilities, u_star):
+    u = np.asarray(utilities, dtype=float)
+    return np.cumsum(u_star - u)
+
+
+def fit_decay_exponent(avg_regret):
+    """Slope of log(R_t/t) vs log(t) — the paper's O(T^-x) exponent."""
+    t = np.arange(1, len(avg_regret) + 1)
+    mask = avg_regret > 1e-9
+    if mask.sum() < 3:
+        return float("nan")
+    A = np.vstack([np.log(t[mask]), np.ones(mask.sum())]).T
+    slope, _ = np.linalg.lstsq(A, np.log(avg_regret[mask]), rcond=None)[0]
+    return float(slope)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.time() - self.t0

@@ -1,0 +1,34 @@
+"""Fig 10: convergence iteration across 10 random seeds (paper: all
+below 20, average < 8)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save_json
+from repro.core import BayesSplitEdge, default_vgg19_problem
+
+
+def run(n_seeds: int = 10):
+    hits = []
+    for seed in range(n_seeds):
+        pb = default_vgg19_problem()
+        res = BayesSplitEdge(pb, budget=20).run(seed=seed)
+        hit = next((i + 1 for i, a in enumerate(res.accuracies)
+                    if a >= 87.5), None)
+        hits.append(hit)
+    save_json("fig10_seeds.json", dict(hits=hits))
+    return hits
+
+
+def main():
+    hits = run()
+    ok = [h for h in hits if h is not None]
+    print(f"converged {len(ok)}/{len(hits)} seeds; iterations: {hits}")
+    if ok:
+        print(f"mean convergence iteration: {np.mean(ok):.1f} "
+              f"(paper: < 8, all < 20)")
+    return hits
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Fig 6: accuracy vs evaluation step for six split-inference strategies
+under the 5 J / 5 s budget."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save_json
+from repro.baselines import CMAES, DirectSearch, PPOBaseline, RandomSearch
+from repro.core import BasicBO, BayesSplitEdge, default_vgg19_problem
+
+
+def run(seed: int = 0):
+    algos = [
+        ("Bayes-Split-Edge", lambda pb: BayesSplitEdge(pb, budget=20)),
+        ("Basic-BO", lambda pb: BasicBO(pb, budget=48)),
+        ("Direct Search", lambda pb: DirectSearch(pb)),
+        ("CMA-ES", lambda pb: CMAES(pb, budget=48)),
+        ("Random Search", lambda pb: RandomSearch(pb, budget=48)),
+        ("RL (PPO)", lambda pb: PPOBaseline(pb)),
+    ]
+    traces = {}
+    for name, mk in algos:
+        pb = default_vgg19_problem()
+        res = mk(pb).run(seed=seed)
+        traces[name] = dict(acc_per_step=res.accuracies,
+                            feasible=res.feasible)
+    save_json("fig6_convergence.json", traces)
+    return traces
+
+
+def main():
+    traces = run()
+    print(f"{'algorithm':18s} {'steps':>5s} {'min%':>6s} {'max%':>6s} "
+          f"{'zero-dips':>9s} {'feas%':>6s}")
+    for name, t in traces.items():
+        acc = np.array(t["acc_per_step"])
+        print(f"{name:18s} {len(acc):5d} {acc.min():6.2f} {acc.max():6.2f} "
+              f"{(acc == 0).sum():9d} {100*np.mean(t['feasible']):6.1f}")
+    return traces
+
+
+if __name__ == "__main__":
+    main()

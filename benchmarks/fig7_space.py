@@ -1,0 +1,59 @@
+"""Fig 7: split-layer x transmit-power search space — feasible region,
+exhaustive optimum band, and where each method sampled."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save_json
+from repro.baselines import CMAES, DirectSearch, PPOBaseline, RandomSearch
+from repro.core import BasicBO, BayesSplitEdge, default_vgg19_problem
+
+
+def run(seed: int = 0):
+    pb = default_vgg19_problem()
+    # feasibility grid
+    grid = []
+    for l in range(1, pb.L + 1):
+        for p in np.linspace(pb.p_min, pb.p_max, 51):
+            a = pb.normalize(l, float(p))
+            _, acc = pb._accuracy(l, float(p))
+            grid.append(dict(l=l, p=float(p), feasible=bool(pb.feasible(a)),
+                             acc=float(acc)))
+    # optimum band (the paper's "0.35-0.39 W" at layer 7)
+    from repro.baselines import ExhaustiveSearch
+    band = ExhaustiveSearch(pb, n_power=201).optimal_band(tol=2e-2)
+
+    samples = {}
+    for name, mk in [
+            ("Bayes-Split-Edge", lambda pb: BayesSplitEdge(pb, budget=20)),
+            ("Basic-BO", lambda pb: BasicBO(pb, budget=48)),
+            ("Direct Search", lambda pb: DirectSearch(pb)),
+            ("CMA-ES", lambda pb: CMAES(pb, budget=32)),
+            ("Random Search", lambda pb: RandomSearch(pb, budget=48)),
+            ("RL (PPO)", lambda pb: PPOBaseline(pb))]:
+        pb_i = default_vgg19_problem()
+        mk(pb_i).run(seed=seed)
+        samples[name] = [dict(l=r.l, p=r.p_w, feasible=r.feasible)
+                         for r in pb_i.history]
+    out = dict(grid=grid, optimum_band=[(int(l), float(p)) for l, p in band],
+               samples=samples)
+    save_json("fig7_space.json", out)
+    return out
+
+
+def main():
+    out = run()
+    band = out["optimum_band"]
+    ls = sorted(set(l for l, _ in band))
+    ps = [p for _, p in band]
+    print(f"optimum band: layers {ls}, P in [{min(ps):.3f}, {max(ps):.3f}] W "
+          f"(paper: layer 7, 0.35-0.39 W)")
+    for name, s in out["samples"].items():
+        inside = sum(1 for x in s if x["feasible"])
+        print(f"{name:18s}: {len(s):3d} samples, {inside:3d} feasible "
+              f"({100*inside/len(s):.0f}%)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Fig 8: cumulative regret across two model/dataset pairs
+(VGG19/ImageNet-Mini, ResNet101/Tiny-ImageNet) + decay-exponent fits."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import cumulative_regret, fit_decay_exponent, save_json
+from repro.core import (BasicBO, BayesSplitEdge, default_resnet101_problem,
+                        default_vgg19_problem)
+
+
+def run(n_seeds: int = 3, budget: int = 30):
+    pairs = [("VGG19/ImageNet-Mini", default_vgg19_problem),
+             ("ResNet101/Tiny-ImageNet", default_resnet101_problem)]
+    out = {}
+    for pair_name, mk_pb in pairs:
+        pb0 = mk_pb()
+        a_star = pb0.exhaustive_optimum(n_power=301)[0]
+        # regret on the paper's utility (reported accuracy), not our
+        # internal energy-tie-break surrogate
+        acc_star = pb0._accuracy(*pb0.denormalize(a_star))[1]
+        curves = {}
+        for algo_name, mk in [("Bayes-Split-Edge",
+                               lambda pb: BayesSplitEdge(pb, budget=budget)),
+                              ("Basic-BO",
+                               lambda pb: BasicBO(pb, budget=budget))]:
+            regs = []
+            for seed in range(n_seeds):
+                pb = mk_pb()
+                res = mk(pb).run(seed=seed)
+                # Eq. 5 semantics: after the optimizer stops, the system
+                # DEPLOYS the incumbent for the remaining tasks — pad the
+                # utility trace with the incumbent's accuracy
+                accs = list(res.accuracies[:budget])
+                accs += [res.best_accuracy] * (budget - len(accs))
+                r = cumulative_regret(pb, accs, acc_star)
+                regs.append(r)
+            n = min(len(r) for r in regs)
+            avg_cum = np.mean([r[:n] for r in regs], axis=0)
+            avg_reg = avg_cum / np.arange(1, n + 1)
+            curves[algo_name] = dict(
+                cum_regret=avg_cum.tolist(),
+                decay_exponent=fit_decay_exponent(avg_reg))
+        out[pair_name] = curves
+    save_json("fig8_regret.json", out)
+    return out
+
+
+def main():
+    out = run()
+    print(f"{'pair':26s} {'algorithm':18s} {'R_T':>8s} {'decay O(T^x)':>12s} "
+          f"(paper: ours -0.85, basic -0.43)")
+    for pair, curves in out.items():
+        for algo, c in curves.items():
+            print(f"{pair:26s} {algo:18s} {c['cum_regret'][-1]:8.2f} "
+                  f"{c['decay_exponent']:12.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

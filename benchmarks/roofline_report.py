@@ -1,0 +1,99 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+compute  = HLO_FLOPs / (chips x 197 TFLOP/s)
+memory   = HLO_bytes / (chips x 819 GB/s)
+collective = collective_bytes / (chips x 50 GB/s)
+(analysis numbers are per-device already -> no chips division; see
+launch/dryrun.measure_analysis for the scan-depth extrapolation.)
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import save_json
+from repro.configs import SHAPES, get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) for train; 2*N*D for inference."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.param_counts()["active"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch           # decode: one token/seq
+
+
+def load_cells(include_variants: bool = False):
+    cells = []
+    for p in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        d = json.load(open(p))
+        if not include_variants and (d.get("variant") or {}).get("tag"):
+            continue  # §Perf variants are reported separately
+        cells.append(d)
+    return cells
+
+
+def roofline_row(d):
+    arch, shape, mesh = d["arch"], d["shape"], d["mesh"]
+    n_chips = d.get("n_chips", 256)
+    ana = d.get("analysis") or {}
+    if "flops" not in ana:
+        return None
+    flops_dev = ana["flops"]                      # per-device
+    bytes_dev = ana["bytes_accessed"]
+    coll_dev = (ana.get("collectives") or {}).get("total", 0.0)
+    t_comp = flops_dev / PEAK_FLOPS
+    t_mem = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    dom = max((t_comp, "compute"), (t_mem, "memory"), (t_coll, "collective"))
+    mf = model_flops(arch, shape)
+    mf_dev = mf / n_chips
+    util = mf_dev / max(flops_dev, 1e-9)
+    bound = max(t_comp, t_mem, t_coll)
+    # roofline fraction: useful-compute time / bottleneck time
+    frac = (mf_dev / PEAK_FLOPS) / max(bound, 1e-12)
+    return dict(arch=arch, shape=shape, mesh=mesh, chips=n_chips,
+                compute_s=t_comp, memory_s=t_mem, collective_s=t_coll,
+                dominant=dom[1], model_flops_ratio=util,
+                roofline_fraction=frac,
+                peak_bytes_per_dev=d.get("memory", {}).get("peak_bytes"),
+                notes="; ".join(ana.get("notes", [])))
+
+
+def main():
+    cells = load_cells()
+    rows = [r for r in (roofline_row(d) for d in cells
+                        if d.get("status") == "ok") if r]
+    skipped = [(d["arch"], d["shape"], d["mesh"]) for d in cells
+               if d.get("status") == "skipped"]
+    rows.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+    save_json("roofline.json", dict(rows=rows, skipped=skipped))
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':8s} {'comp(s)':>9s} "
+           f"{'mem(s)':>9s} {'coll(s)':>9s} {'dominant':>10s} "
+           f"{'MF/HLO':>7s} {'roofline':>9s}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+              f"{r['compute_s']:9.4f} {r['memory_s']:9.4f} "
+              f"{r['collective_s']:9.4f} {r['dominant']:>10s} "
+              f"{r['model_flops_ratio']:7.3f} {r['roofline_fraction']:9.3f}")
+    print(f"\n{len(rows)} cells ok, {len(skipped)} skipped "
+          f"(long_500k on pure full-attention archs)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

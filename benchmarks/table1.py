@@ -1,0 +1,77 @@
+"""Table 1: performance comparison of optimization methods on the
+split-inference task (VGG19 / ImageNet-Mini / 5 J / 5 s)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, save_json
+from repro.baselines import (CMAES, ComputeFirst, DirectSearch,
+                             ExhaustiveSearch, PPOBaseline, RandomSearch,
+                             TransmitFirst)
+from repro.core import BasicBO, BayesSplitEdge, default_vgg19_problem
+
+PAPER_ROWS = {
+    "Bayes-Split-Edge (Ours)": (20, 7, 0.38, 87.50, 1.53, 5.00),
+    "Basic-BO": (48, 7, 0.40, 85.94, 1.53, 5.00),
+    "Exhaustive Search": (36036, 7, 0.37, 87.50, 1.53, 5.00),
+    "Direct Search": (80, 7, 0.38, 87.50, 1.53, 5.00),
+    "CMA-ES": (32, 2, 0.10, 84.38, 0.11, 3.75),
+    "Random Search": (300, 3, 0.28, 84.38, 0.61, 4.01),
+    "RL (PPO)": (100, 5, 0.17, 84.38, 1.02, 4.39),
+    "Transmit-First": (1, 1, 0.50, 84.38, 0.14, 3.31),
+    "Compute-First": (1, 7, 0.34, 84.38, 1.53, 5.00),
+}
+
+
+def run(seed: int = 0):
+    algos = [
+        ("Bayes-Split-Edge (Ours)",
+         lambda pb: BayesSplitEdge(pb, budget=20)),
+        ("Basic-BO", lambda pb: BasicBO(pb, budget=48)),
+        ("Exhaustive Search", lambda pb: ExhaustiveSearch(pb, n_power=1001)),
+        ("Direct Search", lambda pb: DirectSearch(pb)),
+        ("CMA-ES", lambda pb: CMAES(pb)),
+        ("Random Search", lambda pb: RandomSearch(pb)),
+        ("RL (PPO)", lambda pb: PPOBaseline(pb)),
+        ("Transmit-First", lambda pb: TransmitFirst(pb)),
+        ("Compute-First", lambda pb: ComputeFirst(pb)),
+    ]
+    rows = []
+    for name, mk in algos:
+        pb = default_vgg19_problem()
+        with Timer() as tm:
+            res = mk(pb).run(seed=seed)
+        if res.best_a is None:
+            l, p, e, t = -1, float("nan"), float("nan"), float("nan")
+        else:
+            l, p = pb.denormalize(res.best_a)
+            e, t = pb.constraint_values(res.best_a)
+        paper = PAPER_ROWS.get(name)
+        rows.append(dict(
+            algorithm=name, evals=res.n_evals, split_layer=l,
+            power_w=round(float(p), 3), accuracy=res.best_accuracy,
+            energy_j=round(float(e), 3), delay_s=round(float(t), 3),
+            wall_s=round(tm.s, 2),
+            paper=dict(zip(("evals", "layer", "power", "acc", "E", "tau"),
+                           paper)) if paper else None))
+    save_json("table1.json", rows)
+    return rows
+
+
+def main():
+    rows = run()
+    hdr = (f"{'algorithm':26s} {'evals':>6s} {'l':>3s} {'P(W)':>6s} "
+           f"{'acc%':>6s} {'E(J)':>6s} {'tau(s)':>6s} | paper: l P acc")
+    print(hdr)
+    for r in rows:
+        pp = r["paper"]
+        ps = (f"{pp['layer']:>2d} {pp['power']:.2f} {pp['acc']:.2f}"
+              if pp else "")
+        print(f"{r['algorithm']:26s} {r['evals']:6d} {r['split_layer']:3d} "
+              f"{r['power_w']:6.3f} {r['accuracy']:6.2f} {r['energy_j']:6.2f} "
+              f"{r['delay_s']:6.2f} | {ps}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

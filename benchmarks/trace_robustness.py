@@ -1,0 +1,59 @@
+"""Robustness over the channel trace (§6.1: traces "assess performance
+robustness"): re-run Bayes-Split-Edge at frames spanning the synthesized
+mMobile trace's gain range — the found optimum must track the channel
+(deeper/lower-power splits as the link degrades), each within the same
+20-eval budget."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save_json
+from repro.core import BayesSplitEdge, SplitInferenceProblem
+from repro.core.cost_model import CostModel
+from repro.core.profiles import vgg19_profile
+from repro.wireless.traces import synth_mmobile_trace
+
+
+def run(n_frames: int = 5, seed: int = 0):
+    trace = synth_mmobile_trace(seed=3, n_frames=450)
+    # frames spanning the gain range: best, quartiles, blockage-worst
+    idx = np.argsort(trace)
+    picks = [idx[-1], idx[3 * len(idx) // 4], idx[len(idx) // 2],
+             idx[len(idx) // 4], idx[0]][:n_frames]
+    rows = []
+    for fi in picks:
+        gain = float(trace[fi])
+        pb = SplitInferenceProblem(CostModel(vgg19_profile()), gain)
+        res = BayesSplitEdge(pb, budget=20).run(seed=seed)
+        solved = (res.best_a is not None and res.best_accuracy > 0
+                  and pb.feasible(res.best_a))
+        if not solved:
+            rows.append(dict(frame=int(fi), gain_db=gain, feasible=False))
+            continue
+        l, p = pb.denormalize(res.best_a)
+        e, t = pb.constraint_values(res.best_a)
+        rows.append(dict(frame=int(fi), gain_db=gain, layer=l,
+                         power_w=round(p, 3), acc=res.best_accuracy,
+                         energy_j=round(e, 3), delay_s=round(t, 3),
+                         evals=res.n_evals, feasible=True))
+    save_json("trace_robustness.json", rows)
+    return rows
+
+
+def main():
+    rows = run()
+    print(f"{'frame':>6s} {'gain dB':>8s} {'l':>3s} {'P(W)':>6s} "
+          f"{'acc%':>6s} {'E(J)':>6s} {'tau(s)':>7s}")
+    for r in rows:
+        if not r.get("feasible"):
+            print(f"{r['frame']:6d} {r['gain_db']:8.1f}   (no feasible "
+                  f"configuration at this fade depth)")
+            continue
+        print(f"{r['frame']:6d} {r['gain_db']:8.1f} {r['layer']:3d} "
+              f"{r['power_w']:6.3f} {r['acc']:6.2f} {r['energy_j']:6.2f} "
+              f"{r['delay_s']:7.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

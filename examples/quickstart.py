@@ -1,0 +1,25 @@
+"""Quickstart: reproduce the paper's headline result in one minute.
+
+Builds the VGG19/ImageNet-Mini split-inference problem (5 J / 5 s budgets,
+mMobile-class channel) and runs Bayes-Split-Edge for 20 evaluations. The
+expected outcome is the Table-1 operating point: split layer 7,
+P ~ 0.38 W, 87.5% accuracy, E ~ 1.53 J, delay ~ 5.00 s.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import BayesSplitEdge, default_vgg19_problem
+
+problem = default_vgg19_problem()
+result = BayesSplitEdge(problem, budget=20).run(seed=0)
+
+l, p = problem.denormalize(result.best_a)
+e, tau = problem.constraint_values(result.best_a)
+print(f"found:  split layer {l}, P = {p:.3f} W")
+print(f"        accuracy {result.best_accuracy:.2f}%  "
+      f"E = {e:.2f} J  delay = {tau:.2f} s")
+print(f"        in {result.n_evals} evaluations "
+      f"({np.mean(result.feasible) * 100:.0f}% feasible samples)")
+print("paper (Table 1): layer 7, 0.38 W, 87.50%, 1.53 J, 5.00 s, 20 evals")
+assert result.best_accuracy >= 87.5 - 1e-6, "did not reach the optimum"

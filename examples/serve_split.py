@@ -1,0 +1,25 @@
+"""Split-serving example: Bayes-Split-Edge places the split point for an
+LM from the assigned pool and serves batched requests with the chosen
+partition. Every BO evaluation executes the REAL partitioned forward
+(device half -> boundary payload -> server half).
+
+  PYTHONPATH=src python examples/serve_split.py --arch recurrentgemma-2b
+"""
+import argparse
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="recurrentgemma-2b")
+    ap.add_argument("--budget", type=int, default=15)
+    args = ap.parse_args()
+    res = serve_mod.main(["--arch", args.arch, "--reduced",
+                          "--budget", str(args.budget)])
+    assert res.n_evals <= args.budget
+    print("[example] ok")
+
+
+if __name__ == "__main__":
+    main()

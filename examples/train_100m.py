@@ -1,0 +1,60 @@
+"""End-to-end training driver: a ~100M-param qwen2-family model on the
+deterministic synthetic pipeline, with checkpointing + auto-resume.
+
+Full run (a few hundred steps of the ~100M config — sized for a real
+accelerator; expect hours on CPU):
+  PYTHONPATH=src python examples/train_100m.py --preset 100m --steps 300
+
+CI-sized run (~3M params, shows the same loss curve shape in ~1 min):
+  PYTHONPATH=src python examples/train_100m.py --preset quick
+"""
+import argparse
+import dataclasses
+
+from repro.configs import get_config
+from repro.launch import train as train_mod
+
+
+def preset_cfg(name: str):
+    base = get_config("qwen2-1.5b")
+    if name == "100m":
+        # ~100M params: 10L x d640 x ff2560, 32k vocab
+        return dataclasses.replace(
+            base, name="qwen2-100m", n_layers=10, d_model=640, n_heads=10,
+            n_kv_heads=2, head_dim=64, d_ff=2560, vocab_size=32_000,
+            dtype="float32", param_dtype="float32", remat=False,
+            attn_sharding="replicated")
+    # quick: ~3M params
+    return dataclasses.replace(
+        base, name="qwen2-3m", n_layers=4, d_model=128, n_heads=4,
+        n_kv_heads=2, head_dim=32, d_ff=512, vocab_size=2048,
+        dtype="float32", param_dtype="float32", remat=False,
+        attn_sharding="replicated")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="quick", choices=["quick", "100m"])
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default="/tmp/repro_train100m")
+    args = ap.parse_args()
+
+    cfg = preset_cfg(args.preset)
+    import repro.configs.base as cb
+    cb.register(cfg)
+    n = cfg.param_counts()["total"]
+    print(f"[example] {cfg.name}: {n/1e6:.1f}M params, "
+          f"{args.steps} steps @ batch {args.batch} x seq {args.seq}")
+    losses = train_mod.main([
+        "--arch", cfg.name, "--steps", str(args.steps),
+        "--batch", str(args.batch), "--seq", str(args.seq),
+        "--ckpt", args.ckpt, "--lr", "1e-3",
+    ])
+    assert losses[-1] < losses[0], "loss did not decrease"
+    print(f"[example] ok: loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

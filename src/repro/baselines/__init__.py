@@ -1,0 +1,6 @@
+from repro.baselines.exhaustive import ExhaustiveSearch  # noqa: F401
+from repro.baselines.random_search import RandomSearch  # noqa: F401
+from repro.baselines.direct import DirectSearch  # noqa: F401
+from repro.baselines.cmaes import CMAES  # noqa: F401
+from repro.baselines.ppo import PPOBaseline  # noqa: F401
+from repro.baselines.greedy import ComputeFirst, TransmitFirst  # noqa: F401

@@ -1,0 +1,148 @@
+"""PPO baseline (§6.2, after Zhang et al. 2024).
+
+MDP: state = previous normalized (power, layer); continuous action in
+[0,1]^2; reward = accuracy/100 with a -5 penalty on constraint violation;
+transition adds N(0, 0.01) noise. Trained for 100 environment steps
+(= 100 function evaluations) with entropy coef 0.05, lr 3e-4. The
+severely constrained budget prevents meaningful learning — as the paper
+reports.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bo import BOResult
+
+
+def _init_net(key, sizes):
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, k = jax.random.split(key)
+        params.append((jax.random.normal(k, (a, b)) / np.sqrt(a),
+                       jnp.zeros((b,))))
+    return params
+
+
+def _mlp(params, x):
+    for i, (w, b) in enumerate(params):
+        x = x @ w + b
+        if i < len(params) - 1:
+            x = jnp.tanh(x)
+    return x
+
+
+class PPOBaseline:
+    name = "RL (PPO)"
+
+    def __init__(self, problem, budget: int = 100, lr: float = 3e-4,
+                 entropy_coef: float = 0.05, clip: float = 0.2,
+                 epochs: int = 4, gamma: float = 0.9):
+        self.problem = problem
+        self.budget = budget
+        self.lr = lr
+        self.entropy_coef = entropy_coef
+        self.clip = clip
+        self.epochs = epochs
+        self.gamma = gamma
+
+    def run(self, seed: int = 0) -> BOResult:
+        pb = self.problem
+        rng = np.random.default_rng(seed)
+        key = jax.random.PRNGKey(seed)
+
+        key, k1, k2 = jax.random.split(key, 3)
+        pi = dict(net=_init_net(k1, (2, 32, 2)), log_std=jnp.full((2,), -1.0))
+        vf = _init_net(k2, (2, 32, 1))
+        opt_state = dict(
+            pi=(jax.tree.map(jnp.zeros_like, pi), jax.tree.map(jnp.zeros_like, pi)),
+            vf=(jax.tree.map(jnp.zeros_like, vf), jax.tree.map(jnp.zeros_like, vf)))
+
+        def logp(pi, s, a):
+            mu = jax.nn.sigmoid(_mlp(pi["net"], s))
+            std = jnp.exp(pi["log_std"])
+            return jnp.sum(-0.5 * ((a - mu) / std) ** 2
+                           - pi["log_std"] - 0.5 * jnp.log(2 * jnp.pi), -1)
+
+        def entropy(pi):
+            return jnp.sum(pi["log_std"] + 0.5 * jnp.log(2 * jnp.pi * jnp.e))
+
+        def pi_loss(pi, s, a, adv, logp_old):
+            ratio = jnp.exp(logp(pi, s, a) - logp_old)
+            un = ratio * adv
+            cl = jnp.clip(ratio, 1 - self.clip, 1 + self.clip) * adv
+            return -jnp.mean(jnp.minimum(un, cl)) \
+                - self.entropy_coef * entropy(pi)
+
+        def vf_loss(vf, s, ret):
+            return jnp.mean((_mlp(vf, s)[:, 0] - ret) ** 2)
+
+        pi_grad = jax.jit(jax.grad(pi_loss))
+        vf_grad = jax.jit(jax.grad(vf_loss))
+
+        def adam(params, grads, state, lr, t):
+            b1, b2, eps = 0.9, 0.999, 1e-8
+            m0, v0 = state
+            m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, m0, grads)
+            v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, v0, grads)
+            params = jax.tree.map(
+                lambda p, m_, v_: p - lr * (m_ / (1 - b1 ** t))
+                / (jnp.sqrt(v_ / (1 - b2 ** t)) + eps), params, m, v)
+            return params, (m, v)
+
+        utilities, accs, feas, inc = [], [], [], []
+        best_a, best_u, best_acc = None, -np.inf, 0.0
+
+        s = rng.random(2)
+        batch_s, batch_a, batch_r, batch_lp = [], [], [], []
+        t_adam = 0
+        while len(utilities) < self.budget:
+            key, k = jax.random.split(key)
+            mu = jax.nn.sigmoid(_mlp(pi["net"], jnp.asarray(s)))
+            a = np.asarray(mu + jnp.exp(pi["log_std"])
+                           * jax.random.normal(k, (2,)))
+            a = np.clip(a, 0, 1)
+            u = pb.evaluate(a)
+            rec = pb.history[-1]
+            r = u / 100.0 + (-5.0 if not rec.feasible else 0.0)
+            utilities.append(u)
+            accs.append(rec.accuracy)
+            feas.append(rec.feasible)
+            if rec.feasible and u > best_u:
+                best_a, best_u, best_acc = a.copy(), u, rec.accuracy
+            inc.append(best_u if np.isfinite(best_u) else 0.0)
+
+            batch_s.append(s)
+            batch_a.append(a)
+            batch_r.append(r)
+            batch_lp.append(float(logp(pi, jnp.asarray(s), jnp.asarray(a))))
+            s = np.clip(a + rng.normal(0, 0.01, 2), 0, 1)
+
+            if len(batch_s) == 20 or len(utilities) == self.budget:
+                S = jnp.asarray(np.array(batch_s))
+                A = jnp.asarray(np.array(batch_a))
+                R = np.array(batch_r)
+                # discounted returns-to-go
+                G = np.zeros_like(R)
+                acc_g = 0.0
+                for i in range(len(R) - 1, -1, -1):
+                    acc_g = R[i] + self.gamma * acc_g
+                    G[i] = acc_g
+                Gj = jnp.asarray(G)
+                V = _mlp(vf, S)[:, 0]
+                adv = Gj - V
+                adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+                LP = jnp.asarray(np.array(batch_lp))
+                for _ in range(self.epochs):
+                    t_adam += 1
+                    gp_ = pi_grad(pi, S, A, adv, LP)
+                    pi, opt_state["pi"] = adam(pi, gp_, opt_state["pi"],
+                                               self.lr, t_adam)
+                    gv = vf_grad(vf, S, Gj)
+                    vf, opt_state["vf"] = adam(vf, gv, opt_state["vf"],
+                                               self.lr, t_adam)
+                batch_s, batch_a, batch_r, batch_lp = [], [], [], []
+
+        return BOResult(best_a, float(best_u), float(best_acc),
+                        len(utilities), utilities, accs, feas, inc)

@@ -1,0 +1,164 @@
+"""Sharded checkpointing with atomic commits, async save, retention, and
+elastic resharding on restore.
+
+Layout:
+  <dir>/step_<N>/manifest.json   — tree structure, shapes, dtypes
+  <dir>/step_<N>/arrays.npz      — leaf arrays (host-global view)
+  <dir>/step_<N>/COMMITTED       — written last; partial saves are ignored
+
+Arrays are written as the host-global view, so restoring onto a
+*different* mesh (elastic scale-up/down) is just device_put with the new
+sharding — the multi-host generalization shards arrays.npz per process
+and stitches via the manifest (process_index recorded for that purpose).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _unflatten_into(template, flat):
+    def fill(path, leaf):
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        return flat[key]
+    return jax.tree_util.tree_map_with_path(fill, template)
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, metadata: Optional[dict] = None,
+         blocking: bool = True) -> threading.Thread | None:
+    """Atomic checkpoint save. blocking=False returns the writer thread
+    (arrays are snapshotted to host memory synchronously — the training
+    step can mutate device buffers immediately)."""
+    flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+
+    def write():
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        manifest = dict(
+            step=step,
+            process_index=jax.process_index(),
+            process_count=jax.process_count(),
+            created=time.time(),
+            keys={k: dict(shape=list(v.shape), dtype=str(v.dtype))
+                  for k, v in flat.items()},
+            metadata=metadata or {},
+        )
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        with open(os.path.join(tmp, "COMMITTED"), "w") as f:
+            f.write(str(step))
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if blocking:
+        write()
+        return None
+    th = threading.Thread(target=write, daemon=True)
+    th.start()
+    return th
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, d, "COMMITTED")):
+                steps.append(int(d.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, template: Any,
+            shardings: Any = None) -> Any:
+    """Restore into `template`'s structure. With `shardings` (a matching
+    tree of NamedShardings) arrays are placed onto the — possibly
+    different — target mesh: elastic restart."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if not os.path.exists(os.path.join(path, "COMMITTED")):
+        raise FileNotFoundError(f"no committed checkpoint at {path}")
+    npz = np.load(os.path.join(path, "arrays.npz"))
+    flat = {k: npz[k] for k in npz.files}
+    tree = _unflatten_into(template, flat)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), tree, shardings)
+    else:
+        tree = jax.tree.map(jax.numpy.asarray, tree)
+    return tree
+
+
+class CheckpointManager:
+    """save-every-k + retention + async writes + auto-resume."""
+
+    def __init__(self, ckpt_dir: str, save_interval: int = 100,
+                 keep: int = 3, async_save: bool = True):
+        self.dir = ckpt_dir
+        self.save_interval = save_interval
+        self.keep = keep
+        self.async_save = async_save
+        self._pending: Optional[threading.Thread] = None
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def maybe_save(self, step: int, tree, metadata=None, force=False):
+        if not force and (step % self.save_interval != 0):
+            return False
+        self.wait()
+        if self.async_save:
+            # snapshot to host memory NOW — the training step may donate
+            # these device buffers immediately after we return
+            host_tree = jax.tree.map(np.asarray, tree)
+
+            def write_then_gc():
+                save(self.dir, step, host_tree, metadata=metadata,
+                     blocking=True)
+                self._gc()
+            self._pending = threading.Thread(target=write_then_gc, daemon=True)
+            self._pending.start()
+        else:
+            save(self.dir, step, tree, metadata=metadata, blocking=True)
+            self._gc()
+        return True
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[1]) for d in os.listdir(self.dir)
+            if d.startswith("step_") and not d.endswith(".tmp")
+            and os.path.exists(os.path.join(self.dir, d, "COMMITTED")))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, template, shardings=None):
+        self.wait()
+        s = latest_step(self.dir)
+        if s is None:
+            return None, None
+        return s, restore(self.dir, s, template, shardings)

@@ -1,0 +1,12 @@
+"""The paper's primary contribution: constrained Bayesian optimization for
+wireless split inference (GP surrogate + hybrid acquisition + Algorithm 1),
+over the analytic cost substrate."""
+from repro.core.bo import BasicBO, BayesSplitEdge, BOResult  # noqa: F401
+from repro.core.cost_model import (  # noqa: F401
+    Budgets, CostModel, DeviceParams, LayerProfile, ServerParams,
+    profile_from_cnn,
+)
+from repro.core.problem import (  # noqa: F401
+    SplitInferenceProblem, UtilityParams, default_resnet101_problem,
+    default_vgg19_problem,
+)

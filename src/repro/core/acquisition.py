@@ -1,0 +1,130 @@
+"""Hybrid acquisition function — Eq. (7)-(12) + adaptive weight schedules.
+
+alpha(a) = lam_base*(EI + UCB) - lam_g*||grad mu|| - lam_p*penalty
+(Alg. 1 line 10: lam_base multiplies both utility-driven terms; lam_p is
+constant over the run, lam_base/lam_g decay exponentially.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gp as gpm
+
+
+@dataclasses.dataclass(frozen=True)
+class AcqWeights:
+    lam_base0: float = 1.0
+    lam_baseT: float = 0.2
+    lam_g0: float = 0.3
+    lam_gT: float = 0.02
+    lam_p: float = 2.0
+    beta: float = 2.0                 # UCB exploration factor
+
+
+def schedule(w0: float, wT: float, t: float) -> float:
+    """Exponential decay: w(t) = w0 * (wT/w0)^t, t in [0,1] (§5.2)."""
+    if w0 <= 0.0:
+        return 0.0
+    return float(w0 * (wT / w0) ** t)
+
+
+def expected_improvement(mu, sigma, best):
+    z = (mu - best) / sigma
+    cdf = 0.5 * (1.0 + jax.scipy.special.erf(z / jnp.sqrt(2.0)))
+    pdf = jnp.exp(-0.5 * z * z) / jnp.sqrt(2.0 * jnp.pi)
+    return (mu - best) * cdf + sigma * pdf
+
+
+def ucb(mu, sigma, beta):
+    return mu + beta * sigma
+
+
+def hybrid_scores(gp, cand, best_feasible, penalties, lam_base, lam_g,
+                  lam_p, beta, y_scale):
+    """Vectorized hybrid acquisition over candidates.
+
+    cand: (N,2); penalties: (N,) raw constraint violations (Eq. 11).
+    EI/UCB/grad terms operate on the standardized scale (divide by the
+    GP's y std) so the weights are problem-scale independent.
+    """
+    mu, sigma = gpm.posterior_batch(gp, cand)
+    g = gpm.grad_mean_batch(gp, cand)
+    # safe norm: d||g||/dg at g=0 is NaN otherwise (differentiated again
+    # during acquisition refinement)
+    gn = jnp.sqrt(jnp.sum(jnp.square(g), axis=-1) + 1e-12) / y_scale
+    ei = expected_improvement(mu, sigma, best_feasible) / y_scale
+    ub = (ucb(mu, sigma, beta) - best_feasible) / y_scale
+    return lam_base * (ei + ub) - lam_g * gn - lam_p * penalties
+
+
+def candidate_grid(n: int = 64) -> np.ndarray:
+    xs = np.linspace(0.0, 1.0, n)
+    g = np.stack(np.meshgrid(xs, xs, indexing="ij"), axis=-1).reshape(-1, 2)
+    return g
+
+
+def local_candidates(problem, incumbent: Optional[np.ndarray],
+                     n_power: int = 9) -> np.ndarray:
+    """Neighborhood of the incumbent: +-2 layers x a power sweep."""
+    if incumbent is None:
+        return np.zeros((0, 2))
+    l0, p0 = problem.denormalize(incumbent)
+    out = []
+    for dl in (-2, -1, 0, 1, 2):
+        l = int(np.clip(l0 + dl, 1, problem.L))
+        for p in np.linspace(max(problem.p_min, p0 - 0.1),
+                             min(problem.p_max, p0 + 0.1), n_power):
+            out.append(problem.normalize(l, float(p)))
+    return np.array(out)
+
+
+def maximize(gp, problem, weights: AcqWeights, t_norm: float,
+             best_feasible: float, grid: np.ndarray,
+             incumbent: Optional[np.ndarray] = None,
+             refine_steps: int = 25, refine_lr: float = 0.02) -> np.ndarray:
+    """argmax over dense grid + feasibility-boundary + incumbent-local
+    candidates, then projected-gradient refinement of the continuous
+    (power) coordinate."""
+    lam_base = schedule(weights.lam_base0, weights.lam_baseT, t_norm)
+    lam_g = schedule(weights.lam_g0, weights.lam_gT, t_norm)
+
+    extra = [np.zeros((0, 2))]
+    if weights.lam_p > 0:   # constraint-aware: exploit the feasible boundary
+        extra = [problem.boundary_candidates(),
+                 local_candidates(problem, incumbent)]
+    cand = np.concatenate([grid] + extra, axis=0)
+    pen = problem.penalty_batch(cand)
+    y_scale = float(gp["y_sigma"])
+    scores = np.asarray(hybrid_scores(
+        gp, jnp.asarray(cand), best_feasible, jnp.asarray(pen),
+        lam_base, lam_g, weights.lam_p, weights.beta, y_scale))
+    a0 = cand[int(np.argmax(scores))]
+
+    # local refinement (penalty re-evaluated at the moved point; the
+    # constraint surface is analytic so this stays exact)
+    score_fn = jax.jit(lambda a, p: hybrid_scores(
+        gp, a[None], best_feasible, jnp.asarray([p]), lam_base, lam_g,
+        weights.lam_p, weights.beta, y_scale)[0])
+    grad_fn = jax.jit(jax.grad(
+        lambda a, p: hybrid_scores(
+            gp, a[None], best_feasible, jnp.asarray([p]), lam_base, lam_g,
+            weights.lam_p, weights.beta, y_scale)[0]))
+    def pen(a_):
+        return min(problem.penalty(a_), 1e6)   # inf-safe (deep-fade frames)
+
+    a = np.asarray(a0, dtype=np.float64)
+    best_a, best_s = a.copy(), float(score_fn(jnp.asarray(a), pen(a)))
+    for _ in range(refine_steps):
+        g = np.asarray(grad_fn(jnp.asarray(a), pen(a)))
+        if not np.all(np.isfinite(g)):
+            break
+        a = np.clip(a + refine_lr * g, 0.0, 1.0)
+        s = float(score_fn(jnp.asarray(a), pen(a)))
+        if s > best_s:
+            best_a, best_s = a.copy(), s
+    return best_a

@@ -1,0 +1,208 @@
+"""The constrained split-inference optimization problem — Eq. (5).
+
+Decision variables: split layer l in {1..L}, transmit power P in
+[P_min, P_max]; normalized to a = [P~, l~] in [0,1]^2 (§5.1). Constraints
+are the analytic cost model; the utility is the black-box oracle.
+
+Utility oracle (DESIGN.md §6 — calibrated, deterministic):
+  * hard failure (energy budget blown, or <90%% of the pipeline completes
+    by the deadline): U = 0            [matches the 0%%-accuracy dips, Fig 6]
+  * deadline truncation (completes >=90%% but not fully): the tail layers
+    are skipped (dropout-like, §6.1): U = base accuracy
+  * full completion: U = base + bump * exp(-(l - l*)^2 / 2 sigma^2)
+    - eps_E * E/E_max   (feature-robustness bump peaking at moderate depth;
+    the tiny energy term breaks ties toward min-energy feasible power,
+    reproducing the exhaustive-search band P in [0.35, 0.39])
+  Reported accuracies are quantized to 1/64 (the paper evaluates a
+  64-sample batch: 87.50 = 56/64, 85.94 = 55/64, 84.38 = 54/64).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cost_model import Budgets, CostModel
+
+
+@dataclasses.dataclass(frozen=True)
+class UtilityParams:
+    base_acc: float = 84.375          # 54/64
+    bump: float = 3.125               # -> 56/64 at the peak
+    peak_layer: int = 7
+    sigma: float = 1.0
+    eps_energy: float = 0.1           # tie-break, < one quantization step
+    quantum: float = 100.0 / 64.0     # report in 1/64 steps
+    completion_floor: float = 0.9     # >=90% done => truncated-but-usable
+
+
+@dataclasses.dataclass
+class EvalRecord:
+    a: np.ndarray                     # normalized input
+    l: int
+    p_w: float
+    utility: float                    # internal (smooth) utility
+    accuracy: float                   # quantized reported accuracy
+    energy_j: float
+    delay_s: float
+    feasible: bool
+
+
+class SplitInferenceProblem:
+    """Black-box U(a) + analytic constraints, with an eval ledger."""
+
+    def __init__(self, cost_model: CostModel, gain_db: float,
+                 util: UtilityParams = UtilityParams(),
+                 p_min: float = 0.0, p_max: float = 0.5,
+                 executor: Optional[Callable] = None):
+        self.cm = cost_model
+        self.gain_db = gain_db
+        self.util = util
+        self.p_min, self.p_max = p_min, p_max
+        self.L = cost_model.profile.n_layers
+        self.history: List[EvalRecord] = []
+        self.executor = executor      # optional: run the real partitioned NN
+
+    # --- input normalization (§5.1) ---------------------------------------
+    def denormalize(self, a) -> Tuple[int, float]:
+        a = np.clip(np.asarray(a, dtype=np.float64), 0.0, 1.0)
+        p = self.p_min + a[0] * (self.p_max - self.p_min)
+        l = int(np.clip(np.rint(1 + a[1] * (self.L - 1)), 1, self.L))
+        return l, float(p)
+
+    def normalize(self, l: int, p: float) -> np.ndarray:
+        return np.array([(p - self.p_min) / (self.p_max - self.p_min),
+                         (l - 1) / (self.L - 1)])
+
+    # --- analytic constraints (known, deterministic — §5) ------------------
+    def constraint_values(self, a) -> Tuple[float, float]:
+        l, p = self.denormalize(a)
+        return (float(self.cm.energy_j(l, p, self.gain_db)),
+                float(self.cm.delay_s(l, p, self.gain_db)))
+
+    def penalty(self, a) -> float:
+        """Eq. (11): ReLU'd budget violations."""
+        e, t = self.constraint_values(a)
+        b = self.cm.budgets
+        return max(0.0, e - b.e_max_j) + max(0.0, t - b.tau_max_s)
+
+    def penalty_batch(self, A) -> np.ndarray:
+        """Vectorized Eq. (11) over candidates A: (N,2) normalized."""
+        A = np.clip(np.asarray(A, dtype=np.float64), 0.0, 1.0)
+        p = self.p_min + A[:, 0] * (self.p_max - self.p_min)
+        l = np.clip(np.rint(1 + A[:, 1] * (self.L - 1)), 1, self.L).astype(int)
+        e = self.cm.energy_j(l, p, self.gain_db)
+        t = self.cm.delay_s(l, p, self.gain_db)
+        b = self.cm.budgets
+        pen = np.maximum(0.0, e - b.e_max_j) + np.maximum(0.0, t - b.tau_max_s)
+        return np.where(np.isfinite(pen), pen, 1e6)
+
+    def project_feasible(self, a, margin: float = 1.02) -> np.ndarray:
+        """Lift the power coordinate to the analytic min-feasible power for
+        the point's layer (identity if already feasible or if the layer has
+        no feasible power). Constraint-aware initialization (Fig 7:
+        'every sample lies within feasible regions')."""
+        from repro.wireless.channel import required_power_w
+        if self.feasible(a):
+            return np.asarray(a, dtype=np.float64)
+        l, p = self.denormalize(a)
+        slack = (self.cm.budgets.tau_max_s - self.cm.device_delay_s(l)
+                 - self.cm.server_delay_s(l))
+        if slack <= 0:
+            return np.asarray(a, dtype=np.float64)
+        p_req = float(required_power_w(self.cm.tx_bits(l), slack,
+                                       self.gain_db, self.cm.link)) * margin
+        if p_req <= self.p_max:
+            cand = self.normalize(l, max(p, p_req))
+            if self.feasible(cand):
+                return cand
+        return np.asarray(a, dtype=np.float64)
+
+    def boundary_candidates(self, margin: float = 1.02) -> np.ndarray:
+        """One candidate per layer at the min-feasible-power (delay)
+        boundary — 'feasible-region exploitation' (§6.3). Uses only the
+        *known analytic* constraint model; utility stays black-box."""
+        from repro.wireless.channel import required_power_w
+        cands = []
+        for l in range(1, self.L + 1):
+            slack = (self.cm.budgets.tau_max_s - self.cm.device_delay_s(l)
+                     - self.cm.server_delay_s(l))
+            if slack <= 0:
+                continue
+            p = required_power_w(self.cm.tx_bits(l), slack, self.gain_db,
+                                 self.cm.link) * margin
+            if self.p_min <= p <= self.p_max:
+                cands.append(self.normalize(l, float(p)))
+        return (np.array(cands) if cands
+                else np.zeros((0, 2), dtype=np.float64))
+
+    def feasible(self, a) -> bool:
+        return self.penalty(a) == 0.0
+
+    # --- utility oracle -----------------------------------------------------
+    def _accuracy(self, l: int, p: float) -> Tuple[float, float]:
+        """Returns (smooth utility, quantized reported accuracy)."""
+        u = self.util
+        b = self.cm.budgets
+        e = float(self.cm.energy_j(l, p, self.gain_db))
+        phi = float(self.cm.completion_fraction(l, p, self.gain_db))
+        if e > b.e_max_j or phi < u.completion_floor:
+            return 0.0, 0.0
+        if phi < 1.0:
+            # deadline truncation: tail skipped, base accuracy retained
+            smooth = u.base_acc * min(1.0, phi / u.completion_floor)
+            return smooth, np.floor(smooth / u.quantum) * u.quantum
+        bump = u.bump * np.exp(-0.5 * ((l - u.peak_layer) / u.sigma) ** 2)
+        raw = u.base_acc + bump
+        smooth = raw - u.eps_energy * e / b.e_max_j
+        return float(smooth), float(np.floor(raw / u.quantum + 1e-9) * u.quantum)
+
+    def evaluate(self, a, record: bool = True) -> float:
+        l, p = self.denormalize(a)
+        if self.executor is not None:
+            self.executor(l, p)       # run the real partitioned forward
+        smooth, acc = self._accuracy(l, p)
+        e, t = self.constraint_values(a)
+        rec = EvalRecord(np.asarray(a, dtype=np.float64), l, p, smooth, acc,
+                         e, t, self.penalty(a) == 0.0)
+        if record:
+            self.history.append(rec)
+        return smooth
+
+    # --- ground truth (for regret / Table 1) --------------------------------
+    def exhaustive_optimum(self, n_power: int = 1001):
+        best, best_u = None, -np.inf
+        ps = np.linspace(0.0, 1.0, n_power)
+        for l in range(1, self.L + 1):
+            ln = (l - 1) / (self.L - 1)
+            for pn in ps:
+                u, _ = self._accuracy(*self.denormalize([pn, ln]))
+                if u > best_u:
+                    best_u, best = u, np.array([pn, ln])
+        return best, best_u
+
+    def reset(self):
+        self.history = []
+
+
+def default_vgg19_problem(seed: int = 0, budgets: Budgets = Budgets(),
+                          executor=None):
+    """The paper's headline setup: VGG19, 5 J / 5 s, mMobile-like channel
+    anchored so (l=7, P=0.38 W) is the minimum-energy feasible optimum."""
+    from repro.core.profiles import vgg19_profile
+    cm = CostModel(vgg19_profile(), budgets=budgets)
+    gain_db = cm.calibrate_gain_db(l_star=7, p_star=0.38)
+    return SplitInferenceProblem(cm, gain_db, executor=executor)
+
+
+def default_resnet101_problem(seed: int = 0):
+    """Second model/dataset pair (ResNet101 / Tiny-ImageNet, Fig 8).
+    Lighter pipeline -> tighter budgets; peak calibrated mid-network."""
+    from repro.core.profiles import resnet101_profile
+    cm = CostModel(resnet101_profile(),
+                   budgets=Budgets(e_max_j=0.5, tau_max_s=0.5))
+    gain_db = cm.calibrate_gain_db(l_star=14, p_star=0.30)
+    util = UtilityParams(base_acc=68.75, bump=4.6875, peak_layer=14,
+                         sigma=1.5)
+    return SplitInferenceProblem(cm, gain_db, util=util)

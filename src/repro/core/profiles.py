@@ -1,0 +1,84 @@
+"""Per-layer FLOP/activation profiles for every supported architecture.
+
+Two families:
+  * CNNs (paper's own VGG19 / ResNet101) — from configs/cnn.py specs.
+  * LM decoders (the 10 assigned archs)  — per-block MACs for a serve
+    request of S tokens; the split boundary tensor is the (S, d_model)
+    residual stream (plus recurrent state for SSM/hybrid, which is what
+    makes the technique *cheaper* for those archs — DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.cnn import get_cnn_config
+from repro.core.cost_model import LayerProfile, profile_from_cnn
+
+
+def vgg19_profile() -> LayerProfile:
+    return profile_from_cnn(get_cnn_config("vgg19-imagenet-mini"))
+
+
+def resnet101_profile() -> LayerProfile:
+    return profile_from_cnn(get_cnn_config("resnet101-tiny-imagenet"))
+
+
+# ---------------------------------------------------------------------------
+# LM decoder profiles (split-serving the assigned pool)
+# ---------------------------------------------------------------------------
+
+
+def _block_macs(cfg, kind: str, seq: int) -> float:
+    """MACs for one decoder block over a request of `seq` tokens."""
+    D, F = cfg.d_model, cfg.d_ff
+    hd = cfg.hd
+    m = 0.0
+    if kind in ("attn", "local", "attn_dense"):
+        Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+        m += seq * D * (Hq + 2 * Hkv) * hd          # qkv proj
+        m += seq * Hq * hd * D                       # out proj
+        win = cfg.window if (kind == "local" or cfg.attn_type == "swa") else 0
+        kv_len = min(seq, win) if win else seq
+        m += 2 * seq * kv_len * Hq * hd / 2          # causal scores+AV (avg)
+        if cfg.moe and kind == "attn":
+            m += seq * D * cfg.n_experts             # router
+            m += seq * (cfg.top_k + cfg.n_shared_experts) * 3 * D * F
+        else:
+            mult = 3 if cfg.mlp_type in ("swiglu", "geglu") else 2
+            m += seq * mult * D * F
+    elif kind == "rglru":
+        R = cfg.lru_width or D
+        m += seq * (3 * D * R + R * R / 8)           # in/out proj + blk gates
+        mult = 3 if cfg.mlp_type in ("swiglu", "geglu") else 2
+        m += seq * mult * D * F
+    elif kind == "rwkv":
+        m += seq * 5 * D * D                         # r,k,v,g,o projections
+        m += seq * cfg.n_rwkv_heads * cfg.rwkv_head_dim ** 2 * 2  # wkv
+        m += seq * 3 * D * F                         # channel mix
+    return float(m)
+
+
+def _boundary_bytes(cfg, l: int, seq: int, bytes_per_elem: int = 2) -> float:
+    """Bytes crossing the split after layer l: residual stream + any
+    recurrent state of completed layers (needed by decode continuation)."""
+    b = seq * cfg.d_model * bytes_per_elem
+    kinds = cfg.layer_kinds()[:l]
+    for k in kinds:
+        if k == "rglru":
+            b += (cfg.lru_width or cfg.d_model) * 4
+        elif k == "rwkv":
+            b += cfg.n_rwkv_heads * cfg.rwkv_head_dim ** 2 * 4
+    return float(b)
+
+
+def lm_profile(cfg, seq: int, batch: int = 1,
+               bytes_per_elem: int = 2) -> LayerProfile:
+    """LayerProfile over decoder blocks for a `seq`-token request."""
+    kinds = cfg.layer_kinds()
+    per = np.array([_block_macs(cfg, k, seq) for k in kinds]) * batch
+    cum = np.concatenate([[0.0], np.cumsum(per)])
+    # unembed (always server-side) counts toward the total pipeline
+    total = float(cum[-1] + seq * batch * cfg.d_model * cfg.vocab_size)
+    tx = np.array([_boundary_bytes(cfg, l, seq, bytes_per_elem) * batch
+                   for l in range(len(kinds) + 1)])
+    return LayerProfile(cfg.name, cum, total, tx, len(kinds))

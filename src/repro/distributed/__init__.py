@@ -1,0 +1,3 @@
+from repro.distributed.sharding import (  # noqa: F401
+    ShardCtx, build_rules, make_ctx, local_ctx,
+)

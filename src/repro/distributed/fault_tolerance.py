@@ -1,0 +1,124 @@
+"""Fault tolerance & elasticity for 1000+-node operation.
+
+Pieces:
+  * HeartbeatMonitor — tracks per-host step times; flags stragglers at
+    k-sigma over the trailing median and dead hosts at a hard timeout.
+  * elastic_assignment — deterministic, stateless (step, host) -> data
+    shard map that rebalances when the alive-set changes; any host can
+    recompute any other host's assignment (no coordinator state to lose).
+  * TrainController — checkpoint-every-k + auto-resume + SIGTERM-safe
+    shutdown + failure-injection hooks for tests; on a world-size change
+    it re-enters through checkpoint restore onto the new mesh
+    (checkpoint/ckpt.py stores the host-global view, so resharding is a
+    device_put).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# straggler detection
+# ---------------------------------------------------------------------------
+
+
+class HeartbeatMonitor:
+    def __init__(self, n_hosts: int, window: int = 20,
+                 straggler_sigma: float = 3.0, dead_timeout_s: float = 60.0):
+        self.n_hosts = n_hosts
+        self.window = window
+        self.sigma = straggler_sigma
+        self.dead_timeout_s = dead_timeout_s
+        self.step_times: Dict[int, List[float]] = {h: [] for h in range(n_hosts)}
+        self.last_seen: Dict[int, float] = {h: time.time() for h in range(n_hosts)}
+
+    def report(self, host: int, step_time_s: float, now: Optional[float] = None):
+        ts = self.step_times[host]
+        ts.append(step_time_s)
+        if len(ts) > self.window:
+            ts.pop(0)
+        self.last_seen[host] = now if now is not None else time.time()
+
+    def stragglers(self) -> List[int]:
+        meds = {h: np.median(ts) for h, ts in self.step_times.items() if ts}
+        if len(meds) < 2:
+            return []
+        vals = np.array(list(meds.values()))
+        med, mad = np.median(vals), np.median(np.abs(vals - np.median(vals)))
+        thresh = med + self.sigma * max(mad, 1e-6) * 1.4826
+        return [h for h, v in meds.items() if v > thresh]
+
+    def dead(self, now: Optional[float] = None) -> List[int]:
+        now = now if now is not None else time.time()
+        return [h for h, t in self.last_seen.items()
+                if now - t > self.dead_timeout_s]
+
+
+# ---------------------------------------------------------------------------
+# elastic data assignment
+# ---------------------------------------------------------------------------
+
+
+def elastic_assignment(step: int, alive_hosts: List[int],
+                       global_batch: int) -> Dict[int, tuple]:
+    """Deterministic (step, alive-set) -> {host: (offset, size)} split of
+    the global batch. Pure function of its inputs: every host computes the
+    same map with no coordination; when a host dies, the next step's map
+    redistributes its share."""
+    alive = sorted(alive_hosts)
+    n = len(alive)
+    base = global_batch // n
+    rem = global_batch % n
+    out, off = {}, 0
+    # rotate the remainder so the extra sample load round-robins over steps
+    for i, h in enumerate(alive):
+        size = base + (1 if (i + step) % n < rem else 0)
+        out[h] = (off, size)
+        off += size
+    return out
+
+
+# ---------------------------------------------------------------------------
+# controller
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TrainController:
+    """Preemption-safe training driver around a jit'd step function."""
+    step_fn: Callable                      # (state, batch) -> (state, metrics)
+    batch_fn: Callable                     # (step) -> batch
+    ckpt_manager: "object"                 # checkpoint.CheckpointManager
+    max_steps: int = 1000
+    failure_injector: Optional[Callable] = None  # (step) -> None | raises
+
+    def run(self, state, start_step: int = 0, install_sigterm: bool = True):
+        self._stop = False
+
+        def on_term(signum, frame):
+            self._stop = True
+
+        prev = None
+        if install_sigterm:
+            prev = signal.signal(signal.SIGTERM, on_term)
+        metrics = None
+        step = start_step
+        try:
+            while step < self.max_steps and not self._stop:
+                if self.failure_injector is not None:
+                    self.failure_injector(step)
+                state, metrics = self.step_fn(state, self.batch_fn(step))
+                step += 1
+                self.ckpt_manager.maybe_save(step, state)
+        finally:
+            # preemption / crash path: persist the last completed step
+            self.ckpt_manager.maybe_save(step, state, force=True)
+            self.ckpt_manager.wait()
+            if install_sigterm and prev is not None:
+                signal.signal(signal.SIGTERM, prev)
+        return state, step, metrics

@@ -1,0 +1,144 @@
+"""Logical-axis sharding rules -> NamedSharding / PartitionSpec.
+
+Every parameter and key activation in the model carries *logical* axis
+names ("embed", "heads", "ff", "vocab", "experts", ...). A rule table maps
+them to mesh axes, with divisibility-aware fallbacks per architecture, so
+the same model code lowers on a 1-device CPU mesh, the 16x16 production
+pod, and the 2x16x16 multi-pod mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+
+# Logical axes that appear in the model code.
+#   layers   - stacked scan dimension (never sharded)
+#   batch    - global batch            -> data
+#   seq      - sequence (activations)  -> None (or model under SP)
+#   embed    - d_model                 -> None (or data under FSDP)
+#   heads    - attention query heads   -> model (if divisible)
+#   kv_heads - KV heads                -> model if divisible else None
+#   kv_seq   - KV-cache sequence       -> model when kv_heads not divisible
+#   ff       - MLP hidden              -> model
+#   vocab    - (padded) vocabulary     -> model
+#   experts  - MoE experts             -> model ("expert" mode)
+#   expert_ff- per-expert hidden       -> model ("tensor" mode)
+#   lru      - RG-LRU channels         -> model
+#   conv     - conv1d taps             -> None
+#   pod      - multi-pod axis          -> pod (DP or split-serving boundary)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    mesh: Mesh
+    rules: Dict[str, Optional[str]]
+
+    @property
+    def axis_sizes(self) -> Dict[str, int]:
+        return dict(self.mesh.shape)   # works for Mesh and AbstractMesh
+
+    def spec(self, axes: Tuple[Optional[str], ...]) -> PS:
+        mapped = []
+        for a in axes:
+            m = self.rules.get(a) if a is not None else None
+            mapped.append(m)
+        return PS(*mapped)
+
+    def sharding(self, axes: Tuple[Optional[str], ...]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(axes))
+
+    def constrain(self, x, axes: Tuple[Optional[str], ...]):
+        """with_sharding_constraint by logical axes (no-op off-mesh)."""
+        if self.mesh is None or self.mesh.empty:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.sharding(axes))
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def build_rules(cfg, mesh: Mesh, *, fsdp: bool = False,
+                seq_parallel: bool = False,
+                dp_over_pod: bool = True) -> Dict[str, Optional[str]]:
+    """Divisibility-aware logical->mesh mapping for one architecture."""
+    sizes = dict(mesh.shape)           # works for Mesh and AbstractMesh
+    model = sizes.get("model", 1)
+    data_axes: Tuple[str, ...] = ("data",) if "data" in sizes else ()
+    if "pod" in sizes and dp_over_pod:
+        data_axes = ("pod",) + data_axes  # DP spans pods by default
+
+    rules: Dict[str, Optional[str]] = {
+        "layers": None,
+        "batch": data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None),
+        "seq": None,
+        "embed": None,       # PARAM d_model dim (FSDP shards it over data)
+        "act_embed": None,   # ACTIVATION d_model dim (never FSDP-sharded)
+        "conv": None,
+        "vocab": "model",        # padded_vocab is a multiple of 128
+        "ff": "model" if _div(cfg.d_ff, model) else None,
+        "lru": "model" if _div(cfg.lru_width or cfg.d_model, model) else None,
+        "blocks": None,
+    }
+    # attention (for attention-free archs, "heads" shards the wkv heads).
+    # jit in_shardings rejects uneven sharding, so non-divisible head
+    # counts replicate in the baseline; the sequence-sharded (ring)
+    # attention path recovers them (§Perf).
+    n_heads_eff = cfg.n_heads if cfg.n_heads else cfg.n_rwkv_heads
+    if cfg.attn_sharding != "replicated" and _div(n_heads_eff, model):
+        rules["heads"] = "model"
+    else:
+        rules["heads"] = None
+    # activation-side heads: shardable either when params are, or in
+    # "padded" mode (q/o padded per kv-group to a multiple of the model
+    # axis at compute time — §Perf iteration B1)
+    if rules["heads"] == "model" or (cfg.attn_sharding == "padded"
+                                     and cfg.n_heads):
+        rules["act_heads"] = "model"
+    else:
+        rules["act_heads"] = None
+    rules["kv_heads"] = "model" if _div(cfg.n_kv_heads, model) else None
+    # RG-LRU block-diagonal gates shard with the lru channels when aligned
+    rules["blocks"] = "model" if _div(cfg.lru_gate_blocks, model) else None
+    # decode KV-cache: shard sequence over `model` when kv heads can't be
+    rules["kv_seq"] = None if rules["kv_heads"] == "model" else "model"
+    # MoE
+    if cfg.moe and cfg.moe_sharding == "expert" and _div(cfg.n_experts, model):
+        rules["experts"] = "model"
+        rules["expert_ff"] = None
+    else:
+        rules["experts"] = None
+        rules["expert_ff"] = "model"
+    if fsdp:
+        rules["embed"] = data_axes[-1] if data_axes else None
+    if seq_parallel:
+        rules["seq"] = "model"
+    return rules
+
+
+def make_ctx(cfg, mesh: Mesh, **kw) -> ShardCtx:
+    return ShardCtx(mesh=mesh, rules=build_rules(cfg, mesh, **kw))
+
+
+def local_ctx(cfg=None) -> ShardCtx:
+    """Trivial 1-device mesh context for tests/CPU smoke paths."""
+    import numpy as np
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    mesh = Mesh(dev, ("data", "model"))
+    rules = build_rules(cfg, mesh) if cfg is not None else {}
+    return ShardCtx(mesh=mesh, rules=rules)
+
+
+def spec_tree(template, ctx: ShardCtx):
+    """Map a template tree (leaves have .axes) to a PartitionSpec tree."""
+    return jax.tree.map(lambda t: ctx.spec(t.axes), template,
+                        is_leaf=lambda t: hasattr(t, "axes"))
+
+
+def sharding_tree(template, ctx: ShardCtx):
+    return jax.tree.map(lambda t: ctx.sharding(t.axes), template,
+                        is_leaf=lambda t: hasattr(t, "axes"))

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the serving/training hot spots.
+
+Each kernel subpackage ships three files:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling
+  ops.py    — the jit'd public wrapper (interpret=True on CPU)
+  ref.py    — the pure-jnp oracle used by the allclose test sweeps
+
+The paper itself contributes no kernels (its contribution is the BO
+placement layer); these cover the compute hot spots of the serving
+substrate the placement layer schedules (DESIGN.md §3).
+"""

@@ -1,0 +1,29 @@
+"""Public wrapper: pads the cache to block multiples (padded slots get
+INT32_MAX positions => masked), dispatches the kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_kernel
+
+INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+@partial(jax.jit, static_argnames=("window", "bk", "interpret"))
+def decode_attention(q, k, v, kv_pos, q_pos, *, window: int = 0,
+                     bk: int = 512, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, T = kv_pos.shape
+    bk = min(bk, max(T, 8))
+    pk = (-T) % bk
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pk)),
+                         constant_values=INT32_MAX)
+    return decode_attention_kernel(q, k, v, kv_pos, q_pos, window=window,
+                                   bk=bk, interpret=interpret)

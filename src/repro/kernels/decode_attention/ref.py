@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for flash-decoding."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, kv_pos, q_pos, window: int = 0):
+    """q: (B,Hq,hd); k/v: (B,T,Hkv,hd); kv_pos: (B,T); q_pos: (B,)."""
+    B, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qf = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bthd->bhgt", qf, k.astype(jnp.float32))
+    s = s / jnp.sqrt(hd)
+    mask = kv_pos[:, None, None, :] <= q_pos[:, None, None, None]
+    if window:
+        mask = mask & ((q_pos[:, None, None, None]
+                        - kv_pos[:, None, None, :]) < window)
+    s = jnp.where(mask, s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    o = jnp.einsum("bhgt,bthd->bhgd", p / p.sum(-1, keepdims=True),
+                   v.astype(jnp.float32))
+    return o.reshape(B, Hq, hd).astype(q.dtype)

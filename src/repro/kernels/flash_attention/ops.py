@@ -1,0 +1,40 @@
+"""Public jit'd wrapper: pads to block multiples, dispatches the Pallas
+kernel (interpret=True automatically off-TPU)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 512, bk: int = 512,
+                    interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, Sq, Hq, hd = q.shape
+    Skv = k.shape[1]
+    bq = min(bq, max(Sq, 8))
+    bk = min(bk, max(Skv, 8))
+    pq = (-Sq) % bq
+    pk = (-Skv) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        # padded kv rows sit at positions >= Skv: causal masking vs real
+        # q rows excludes them only if q_pos < Skv, which holds for the
+        # unpadded rows we return.
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    o = flash_attention_kernel(q, k, v, causal=causal, window=window,
+                               bq=bq, bk=bk, interpret=interpret)
+    return o[:, :Sq]

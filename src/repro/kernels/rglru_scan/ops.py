@@ -1,0 +1,29 @@
+"""Public wrapper: pads S to chunk multiples (a=1, b=0 padding preserves
+the state) and R to block multiples."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan.kernel import rglru_scan_kernel
+
+
+@partial(jax.jit, static_argnames=("chunk", "block_r", "interpret"))
+def rglru_scan(a, b, h0, *, chunk: int = 256, block_r: int = 512,
+               interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, S, R = a.shape
+    chunk = min(chunk, max(S, 8))
+    block_r = min(block_r, R)
+    ps = (-S) % chunk
+    pr = (-R) % block_r
+    if ps or pr:
+        a = jnp.pad(a, ((0, 0), (0, ps), (0, pr)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, ps), (0, pr)))
+        h0 = jnp.pad(h0, ((0, 0), (0, pr)))
+    hs, h_last = rglru_scan_kernel(a, b, h0, chunk=chunk, block_r=block_r,
+                                   interpret=interpret)
+    return hs[:, :S, :R], h_last[:, :R]

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: associative scan (same math as models/rglru)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, b, h0):
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    bf = bf.at[:, 0].add(af[:, 0] * h0.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (af, bf), axis=1)
+    return hs.astype(a.dtype), hs[:, -1]

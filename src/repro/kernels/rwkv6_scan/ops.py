@@ -1,0 +1,29 @@
+"""Public wrapper: pads S to chunk multiples (padding tokens have
+logw=0, k=0 => state untouched; their outputs are sliced away)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan.kernel import rwkv6_scan_kernel
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r, k, v, logw, u, s0, *, chunk: int = 128,
+               interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, S, H, hd = r.shape
+    chunk = min(chunk, max(S, 8))
+    p = (-S) % chunk
+    if p:
+        pad4 = ((0, 0), (0, p), (0, 0), (0, 0))
+        r = jnp.pad(r, pad4)
+        k = jnp.pad(k, pad4)          # k=0 => no state update contribution
+        v = jnp.pad(v, pad4)
+        logw = jnp.pad(logw, pad4)    # logw=0 => decay 1 => state preserved
+    o, s_last = rwkv6_scan_kernel(r, k, v, logw, u, s0, chunk=chunk,
+                                  interpret=interpret)
+    return o[:, :S], s_last

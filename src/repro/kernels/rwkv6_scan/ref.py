@@ -1,0 +1,20 @@
+"""Pure-jnp oracle: exact sequential wkv recurrence (same math as
+models/rwkv6._wkv_scan)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r, k, v, logw, u, s0):
+    def step(s, inp):
+        rt, kt, vt, lw = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        o = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s_new = jnp.exp(lw)[..., None] * s + kv
+        return s_new, o
+
+    f32 = lambda t: t.astype(jnp.float32)  # noqa: E731
+    xs = jax.tree.map(lambda t: f32(t).swapaxes(0, 1), (r, k, v, logw))
+    s_last, o = jax.lax.scan(step, f32(s0), xs)
+    return o.swapaxes(0, 1).astype(r.dtype), s_last

@@ -1,0 +1,129 @@
+"""End-to-end training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --reduced \
+      --steps 50 --batch 8 --seq 64 --ckpt /tmp/ckpt
+
+Production invocation drops --reduced and runs under the pod mesh (the
+dry-run proves those configs lower+compile; real chips execute them).
+Features: deterministic resumable data pipeline, AdamW/Adafactor,
+preemption-safe checkpointing (SIGTERM -> save -> exit), auto-resume,
+optional int8 error-feedback gradient compression.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, reduced
+from repro.data import SyntheticTokenPipeline
+from repro.distributed.collectives import compress_gradients, init_error_state
+from repro.distributed.fault_tolerance import TrainController
+from repro.distributed.sharding import make_ctx, sharding_tree
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as tfm
+from repro.models.common import abstract_params
+from repro.train.optimizer import adamw, cosine_schedule
+from repro.train.trainer import make_train_step
+
+
+def build(cfg, mesh, compress: bool = False, lr: float = 3e-4,
+          total_steps: int = 10_000):
+    ctx = make_ctx(cfg, mesh)
+    opt = adamw(cosine_schedule(lr, 20, total_steps))
+    base_step = make_train_step(cfg, ctx, opt)
+
+    def step_fn(state, batch):
+        params, opt_state, err = state
+        if compress:
+            # compress at the grad level (wire-format int8 + error feedback)
+            def loss_grads(p, b):
+                from repro.train.trainer import loss_fn
+                (l, parts), g = jax.value_and_grad(
+                    lambda p_: loss_fn(p_, b, cfg, ctx), has_aux=True)(p)
+                return l, parts, g
+            loss, parts, grads = loss_grads(params, batch)
+            grads, err = compress_gradients(grads, err)
+            params, opt_state, om = opt.update(grads, opt_state, params)
+            metrics = dict(loss=loss, **om)
+        else:
+            params, opt_state, metrics = base_step(params, opt_state, batch)
+        return (params, opt_state, err), metrics
+
+    return ctx, opt, jax.jit(step_fn, donate_argnums=(0,))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--production-mesh", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    if args.production_mesh:
+        mesh = make_production_mesh()
+    else:
+        import numpy as _np
+        from jax.sharding import Mesh
+        mesh = Mesh(_np.array(jax.devices()).reshape(1, -1),
+                    ("data", "model"))
+
+    ctx, opt, step_fn = build(cfg, mesh, compress=args.compress_grads,
+                              lr=args.lr, total_steps=args.steps)
+    key = jax.random.PRNGKey(0)
+    params = tfm.init_model(key, cfg)
+    opt_state = opt.init(params)
+    err = init_error_state(params) if args.compress_grads else ()
+    state = (params, opt_state, err)
+
+    pipe = SyntheticTokenPipeline(cfg.vocab_size, args.batch, args.seq)
+    mgr = CheckpointManager(args.ckpt, save_interval=args.ckpt_every)
+
+    # auto-resume
+    start = 0
+    found = mgr.restore_latest(state)
+    if found[0] is not None:
+        start, state = found
+        print(f"[train] resumed from step {start}")
+
+    losses = []
+
+    def wrapped_step(st, batch):
+        t0 = time.time()
+        st, m = step_fn(st, batch)
+        loss = float(m["loss"])
+        losses.append(loss)
+        if len(losses) % 10 == 1:
+            print(f"[train] step={len(losses)+start} loss={loss:.4f} "
+                  f"({time.time()-t0:.2f}s)", flush=True)
+        return st, m
+
+    ctl = TrainController(wrapped_step, lambda s: pipe.batch_at(s), mgr,
+                          max_steps=args.steps)
+    with mesh:
+        state, step, metrics = ctl.run(state, start_step=start)
+    if losses:
+        print(f"[train] done at step {step}; loss {losses[0]:.4f} -> "
+              f"{losses[-1]:.4f}")
+    else:
+        print(f"[train] checkpoint already at step {start} >= "
+              f"--steps {args.steps}; nothing to do")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,206 @@
+"""Attention: GQA + RoPE, full/sliding-window, naive and blocked paths.
+
+``blocked_attention`` is the memory-safe online-softmax formulation (the
+pure-jnp twin of the Pallas flash kernel); it is the default for any
+sequence long enough for scores to matter. ``naive_attention`` is the
+oracle used by tests and tiny shapes. ``decode_attention`` handles a
+single query step against a (possibly sequence-sharded) KV cache — when
+the cache's sequence dim is sharded, XLA lowers the masked max/sum
+reductions into the flash-decoding partial-softmax combine automatically.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import P, rope
+
+NEG_INF = -1e30
+
+
+def attn_template(cfg):
+    D, Hq, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    t = {
+        "wq": P((D, Hq, hd), ("embed", "heads", None)),
+        "wk": P((D, Hkv, hd), ("embed", "kv_heads", None)),
+        "wv": P((D, Hkv, hd), ("embed", "kv_heads", None)),
+        "wo": P((Hq, hd, D), ("heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        t["bq"] = P((Hq, hd), ("heads", None), "zeros")
+        t["bk"] = P((Hkv, hd), ("kv_heads", None), "zeros")
+        t["bv"] = P((Hkv, hd), ("kv_heads", None), "zeros")
+    return t
+
+
+def qkv_proj(p, x, cfg, positions):
+    """x: (B,S,D) -> q (B,S,Hq,hd), k/v (B,S,Hkv,hd) with RoPE applied."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def out_proj(p, o):
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def _mask(qp, kp, window: int):
+    """qp: (..., Sq), kp: (..., Skv) -> bool (..., Sq, Skv). Causal + SWA."""
+    m = kp[..., None, :] <= qp[..., :, None]
+    if window:
+        m &= (qp[..., :, None] - kp[..., None, :]) < window
+    return m
+
+
+def naive_attention(q, k, v, q_pos, kv_pos, window: int = 0):
+    """Oracle path. q:(B,Sq,Hq,hd) k/v:(B,Skv,Hkv,hd)."""
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qf = q.reshape(B, Sq, Hkv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    s = s / jnp.sqrt(hd).astype(jnp.float32)
+    m = _mask(q_pos, kv_pos, window)[:, None, None]          # (B,1,1,Sq,Skv)
+    s = jnp.where(m, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, hd).astype(q.dtype)
+
+
+@partial(jax.jit, static_argnames=("window", "q_block", "kv_block", "causal_skip"))
+def blocked_attention(q, k, v, q_pos, kv_pos, window: int = 0,
+                      q_block: int = 512, kv_block: int = 1024,
+                      causal_skip: bool = False):
+    """Online-softmax attention; never materializes (Sq, Skv) scores.
+
+    With ``causal_skip`` the KV scan for each q-block stops at the last
+    block it can attend to (upper-triangle compute skipped) — the same
+    trick the Pallas kernel uses. Requires q_pos/kv_pos to be "aligned"
+    monotone position arrays (true for training/prefill).
+    """
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+
+    def pad(x, blk, axis):
+        r = (-x.shape[axis]) % blk
+        if r == 0:
+            return x
+        cfgp = [(0, 0)] * x.ndim
+        cfgp[axis] = (0, r)
+        return jnp.pad(x, cfgp)
+
+    qb = pad(q, q_block, 1)
+    qpb = pad(q_pos, q_block, 1)  # padded q rows mask to nothing -> fine
+    kb, vb = pad(k, kv_block, 1), pad(v, kv_block, 1)
+    # padded kv slots must never be attended: give them +inf positions
+    kpb = jnp.pad(kv_pos, [(0, 0), (0, kb.shape[1] - Skv)],
+                  constant_values=jnp.iinfo(jnp.int32).max)
+    NQ, NK = qb.shape[1] // q_block, kb.shape[1] // kv_block
+
+    qf = qb.reshape(B, NQ, q_block, Hkv, G, hd).astype(jnp.float32)
+    qpq = qpb.reshape(B, NQ, q_block)
+    scale = 1.0 / jnp.sqrt(hd)
+
+    kc = kb.reshape(B, NK, kv_block, Hkv, hd)
+    vc = vb.reshape(B, NK, kv_block, Hkv, hd)
+    kpc = kpb.reshape(B, NK, kv_block)
+
+    def kv_step(carry, inp):
+        m_run, l_run, acc = carry
+        kci, vci, kpi = inp
+        s = jnp.einsum("bnqhgd,bkhd->bnhgqk", qf, kci.astype(jnp.float32)) * scale
+        msk = _mask(qpq, kpi[:, None], window)      # (B,NQ,q_block,kv_block)
+        s = jnp.where(msk[:, :, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_run, s.max(axis=-1))
+        corr = jnp.exp(m_run - m_new)
+        p_ = jnp.exp(s - m_new[..., None])
+        l_new = l_run * corr + p_.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bnhgqk,bkhd->bnhgqd", p_, vci.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    if not causal_skip:
+        m0 = jnp.full((B, NQ, Hkv, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, NQ, Hkv, G, q_block), jnp.float32)
+        a0 = jnp.zeros((B, NQ, Hkv, G, q_block, hd), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kc.swapaxes(0, 1), vc.swapaxes(0, 1), kpc.swapaxes(0, 1)))
+        l_f = jnp.where(l_f == 0, 1.0, l_f)
+        o = acc / l_f[..., None]                     # (B,NQ,Hkv,G,QB,hd)
+        o = o.transpose(0, 1, 4, 2, 3, 5).reshape(B, NQ * q_block, Hkv, G, hd)
+    else:
+        # Triangular schedule (the perf-pass variant): q-block i only visits
+        # kv blocks 0..ceil((i+1)*QB/KB)-1, halving attention FLOPs for
+        # causal shapes. Requires positions aligned with array index
+        # (training/prefill), which the callers guarantee.
+        def per_q(_, qi):
+            qblk = jax.lax.dynamic_index_in_dim(qf, qi, 1, keepdims=False)
+            qpi = jax.lax.dynamic_index_in_dim(qpq, qi, 1, keepdims=False)
+
+            def body(j, carry):
+                m_run, l_run, acc = carry
+                kci = jax.lax.dynamic_index_in_dim(kc, j, 1, keepdims=False)
+                vci = jax.lax.dynamic_index_in_dim(vc, j, 1, keepdims=False)
+                kpi = jax.lax.dynamic_index_in_dim(kpc, j, 1, keepdims=False)
+                s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk,
+                               kci.astype(jnp.float32)) * scale
+                msk = _mask(qpi, kpi, window)       # (B,q_block,kv_block)
+                s = jnp.where(msk[:, None, None], s, NEG_INF)
+                m_new = jnp.maximum(m_run, s.max(axis=-1))
+                corr = jnp.exp(m_run - m_new)
+                p_ = jnp.exp(s - m_new[..., None])
+                l_new = l_run * corr + p_.sum(axis=-1)
+                acc = acc * corr[..., None] + jnp.einsum(
+                    "bhgqk,bkhd->bhgqd", p_, vci.astype(jnp.float32))
+                return m_new, l_new, acc
+
+            hi = jnp.minimum(((qi + 1) * q_block + kv_block - 1) // kv_block, NK)
+            m0 = jnp.full((B, Hkv, G, q_block), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((B, Hkv, G, q_block), jnp.float32)
+            a0 = jnp.zeros((B, Hkv, G, q_block, hd), jnp.float32)
+            m_f, l_f, acc = jax.lax.fori_loop(0, hi, body, (m0, l0, a0))
+            l_f = jnp.where(l_f == 0, 1.0, l_f)
+            o_q = (acc / l_f[..., None]).transpose(0, 3, 1, 2, 4)
+            return None, o_q                          # (B,QB,Hkv,G,hd)
+
+        _, outs = jax.lax.scan(per_q, None, jnp.arange(NQ))
+        # outs: (NQ, B, q_block, Hkv, G, hd) -> (B, S, Hkv, G, hd)
+        o = outs.transpose(1, 0, 2, 3, 4, 5).reshape(
+            B, NQ * q_block, Hkv, G, hd)
+
+    o = o.reshape(B, NQ * q_block, Hq, hd)[:, :Sq]
+    return o.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, kv_pos, q_pos, window: int = 0):
+    """One-token query vs cache. q:(B,1,Hq,hd), cache:(B,T,Hkv,hd).
+
+    Unfilled cache slots carry kv_pos = INT32_MAX so the causal mask
+    removes them. Works with the cache's T dim sharded (XLA reduces
+    across shards = flash-decoding combine).
+    """
+    B, _, Hq, hd = q.shape
+    Hkv = k_cache.shape[2]
+    G = Hq // Hkv
+    qf = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bthd->bhgt", qf, k_cache.astype(jnp.float32))
+    s = s / jnp.sqrt(hd).astype(jnp.float32)
+    m = _mask(q_pos, kv_pos, window)                 # (B,1,T)
+    s = jnp.where(m[:, :, None], s, NEG_INF)         # (B,Hkv,G,T)
+    mx = s.max(axis=-1, keepdims=True)
+    p_ = jnp.exp(s - mx)
+    l = p_.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bhgt,bthd->bhgd", p_ / l, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, Hq, hd).astype(q.dtype)

@@ -1,0 +1,124 @@
+"""Shared model machinery: param templates, norms, RoPE, initializers.
+
+Parameters are plain nested dicts of arrays. Structure is declared once as
+a *template* tree whose leaves are ``P(shape, axes, init)``; the same tree
+yields (a) initialized params, (b) ShapeDtypeStructs for the dry-run, and
+(c) PartitionSpecs via ``distributed.sharding.spec_tree``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Parameter template leaf."""
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]      # logical axis names, len == ndim
+    init: str = "normal"                 # normal | zeros | ones | embed | small
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_p(x):
+    return isinstance(x, P)
+
+
+def init_params(key, template, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(template, is_leaf=_is_p)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, t in zip(keys, leaves):
+        if t.init == "zeros":
+            v = jnp.zeros(t.shape, dtype)
+        elif t.init == "ones":
+            v = jnp.ones(t.shape, dtype)
+        elif t.init == "embed":
+            v = (jax.random.normal(k, t.shape) * t.scale).astype(dtype)
+        elif t.init == "small":
+            v = (jax.random.normal(k, t.shape) * 0.02 * t.scale).astype(dtype)
+        else:  # fan-in scaled normal
+            fan_in = t.shape[0] if len(t.shape) == 1 else math.prod(t.shape[:-1])
+            std = t.scale / math.sqrt(max(fan_in, 1))
+            v = (jax.random.normal(k, t.shape) * std).astype(dtype)
+        out.append(v)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(template, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+    return jax.tree.map(
+        lambda t: jax.ShapeDtypeStruct(t.shape, dtype), template, is_leaf=_is_p)
+
+
+def stack_templates(template, n: int):
+    """Add a leading `layers` axis of size n to every leaf (scan stacking)."""
+    return jax.tree.map(
+        lambda t: P((n,) + t.shape, ("layers",) + t.axes, t.init, t.scale),
+        template, is_leaf=_is_p)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x, w, b, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def norm_template(cfg):
+    if cfg.norm_type == "layernorm":
+        return {"w": P((cfg.d_model,), ("embed",), "ones"),
+                "b": P((cfg.d_model,), ("embed",), "zeros")}
+    return {"w": P((cfg.d_model,), ("embed",), "zeros")}  # rms: (1+w) form
+
+
+def apply_norm(p, x, cfg):
+    if cfg.norm_type == "layernorm":
+        return layernorm(x, p["w"], p["b"], cfg.norm_eps)
+    return rmsnorm(x, p["w"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq      # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                           # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:2 * half]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    if hd % 2:  # odd head_dim: pass the last channel through
+        rot = jnp.concatenate([rot, x[..., 2 * half:]], axis=-1)
+    return rot.astype(x.dtype)
+
+
+def padded_vocab(cfg, multiple: int = 128) -> int:
+    v = cfg.vocab_size
+    return ((v + multiple - 1) // multiple) * multiple

@@ -1,0 +1,24 @@
+"""Modality frontend STUBS (per task sheet): audio/vision archs take
+precomputed frame/patch embeddings as inputs. ``frontend_input_spec``
+yields the ShapeDtypeStruct the dry-run uses; ``fake_embeds`` generates
+deterministic test inputs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def uses_embeds(cfg) -> bool:
+    return cfg.frontend is not None
+
+
+def frontend_input_spec(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
+    # audio_frames: EnCodec frame embeddings; vision_patches: ViT patch
+    # embeddings projected to d_model. Both arrive as (B, S, D).
+    return jax.ShapeDtypeStruct((batch, seq, cfg.d_model), dtype)
+
+
+def fake_embeds(key, cfg, batch: int, seq: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (batch, seq, cfg.d_model)) * 0.02
+            ).astype(dtype)

@@ -1,0 +1,36 @@
+"""Dense MLP variants: SwiGLU / GeGLU / plain GELU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import P
+
+
+def mlp_template(cfg, d_ff: int = 0, ff_axis: str = "ff"):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {
+            "wg": P((D, F), ("embed", ff_axis)),
+            "wu": P((D, F), ("embed", ff_axis)),
+            "wd": P((F, D), (ff_axis, "embed")),
+        }
+    # plain gelu (starcoder2, musicgen)
+    return {
+        "wi": P((D, F), ("embed", ff_axis)),
+        "bi": P((F,), (ff_axis,), "zeros"),
+        "wd": P((F, D), (ff_axis, "embed")),
+        "bd": P((D,), ("embed",), "zeros"),
+    }
+
+
+def mlp_apply(p, x, cfg):
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        g = jnp.einsum("...d,df->...f", x, p["wg"])
+        u = jnp.einsum("...d,df->...f", x, p["wu"])
+        act = jax.nn.silu(g) if cfg.mlp_type == "swiglu" else jax.nn.gelu(g)
+        return jnp.einsum("...f,fd->...d", act * u, p["wd"])
+    h = jnp.einsum("...d,df->...f", x, p["wi"]) + p["bi"].astype(x.dtype)
+    h = jax.nn.gelu(h)
+    return jnp.einsum("...f,fd->...d", h, p["wd"]) + p["bd"].astype(x.dtype)

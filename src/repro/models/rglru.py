@@ -1,0 +1,124 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Residual branch: in-proj (two branches) -> causal depthwise conv1d ->
+block-diagonal input/recurrence gates -> gated linear recurrence
+(associative scan over time) -> GeLU-gated out-proj.
+
+The recurrence ``h_t = a_t * h_{t-1} + sqrt(1-a_t^2) * (i_t * u_t)`` is a
+per-channel diagonal affine scan => parallelizable with
+``jax.lax.associative_scan`` (log-depth on TPU).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import P
+
+_C = 8.0  # Griffin's recurrence-gate temperature
+
+
+def rglru_template(cfg):
+    D = cfg.d_model
+    R = cfg.lru_width or D
+    nb = cfg.lru_gate_blocks
+    Rb = R // nb
+    cw = cfg.conv1d_width
+    return {
+        "wy": P((D, R), ("embed", "lru")),          # gelu branch
+        "wx": P((D, R), ("embed", "lru")),          # recurrent branch
+        "conv_w": P((cw, R), ("conv", "lru"), "small"),
+        "conv_b": P((R,), ("lru",), "zeros"),
+        "gate_a": P((nb, Rb, Rb), ("blocks", None, None), "small"),
+        "ba": P((R,), ("lru",), "zeros"),
+        "gate_x": P((nb, Rb, Rb), ("blocks", None, None), "small"),
+        "bx": P((R,), ("lru",), "zeros"),
+        "lam": P((R,), ("lru",), "ones"),            # Λ (softplus'd)
+        "wo": P((R, D), ("lru", "embed")),
+    }
+
+
+def _causal_conv(p, u, conv_cache):
+    """Depthwise causal conv, width cw. u: (B,S,R). cache: (B,cw-1,R)|None."""
+    cw = p["conv_w"].shape[0]
+    if conv_cache is None:
+        hist = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    else:
+        hist = conv_cache.astype(u.dtype)
+    ext = jnp.concatenate([hist, u], axis=1)         # (B, S+cw-1, R)
+    out = sum(ext[:, i:i + u.shape[1]] * p["conv_w"][i].astype(u.dtype)
+              for i in range(cw))
+    out = out + p["conv_b"].astype(u.dtype)
+    new_cache = ext[:, -(cw - 1):]                    # last cw-1 inputs
+    return out, new_cache
+
+
+def _gates(p, u, cfg):
+    """Block-diagonal sigmoid gates. u: (B,S,R) -> (r, i) same shape."""
+    B, S, R = u.shape
+    nb = p["gate_a"].shape[0]
+    ub = u.reshape(B, S, nb, R // nb).astype(jnp.float32)
+    ga = jnp.einsum("bsnr,nrk->bsnk", ub, p["gate_a"].astype(jnp.float32))
+    gx = jnp.einsum("bsnr,nrk->bsnk", ub, p["gate_x"].astype(jnp.float32))
+    r = jax.nn.sigmoid(ga.reshape(B, S, R) + p["ba"].astype(jnp.float32))
+    i = jax.nn.sigmoid(gx.reshape(B, S, R) + p["bx"].astype(jnp.float32))
+    return r, i
+
+
+def rglru_apply(p, x, cfg, state: Optional[dict] = None
+                ) -> Tuple[jax.Array, dict]:
+    """x: (B,S,D). state: {"h": (B,R) f32, "conv": (B,cw-1,R)} or None.
+
+    Returns (out (B,S,D), new_state). Works for S==1 (decode) too.
+    """
+    B, S, D = x.shape
+    y = jnp.einsum("bsd,dr->bsr", x, p["wy"])
+    u = jnp.einsum("bsd,dr->bsr", x, p["wx"])
+    u, conv_cache = _causal_conv(
+        p, u, None if state is None else state["conv"])
+
+    r, i = _gates(p, u, cfg)
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)                                    # (B,S,R) f32
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) \
+        * (i * u.astype(jnp.float32))
+
+    h0 = None if state is None else state["h"]
+    if S == 1:
+        h_prev = jnp.zeros((B, a.shape[-1]), jnp.float32) if h0 is None else h0
+        h = a[:, 0] * h_prev + gated_in[:, 0]
+        hs = h[:, None]
+        h_last = h
+    elif cfg.use_pallas_kernels and not cfg.analysis_mode:
+        from repro.kernels.rglru_scan import rglru_scan
+        h_init = (jnp.zeros((B, a.shape[-1]), jnp.float32)
+                  if h0 is None else h0)
+        hs, h_last = rglru_scan(a, gated_in, h_init, chunk=min(256, S),
+                                block_r=min(512, a.shape[-1]))
+    else:
+        b = gated_in
+        if h0 is not None:
+            b = b.at[:, 0].add(a[:, 0] * h0)
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a2 * a1, a2 * b1 + b2
+
+        _, hs = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h_last = hs[:, -1]
+
+    out = jnp.einsum("bsr,rd->bsd", (hs * jax.nn.gelu(y.astype(jnp.float32))
+                                     ).astype(x.dtype), p["wo"])
+    return out, {"h": h_last, "conv": conv_cache}
+
+
+def rglru_state_template(cfg, batch: int):
+    R = cfg.lru_width or cfg.d_model
+    cw = cfg.conv1d_width
+    return {
+        "h": P((batch, R), ("batch", "lru"), "zeros"),
+        "conv": P((batch, cw - 1, R), ("batch", "conv", "lru"), "zeros"),
+    }

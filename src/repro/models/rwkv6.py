@@ -1,0 +1,141 @@
+"""RWKV6 (Finch) block: time-mix with data-dependent decay + channel-mix.
+
+The wkv recurrence keeps a per-head (hd x hd) state:
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+Data-dependent decay w_t = exp(-exp(w0 + tanh(x W_a) W_b)) is the Finch
+headline feature. The jnp path runs an exact sequential scan (the oracle);
+the Pallas kernel (kernels/rwkv6_scan) processes VMEM-resident chunks.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import P
+
+_LORA = 64  # decay-LoRA rank
+
+
+def rwkv_template(cfg):
+    D = cfg.d_model
+    H, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    F = cfg.d_ff
+    return {
+        # --- time mix ---
+        "mu": P((5, D), (None, "embed"), "small"),        # r,k,v,w,g shifts
+        "w0": P((D,), ("embed",), "small"),
+        "w_lora_a": P((D, _LORA), ("embed", None), "small"),
+        "w_lora_b": P((_LORA, D), (None, "embed"), "small"),
+        "wr": P((D, H, hd), ("embed", "heads", None)),
+        "wk": P((D, H, hd), ("embed", "heads", None)),
+        "wv": P((D, H, hd), ("embed", "heads", None)),
+        "wg": P((D, D), ("embed", None)),
+        "u": P((H, hd), ("heads", None), "small"),        # bonus
+        "gn_w": P((D,), ("embed",), "ones"),
+        "gn_b": P((D,), ("embed",), "zeros"),
+        "wo": P((H, hd, D), ("heads", None, "embed")),
+        # --- channel mix ---
+        "mu_cm": P((2, D), (None, "embed"), "small"),
+        "wk_cm": P((D, F), ("embed", "ff")),
+        "wv_cm": P((F, D), ("ff", "embed")),
+        "wr_cm": P((D, D), ("embed", None)),
+    }
+
+
+def _shift(x, prev):
+    """Token shift: returns x_{t-1} per position. prev: (B,D) carry or None."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, 0])
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _wkv_scan(r, k, v, logw, u, s0):
+    """Exact sequential recurrence.
+    r,k,v: (B,S,H,hd); logw: (B,S,H,hd) (<=0); u: (H,hd); s0: (B,H,hd,hd).
+    Returns (o: (B,S,H,hd), s_last)."""
+    def step(s, inp):
+        rt, kt, vt, lw = inp                              # (B,H,hd) each
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)          # rank-1 update
+        o = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s_new = jnp.exp(lw)[..., None] * s + kv
+        return s_new, o
+
+    xs = jax.tree.map(lambda t: t.swapaxes(0, 1), (r, k, v, logw))
+    s_last, o = jax.lax.scan(step, s0, xs)
+    return o.swapaxes(0, 1), s_last
+
+
+def _groupnorm_heads(x, w, b, eps=1e-5):
+    """Per-head layernorm. x: (B,S,H,hd) -> (B,S,D)."""
+    mu = x.mean(axis=-1, keepdims=True)
+    var = jnp.square(x - mu).mean(axis=-1, keepdims=True)
+    xn = (x - mu) * jax.lax.rsqrt(var + eps)
+    B, S, H, hd = x.shape
+    xn = xn.reshape(B, S, H * hd)
+    return xn * w.astype(xn.dtype) + b.astype(xn.dtype)
+
+
+def rwkv_time_mix(p, x, cfg, state: Optional[dict] = None
+                  ) -> Tuple[jax.Array, dict]:
+    """x: (B,S,D) normed input. state: {"s": (B,H,hd,hd) f32,
+    "x_prev": (B,D)}. Returns (out, new_state)."""
+    B, S, D = x.shape
+    H, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    xf = x.astype(jnp.float32)
+    xx = _shift(xf, None if state is None else state["x_prev"])
+    d = xx - xf
+    mr, mk, mv, mw, mg = (xf + d * p["mu"][i].astype(jnp.float32)
+                          for i in range(5))
+
+    r = jnp.einsum("bsd,dhk->bshk", mr.astype(x.dtype), p["wr"]).astype(jnp.float32)
+    k = jnp.einsum("bsd,dhk->bshk", mk.astype(x.dtype), p["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bsd,dhk->bshk", mv.astype(x.dtype), p["wv"]).astype(jnp.float32)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", mg.astype(x.dtype), p["wg"]))
+
+    w_raw = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "bsd,de->bse",
+        jnp.tanh(jnp.einsum("bsd,dl->bsl", mw, p["w_lora_a"].astype(jnp.float32))),
+        p["w_lora_b"].astype(jnp.float32))
+    logw = -jnp.exp(jnp.clip(w_raw, -20.0, 8.0))          # (B,S,D), <= 0
+    logw = logw.reshape(B, S, H, hd)
+
+    s0 = (jnp.zeros((B, H, hd, hd), jnp.float32)
+          if state is None else state["s"])
+    if cfg.use_pallas_kernels and not cfg.analysis_mode and S > 1:
+        from repro.kernels.rwkv6_scan import rwkv6_scan
+        o, s_last = rwkv6_scan(r, k, v, logw, p["u"].astype(jnp.float32),
+                               s0, chunk=min(128, S))
+    else:
+        o, s_last = _wkv_scan(r, k, v, logw, p["u"].astype(jnp.float32), s0)
+
+    y = _groupnorm_heads(o, p["gn_w"].astype(jnp.float32),
+                         p["gn_b"].astype(jnp.float32))
+    y = (y * g.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", y.reshape(B, S, H, hd), p["wo"])
+    return out, {"s": s_last, "x_prev": xf[:, -1]}
+
+
+def rwkv_channel_mix(p, x, cfg, state: Optional[dict] = None
+                     ) -> Tuple[jax.Array, dict]:
+    """x: (B,S,D) normed input. state: {"x_prev": (B,D)}."""
+    xf = x.astype(jnp.float32)
+    xx = _shift(xf, None if state is None else state["x_prev"])
+    d = xx - xf
+    mk = (xf + d * p["mu_cm"][0].astype(jnp.float32)).astype(x.dtype)
+    mr = (xf + d * p["mu_cm"][1].astype(jnp.float32)).astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", mk, p["wk_cm"])))
+    out = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", mr, p["wr_cm"])) \
+        * jnp.einsum("bsf,fd->bsd", kk, p["wv_cm"])
+    return out, {"x_prev": xf[:, -1]}
+
+
+def rwkv_state_template(cfg, batch: int):
+    H, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    return {
+        "s": P((batch, H, hd, hd), ("batch", "heads", None, None), "zeros"),
+        "x_prev_tm": P((batch, cfg.d_model), ("batch", "act_embed"), "zeros"),
+        "x_prev_cm": P((batch, cfg.d_model), ("batch", "act_embed"), "zeros"),
+    }

@@ -1,0 +1,99 @@
+"""VGG19 in JAX — the paper's actual inference workload, executable as a
+partitioned (device-half / server-half) forward at any of the 37
+torchvision feature-module split points. Backs the `executor=` hook of
+``default_vgg19_problem`` so BO evaluations can run the real pipeline.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# torchvision vgg19.features plan
+PLAN = [64, 64, "M", 128, 128, "M", 256, 256, 256, 256, "M",
+        512, 512, 512, 512, "M", 512, 512, 512, 512, "M"]
+
+
+def module_list() -> List[str]:
+    mods = []
+    for p in PLAN:
+        if p == "M":
+            mods.append("pool")
+        else:
+            mods.extend([f"conv{p}", "relu"])
+    assert len(mods) == 37
+    return mods
+
+
+def init_vgg19(key, n_classes: int = 1000):
+    params = {"convs": [], "fcs": []}
+    cin = 3
+    for p in PLAN:
+        if p == "M":
+            continue
+        cout = int(p)
+        key, k = jax.random.split(key)
+        w = jax.random.normal(k, (3, 3, cin, cout)) * jnp.sqrt(2.0 / (9 * cin))
+        params["convs"].append((w, jnp.zeros((cout,))))
+        cin = cout
+    dims = [(25088, 4096), (4096, 4096), (4096, n_classes)]
+    for a, b in dims:
+        key, k = jax.random.split(key)
+        params["fcs"].append((jax.random.normal(k, (a, b)) * jnp.sqrt(1.0 / a),
+                              jnp.zeros((b,))))
+    return params
+
+
+def _apply_module(params, x, mod_idx: int, conv_idx: int):
+    kind = module_list()[mod_idx]
+    if kind == "pool":
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+            "VALID"), conv_idx
+    if kind == "relu":
+        return jax.nn.relu(x), conv_idx
+    w, b = params["convs"][conv_idx]
+    x = jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return x + b, conv_idx + 1
+
+
+def _conv_count_before(l: int) -> int:
+    return sum(1 for m in module_list()[:l] if m.startswith("conv"))
+
+
+def vgg19_features(params, images, lo: int = 0, hi: int = 37):
+    """Apply feature modules [lo, hi). images/activation: NHWC."""
+    x = images
+    conv_idx = _conv_count_before(lo)
+    for m in range(lo, hi):
+        x, conv_idx = _apply_module(params, x, m, conv_idx)
+    return x
+
+
+def vgg19_classifier(params, feats):
+    x = feats.reshape(feats.shape[0], -1)
+    for i, (w, b) in enumerate(params["fcs"]):
+        x = x @ w + b
+        if i < 2:
+            x = jax.nn.relu(x)
+    return x
+
+
+def split_forward(params, images, l: int) -> Tuple[jax.Array, int]:
+    """Device half [0, l) -> boundary payload -> server half [l, 37) +
+    classifier. Returns (logits, boundary_bytes)."""
+    act = vgg19_features(params, images, 0, l)
+    payload = jax.device_get(act)          # the 'wireless' hop
+    boundary_bytes = payload.size * payload.dtype.itemsize
+    feats = vgg19_features(params, jnp.asarray(payload), l, 37)
+    return vgg19_classifier(params, feats), boundary_bytes
+
+
+def make_executor(params, images):
+    """Adapter for SplitInferenceProblem(executor=...): every BO
+    evaluation runs the real partitioned VGG19 forward."""
+    def executor(l: int, p_w: float):
+        split_forward(params, images, int(l))
+    return executor

@@ -1,0 +1,63 @@
+"""Serving steps: prefill (S tokens -> cache + first token) and decode
+(one token against the cache). These are the functions the decode_* /
+long_* dry-run cells lower (``serve_step``, per the task sheet)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import frontends
+from repro.models import transformer as tfm
+
+
+def make_prefill_step(cfg, ctx):
+    def prefill(params, batch, cache):
+        if "embeds" in batch:
+            inp = dict(embeds=batch["embeds"])
+            B, S = batch["embeds"].shape[:2]
+        else:
+            inp = dict(tokens=batch["tokens"])
+            B, S = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        hidden, cache, _ = tfm.forward(params, cfg, ctx, positions=positions,
+                                       cache=cache, t=jnp.zeros((), jnp.int32),
+                                       mode="prefill", **inp)
+        logits = tfm.logits_fn(params, hidden[:, -1:], cfg, ctx)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+    return prefill
+
+
+def make_decode_step(cfg, ctx):
+    def decode(params, token, cache, t):
+        """token: (B,1) int32 (or (B,1,D) embeds for stub frontends);
+        t: scalar int32 current position."""
+        B = token.shape[0]
+        positions = jnp.full((B, 1), t, jnp.int32)
+        if frontends.uses_embeds(cfg):
+            inp = dict(embeds=token)
+        else:
+            inp = dict(tokens=token)
+        hidden, cache, _ = tfm.forward(params, cfg, ctx, positions=positions,
+                                       cache=cache, t=t, mode="decode", **inp)
+        logits = tfm.logits_fn(params, hidden, cfg, ctx)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+    return decode
+
+
+def greedy_generate(params, cfg, ctx, prompt_tokens, n_new: int,
+                    max_seq: int):
+    """Reference generation loop (tests/examples): prefill + n_new decodes."""
+    B, S = prompt_tokens.shape
+    cache = tfm.init_cache(cfg, B, max_seq, dtype=jnp.dtype(cfg.dtype))
+    prefill = make_prefill_step(cfg, ctx)
+    decode = make_decode_step(cfg, ctx)
+    tok, cache = prefill(params, dict(tokens=prompt_tokens), cache)
+    out = [tok]
+    t = S
+    for _ in range(n_new - 1):
+        tok, cache = decode(params, tok, cache, jnp.array(t, jnp.int32))
+        out.append(tok)
+        t += 1
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,111 @@
+"""Split-point execution: partition a decoder stack at layer `l`, run the
+prefix on the *device* mesh and the suffix on the *server* mesh, moving
+the boundary activation (the paper's D(l)) between them.
+
+This is the deployment analogue of the paper's Raspberry-Pi/edge-server
+split (DESIGN.md §3): the two halves are separately jitted programs on
+separate (sub)meshes — separate failure domains — and the boundary tensor
+is the measured payload the Bayes-Split-Edge cost model prices via the
+link model. The BO loop calls ``SplitRunner.run(l, p)`` as its real
+executor, making every function evaluation an actual partitioned forward.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.common import apply_norm
+
+
+def layer_param(params, cfg, idx: int):
+    """(kind, block-param-tree) for global layer index idx (0-based)."""
+    groups = tfm.layer_groups(cfg)
+    off = 0
+    for gi, (kinds, reps) in enumerate(groups):
+        n = len(kinds) * reps
+        if idx < off + n:
+            local = idx - off
+            r, i = divmod(local, len(kinds))
+            gp = params["groups"][f"g{gi}"]
+            bp = gp[f"b{i}"]
+            if reps > 1:
+                bp = jax.tree.map(lambda v: v[r], bp)
+            return kinds[i], bp
+        off += n
+    raise IndexError(idx)
+
+
+def run_layers(params, cfg, x, positions, lo: int, hi: int):
+    """Apply layers [lo, hi) sequentially (unscanned — serving path)."""
+    aux = jnp.zeros((), jnp.float32)
+    for i in range(lo, hi):
+        kind, bp = layer_param(params, cfg, i)
+        x, _, a = tfm.apply_block(bp, kind, x, cfg, None, positions, None,
+                                  None, "train")
+        aux = aux + a
+    return x, aux
+
+
+def device_half(params, cfg, tokens=None, embeds=None, positions=None,
+                l: int = 0):
+    """Embedding + layers [0, l). Returns the boundary activation."""
+    if embeds is not None:
+        x = embeds.astype(cfg.dtype)
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x, _ = run_layers(params, cfg, x, positions, 0, l)
+    return x
+
+
+def server_half(params, cfg, x, positions, l: int):
+    """Layers [l, L) + final norm + unembed -> logits."""
+    x, _ = run_layers(params, cfg, x, positions, l, cfg.n_layers)
+    x = apply_norm(params["final_norm"], x, cfg)
+    return tfm.logits_fn(params, x, cfg, None)
+
+
+@dataclasses.dataclass
+class SplitRunner:
+    """Two separately-jitted halves + measured boundary payload."""
+    cfg: object
+    params: object
+    batch: int
+    seq: int
+
+    def __post_init__(self):
+        self._cache = {}
+
+    def _fns(self, l: int):
+        if l not in self._cache:
+            cfg = self.cfg
+            dev = jax.jit(
+                lambda p, tok, pos: device_half(p, cfg, tokens=tok,
+                                                positions=pos, l=l))
+            srv = jax.jit(
+                lambda p, x, pos: server_half(p, cfg, x, pos, l))
+            self._cache[l] = (dev, srv)
+        return self._cache[l]
+
+    def run(self, l: int, p_tx_w: float = 0.0,
+            tokens: Optional[jax.Array] = None) -> Tuple[jax.Array, int]:
+        """Actual partitioned inference. Returns (logits, boundary_bytes).
+        p_tx_w only affects the (simulated) link, not the computation."""
+        if tokens is None:
+            tokens = jnp.zeros((self.batch, self.seq), jnp.int32)
+        positions = jnp.broadcast_to(
+            jnp.arange(self.seq, dtype=jnp.int32), (self.batch, self.seq))
+        dev, srv = self._fns(int(l))
+        x = dev(self.params, tokens, positions)
+        # device -> server transfer: host round-trip = the wireless link
+        payload = jax.device_get(x)
+        boundary_bytes = payload.size * payload.dtype.itemsize
+        logits = srv(self.params, jnp.asarray(payload), positions)
+        return logits, boundary_bytes
+
+    def executor(self, l: int, p_w: float):
+        """Adapter for SplitInferenceProblem(executor=...)."""
+        self.run(l, p_w)

@@ -1,0 +1,2 @@
+from repro.train.optimizer import adafactor, adamw, opt_spec_tree  # noqa: F401
+from repro.train.trainer import make_train_step  # noqa: F401

@@ -1,0 +1,162 @@
+"""Optimizers: AdamW (fp32 moments) and factored Adafactor.
+
+Pure-pytree implementations (no optax offline). ``opt_spec_tree`` derives
+the PartitionSpec tree for the optimizer state from the parameter template
+so states shard exactly like their parameters (ZeRO-style FSDP when the
+param rules map "embed" -> data).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import P
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable          # (grads, state, params) -> (new_params, state)
+    state_template: Callable  # param_template -> state template (P leaves)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        w = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        return base_lr * w * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return lr
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw(lr_fn, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, max_grad_norm: float = 1.0) -> Optimizer:
+    def init(params):
+        z = lambda: jax.tree.map(  # noqa: E731
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return dict(m=z(), v=z(), step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                         state["v"], grads)
+        t = step.astype(jnp.float32)
+        lr = lr_fn(step)
+
+        def upd(p, m_, v_):
+            mh = m_ / (1 - b1 ** t)
+            vh = v_ / (1 - b2 ** t)
+            u = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, dict(m=m, v=v, step=step), dict(gnorm=gnorm, lr=lr)
+
+    def state_template(tmpl):
+        as_p = lambda t: P(t.shape, t.axes, "zeros")  # noqa: E731
+        return dict(
+            m=jax.tree.map(as_p, tmpl, is_leaf=lambda x: isinstance(x, P)),
+            v=jax.tree.map(as_p, tmpl, is_leaf=lambda x: isinstance(x, P)),
+            step=P((), (), "zeros"))
+
+    return Optimizer(init, update, state_template)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, no first moment by default) — the
+# memory-frugal choice for the 1T-param MoE (EXPERIMENTS.md memory table).
+# ---------------------------------------------------------------------------
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor(lr_fn, eps: float = 1e-30, clip_thresh: float = 1.0,
+              decay: float = 0.8, weight_decay: float = 0.0,
+              max_grad_norm: float = 1.0) -> Optimizer:
+    def init(params):
+        def per_leaf(p):
+            if _factored(p.shape):
+                return dict(vr=jnp.zeros(p.shape[:-1], jnp.float32),
+                            vc=jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32))
+            return dict(v=jnp.zeros(p.shape, jnp.float32))
+        return dict(v=jax.tree.map(per_leaf, params),
+                    step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+        lr = lr_fn(step)
+
+        def per_leaf(g, s, p):
+            g2 = jnp.square(g) + eps
+            if _factored(p.shape):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(axis=-1)[..., None, None], eps))
+                u = g * jax.lax.rsqrt(denom + eps)
+                ns = dict(vr=vr, vc=vc)
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                ns = dict(v=v)
+            # update clipping by RMS (Adafactor's d=1.0 rule)
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms_u / clip_thresh)
+            newp = (p.astype(jnp.float32) - lr * (u + weight_decay * p.astype(jnp.float32))
+                    ).astype(p.dtype)
+            return newp, ns
+
+        flat_p, tree = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_s = jax.tree.leaves(
+            state["v"], is_leaf=lambda x: isinstance(x, dict) and
+            ("vr" in x or "v" in x))
+        outs = [per_leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_params = jax.tree.unflatten(tree, [o[0] for o in outs])
+        new_v = jax.tree.unflatten(tree, [o[1] for o in outs])
+        return new_params, dict(v=new_v, step=step), dict(gnorm=gnorm, lr=lr)
+
+    def state_template(tmpl):
+        def per_leaf(tp):
+            if _factored(tp.shape):
+                return dict(vr=P(tp.shape[:-1], tp.axes[:-1], "zeros"),
+                            vc=P(tp.shape[:-2] + tp.shape[-1:],
+                                 tp.axes[:-2] + tp.axes[-1:], "zeros"))
+            return dict(v=P(tp.shape, tp.axes, "zeros"))
+        return dict(v=jax.tree.map(per_leaf, tmpl,
+                                   is_leaf=lambda x: isinstance(x, P)),
+                    step=P((), (), "zeros"))
+
+    return Optimizer(init, update, state_template)
+
+
+def opt_spec_tree(opt: Optimizer, param_template, ctx):
+    """PartitionSpec tree for the optimizer state."""
+    from repro.distributed.sharding import spec_tree
+    return spec_tree(opt.state_template(param_template), ctx)

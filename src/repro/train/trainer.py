@@ -1,0 +1,91 @@
+"""Train step factory: microbatched grad accumulation, remat'd forward,
+vocab-parallel loss, sharded optimizer update.
+
+``make_train_step(cfg, ctx, opt, num_microbatches)`` returns a pure
+function (params, opt_state, batch, step_rng) -> (params, opt_state,
+metrics) suitable for jit with in/out shardings from the spec trees.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models import frontends
+from repro.train.losses import vocab_parallel_ce
+
+
+AUX_COEF = 0.01   # MoE load-balance loss weight
+
+
+def loss_fn(params, batch, cfg, ctx):
+    if "embeds" in batch:
+        inp = dict(embeds=batch["embeds"])
+        labels = batch["labels"]
+        B, S = labels.shape
+    else:
+        tokens = batch["tokens"]
+        inp = dict(tokens=tokens[:, :-1])
+        labels = tokens[:, 1:]
+        B, S = labels.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    hidden, _, aux = tfm.forward(params, cfg, ctx, positions=positions,
+                                 mode="train", **inp)
+    w = tfm.unembed_weight(params, cfg)
+    # analysis_mode avoids the chunk scan so cost_analysis counts all flops
+    nll = vocab_parallel_ce(hidden, w, labels, cfg, ctx,
+                            n_chunks=1 if cfg.analysis_mode else 8)
+    return nll + AUX_COEF * aux, dict(nll=nll, aux=aux)
+
+
+def make_train_step(cfg, ctx, opt, num_microbatches: int = 1):
+    grad_fn = jax.value_and_grad(
+        lambda p, b: loss_fn(p, b, cfg, ctx), has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches <= 1:
+            (loss, parts), grads = grad_fn(params, batch)
+        else:
+            def split_mb(x):
+                return x.reshape((num_microbatches,
+                                  x.shape[0] // num_microbatches) + x.shape[1:])
+            mbatch = jax.tree.map(split_mb, batch)
+
+            def mb_step(carry, mb):
+                acc, loss_acc = carry
+                (l, _), g = grad_fn(params, mb)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / num_microbatches,
+                    acc, g)
+                return (acc, loss_acc + l / num_microbatches), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                mb_step, (zeros, jnp.zeros(())), mbatch)
+            parts = dict(nll=loss, aux=jnp.zeros(()))
+
+        new_params, new_state, om = opt.update(grads, opt_state, params)
+        metrics = dict(loss=loss, nll=parts["nll"], aux=parts["aux"], **om)
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_batch_spec(cfg, ctx, batch: int, seq: int, for_dryrun: bool = True):
+    """ShapeDtypeStructs + shardings for one global batch."""
+    if frontends.uses_embeds(cfg):
+        specs = dict(
+            embeds=jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                        jnp.dtype(cfg.dtype)),
+            labels=jax.ShapeDtypeStruct((batch, seq), jnp.int32))
+        shardings = dict(embeds=ctx.sharding(("batch", "seq", "act_embed")),
+                         labels=ctx.sharding(("batch", "seq")))
+    else:
+        specs = dict(tokens=jax.ShapeDtypeStruct((batch, seq + 1), jnp.int32))
+        # raw token input stays seq-unsharded (S+1 need not divide the
+        # model axis under sequence parallelism)
+        shardings = dict(tokens=ctx.sharding(("batch", None)))
+    return specs, shardings

@@ -1,0 +1,2 @@
+from repro.wireless.channel import LinkParams, achievable_rate, db_to_lin, lin_to_db  # noqa: F401
+from repro.wireless.traces import synth_mmobile_trace  # noqa: F401

@@ -1,0 +1,171 @@
+"""Core Bayes-Split-Edge tests: GP correctness, acquisition properties,
+problem calibration, Algorithm-1 behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gp as gpm
+from repro.core.acquisition import (AcqWeights, expected_improvement,
+                                    schedule, ucb)
+from repro.core import (BasicBO, BayesSplitEdge, default_vgg19_problem,
+                        default_resnet101_problem)
+
+
+# ---------------------------------------------------------------------------
+# GP
+# ---------------------------------------------------------------------------
+
+
+def _fit_gp(xs, ys, cfg=gpm.GPConfig()):
+    data = gpm.empty_dataset(cfg)
+    for x, y in zip(xs, ys):
+        data, _ = gpm.add_point(data, jnp.asarray(x), jnp.asarray(y))
+    return gpm.fit(data, cfg)
+
+
+def test_gp_interpolates_training_points():
+    rng = np.random.default_rng(0)
+    xs = rng.random((12, 2))
+    ys = np.sin(3 * xs[:, 0]) + xs[:, 1] ** 2
+    gp = _fit_gp(xs, ys)
+    for x, y in zip(xs, ys):
+        mu, sig = gpm.posterior(gp, jnp.asarray(x))
+        assert abs(float(mu) - y) < 0.15, (float(mu), y)
+
+
+def test_gp_posterior_matches_exact_formula():
+    """Masked/padded Cholesky path == textbook dense GP on active points."""
+    rng = np.random.default_rng(1)
+    xs = rng.random((8, 2))
+    ys = rng.random(8)
+    cfg = gpm.GPConfig(fit_steps=1)      # fixed hyperparams, compare math
+    gp = _fit_gp(xs, ys, cfg)
+    theta = gp["theta"]
+    ls, sv, nv = (float(jnp.exp(theta["log_ls"])),
+                  float(jnp.exp(theta["log_sv"])),
+                  float(jnp.exp(theta["log_nv"])))
+    y_std = (ys - float(gp["y_mu"])) / float(gp["y_sigma"])
+    K = np.array(gpm.matern52(jnp.asarray(xs), jnp.asarray(xs), ls, sv))
+    K += (nv + cfg.jitter) * np.eye(8)
+    xstar = np.array([0.3, 0.7])
+    ks = np.asarray(gpm.matern52(jnp.asarray(xstar[None]),
+                                 jnp.asarray(xs), ls, sv))[0]
+    mu_ref = ks @ np.linalg.solve(K, y_std)
+    mu_ref = mu_ref * float(gp["y_sigma"]) + float(gp["y_mu"])
+    var_ref = sv - ks @ np.linalg.solve(K, ks)
+    mu, sig = gpm.posterior(gp, jnp.asarray(xstar))
+    np.testing.assert_allclose(float(mu), mu_ref, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        float(sig), np.sqrt(max(var_ref, 1e-12)) * float(gp["y_sigma"]),
+        rtol=1e-3, atol=1e-5)
+
+
+def test_gp_uncertainty_grows_away_from_data():
+    xs = np.array([[0.5, 0.5]])
+    gp = _fit_gp(xs, np.array([1.0]), gpm.GPConfig(fit_steps=1))
+    _, s_near = gpm.posterior(gp, jnp.asarray([0.5, 0.5]))
+    _, s_far = gpm.posterior(gp, jnp.asarray([0.0, 0.0]))
+    assert float(s_far) > float(s_near)
+
+
+# ---------------------------------------------------------------------------
+# acquisition
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.floats(-3, 3), st.floats(0.01, 2.0), st.floats(-3, 3))
+def test_ei_nonnegative_and_monotone_in_mu(mu, sigma, best):
+    e1 = float(expected_improvement(jnp.float32(mu), jnp.float32(sigma),
+                                    jnp.float32(best)))
+    e2 = float(expected_improvement(jnp.float32(mu + 0.5), jnp.float32(sigma),
+                                    jnp.float32(best)))
+    assert e1 >= -1e-6
+    assert e2 >= e1 - 1e-5
+
+
+def test_schedule_decays_exponentially():
+    assert schedule(1.0, 0.1, 0.0) == pytest.approx(1.0)
+    assert schedule(1.0, 0.1, 1.0) == pytest.approx(0.1)
+    assert schedule(1.0, 0.1, 0.5) == pytest.approx(10 ** -0.5)
+    assert schedule(0.0, 0.1, 0.5) == 0.0      # disabled term stays off
+
+
+# ---------------------------------------------------------------------------
+# problem calibration (Table 1 anchor)
+# ---------------------------------------------------------------------------
+
+
+def test_vgg19_problem_reproduces_table1_optimum():
+    pb = default_vgg19_problem()
+    a, _ = pb.exhaustive_optimum(n_power=501)
+    l, p = pb.denormalize(a)
+    e, t = pb.constraint_values(a)
+    _, acc = pb._accuracy(l, p)
+    assert l == 7
+    assert abs(p - 0.38) < 0.005
+    assert abs(e - 1.53) < 0.02
+    assert abs(t - 5.00) < 0.01
+    assert acc == pytest.approx(87.5)
+
+
+def test_accuracy_quantization_levels():
+    pb = default_vgg19_problem()
+    accs = set()
+    for l in range(1, pb.L + 1):
+        a = pb.project_feasible(pb.normalize(l, 0.45))
+        _, acc = pb._accuracy(*pb.denormalize(a))
+        accs.add(round(acc, 2))
+    # the paper's 64-sample quantization: 84.38 / 85.94 / 87.50
+    assert accs <= {0.0, 84.38, 85.94, 87.5}, accs
+
+
+def test_penalty_zero_iff_feasible():
+    pb = default_vgg19_problem()
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        a = rng.random(2)
+        assert (pb.penalty(a) == 0.0) == pb.feasible(a)
+
+
+def test_penalty_batch_matches_scalar():
+    pb = default_vgg19_problem()
+    rng = np.random.default_rng(1)
+    A = rng.random((20, 2))
+    batch = pb.penalty_batch(A)
+    for a, pv in zip(A, batch):
+        single = pb.penalty(a)
+        if np.isinf(single):
+            assert pv >= 1e5
+        else:
+            np.testing.assert_allclose(pv, single, rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1
+# ---------------------------------------------------------------------------
+
+
+def test_bayes_split_edge_finds_optimum_within_budget():
+    pb = default_vgg19_problem()
+    res = BayesSplitEdge(pb, budget=20).run(seed=0)
+    l, p = pb.denormalize(res.best_a)
+    assert l == 7
+    assert res.best_accuracy == pytest.approx(87.5)
+    assert res.n_evals <= 20
+
+
+def test_bo_respects_budget_and_history():
+    pb = default_vgg19_problem()
+    res = BasicBO(pb, budget=15).run(seed=1)
+    assert res.n_evals <= 15
+    assert len(pb.history) == res.n_evals
+
+
+def test_resnet_pair_converges():
+    pb = default_resnet101_problem()
+    res = BayesSplitEdge(pb, budget=20).run(seed=0)
+    a, u_star = pb.exhaustive_optimum(n_power=201)
+    assert res.best_utility >= u_star - 0.2

@@ -1,0 +1,182 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp
+oracle, plus hypothesis property tests on the online-softmax invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+from repro.kernels.rglru_scan.ops import rglru_scan
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+
+INT32_MAX = np.iinfo(np.int32).max
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (B, S, Hq, Hkv, hd, window, dtype)
+    (2, 128, 4, 2, 32, 0, jnp.float32),
+    (1, 256, 8, 8, 64, 0, jnp.float32),
+    (1, 96, 4, 1, 16, 0, jnp.float32),      # MQA + padded seq
+    (2, 128, 4, 4, 32, 24, jnp.float32),    # sliding window
+    (1, 160, 8, 2, 64, 48, jnp.float32),    # GQA + window + padding
+    (2, 128, 4, 2, 32, 0, jnp.bfloat16),
+    (1, 64, 2, 2, 128, 0, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_matches_ref(case):
+    B, S, Hq, Hkv, hd, win, dt = case
+    ks = jax.random.split(jax.random.PRNGKey(42), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, hd), dt)
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd), dt)
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd), dt)
+    o = flash_attention(q, k, v, causal=True, window=win, bq=32, bk=32,
+                        interpret=True)
+    r = attention_ref(q, k, v, causal=True, window=win)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=_tol(dt),
+                               rtol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+DECODE_CASES = [
+    # (B, T, Hq, Hkv, hd, filled, window, dtype)
+    (2, 128, 4, 2, 32, 100, 0, jnp.float32),
+    (1, 256, 8, 1, 64, 256, 0, jnp.float32),
+    (2, 96, 4, 4, 32, 60, 32, jnp.float32),   # ring-window cache
+    (1, 128, 8, 2, 128, 77, 0, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+def test_decode_attention_matches_ref(case):
+    B, T, Hq, Hkv, hd, filled, win, dt = case
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (B, Hq, hd), dt)
+    k = jax.random.normal(ks[1], (B, T, Hkv, hd), dt)
+    v = jax.random.normal(ks[2], (B, T, Hkv, hd), dt)
+    kv_pos = np.full((B, T), INT32_MAX, np.int32)
+    kv_pos[:, :filled] = np.arange(filled)
+    q_pos = np.full((B,), filled, np.int32)
+    o = decode_attention(q, k, v, jnp.asarray(kv_pos), jnp.asarray(q_pos),
+                         window=win, bk=32, interpret=True)
+    r = decode_attention_ref(q, k, v, jnp.asarray(kv_pos),
+                             jnp.asarray(q_pos), window=win)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=_tol(dt),
+                               rtol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 scan
+# ---------------------------------------------------------------------------
+
+RWKV_CASES = [
+    # (B, S, H, hd, chunk, dtype)
+    (2, 64, 2, 16, 16, jnp.float32),
+    (1, 100, 4, 32, 32, jnp.float32),      # padded seq
+    (2, 48, 2, 16, 16, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", RWKV_CASES)
+def test_rwkv6_scan_matches_ref(case):
+    B, S, H, hd, chunk, dt = case
+    ks = jax.random.split(jax.random.PRNGKey(3), 6)
+    r = jax.random.normal(ks[0], (B, S, H, hd), dt)
+    k = jax.random.normal(ks[1], (B, S, H, hd), dt)
+    v = jax.random.normal(ks[2], (B, S, H, hd), dt)
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, hd))).astype(dt) * 0.5
+    u = jax.random.normal(ks[4], (H, hd), jnp.float32) * 0.1
+    s0 = jax.random.normal(ks[5], (B, H, hd, hd), jnp.float32) * 0.1
+    o, s_last = rwkv6_scan(r, k, v, logw, u, s0, chunk=chunk, interpret=True)
+    o_ref, s_ref = rwkv6_scan_ref(r, k, v, logw, u, s0)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               atol=5 * _tol(dt), rtol=3e-2)
+    np.testing.assert_allclose(np.asarray(s_last), np.asarray(s_ref),
+                               atol=5 * _tol(dt), rtol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# rglru scan
+# ---------------------------------------------------------------------------
+
+RGLRU_CASES = [
+    (2, 64, 32, 16, 16, jnp.float32),
+    (1, 100, 48, 32, 16, jnp.float32),     # padded seq + channels
+    (2, 64, 32, 16, 32, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", RGLRU_CASES)
+def test_rglru_scan_matches_ref(case):
+    B, S, R, chunk, br, dt = case
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, R))).astype(dt)
+    b = jax.random.normal(ks[1], (B, S, R), dt)
+    h0 = jax.random.normal(ks[2], (B, R), jnp.float32)
+    hs, h_last = rglru_scan(a, b, h0, chunk=chunk, block_r=br,
+                            interpret=True)
+    hs_ref, h_ref = rglru_scan_ref(a, b, h0)
+    np.testing.assert_allclose(np.asarray(hs, np.float32),
+                               np.asarray(hs_ref, np.float32),
+                               atol=5 * _tol(dt), rtol=3e-2)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(h_ref),
+                               atol=5 * _tol(dt), rtol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(16, 64), st.integers(1, 4), st.integers(0, 1),
+       st.integers(0, 40))
+def test_flash_attention_rowsum_invariant(S, H, use_win, win_extra):
+    """Softmax rows are convex combinations: outputs lie within the
+    min/max envelope of V (per head-dim coordinate)."""
+    win = (8 + win_extra) if use_win else 0
+    key = jax.random.PRNGKey(S * 131 + H)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, S, H, 16))
+    k = jax.random.normal(ks[1], (1, S, H, 16))
+    v = jax.random.normal(ks[2], (1, S, H, 16))
+    o = np.asarray(flash_attention(q, k, v, causal=True, window=win,
+                                   bq=16, bk=16, interpret=True))
+    vmin = np.asarray(v.min(axis=1, keepdims=True))
+    vmax = np.asarray(v.max(axis=1, keepdims=True))
+    assert (o >= vmin - 1e-4).all() and (o <= vmax + 1e-4).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(8, 40), st.integers(8, 33))
+def test_rglru_zero_input_decays(S, R):
+    """With b=0 the state can only shrink (|a| <= 1)."""
+    key = jax.random.PRNGKey(S * 7 + R)
+    a = jax.nn.sigmoid(jax.random.normal(key, (1, S, R)))
+    b = jnp.zeros((1, S, R))
+    h0 = jnp.ones((1, R), jnp.float32)
+    hs, h_last = rglru_scan(a, b, h0, chunk=8, block_r=16, interpret=True)
+    hs = np.asarray(hs)
+    assert (np.abs(hs) <= 1.0 + 1e-5).all()
+    assert (np.abs(hs[:, -1]) <= np.abs(hs[:, 0]) + 1e-5).all()

@@ -1,0 +1,63 @@
+"""VGG19 execution path + profile consistency + cost-model properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, list_configs
+from repro.configs.cnn import get_cnn_config
+from repro.core.cost_model import CostModel
+from repro.core.profiles import lm_profile, vgg19_profile
+from repro.models import vgg
+
+
+def test_vgg19_split_forward_matches_full():
+    key = jax.random.PRNGKey(0)
+    params = vgg.init_vgg19(key, n_classes=10)
+    img = jax.random.normal(jax.random.PRNGKey(1), (1, 224, 224, 3)) * 0.1
+    full = vgg.vgg19_classifier(params, vgg.vgg19_features(params, img))
+    for l in [0, 7, 19, 37]:
+        logits, bb = vgg.split_forward(params, img, l)
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(full),
+                                   atol=1e-3, rtol=1e-3)
+        # boundary payload matches the analytic profile's D(l)
+        prof = get_cnn_config("vgg19-imagenet-mini")
+        assert bb == int(prof.activation_bytes(l))
+
+
+def test_vgg19_profile_totals():
+    prof = vgg19_profile()
+    # known: VGG19 features ~19.5-19.7 GMACs at 224x224
+    assert abs(prof.cum_macs[37] / 1e9 - 19.6) < 0.2
+    assert prof.n_layers == 37
+    # activation at split 7 (paper's optimum): 112*112*128 fp32
+    assert prof.tx_bytes[7] == 112 * 112 * 128 * 4
+
+
+@pytest.mark.parametrize("arch", list_configs())
+def test_lm_profiles_monotone(arch):
+    prof = lm_profile(get_config(arch), seq=128)
+    assert np.all(np.diff(prof.cum_macs) >= 0)
+    assert prof.total_macs >= prof.cum_macs[-1]
+    assert np.all(prof.tx_bytes[1:] > 0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 37), st.floats(0.05, 0.5), st.floats(0.1, 0.45))
+def test_cost_model_monotonicity(l, p, dp):
+    """Energy increases with P (log-rate regime), delay decreases with P."""
+    cm = CostModel(vgg19_profile())
+    gain = -102.64
+    p2 = min(p + dp, 0.5)
+    t1, t2 = cm.delay_s(l, p, gain), cm.delay_s(l, p2, gain)
+    assert t2 <= t1 + 1e-9
+    e1, e2 = cm.energy_j(l, p, gain), cm.energy_j(l, p2, gain)
+    assert e2 >= e1 - 1e-9     # P grows faster than rate in this regime
+
+
+def test_completion_fraction_bounds():
+    cm = CostModel(vgg19_profile())
+    for l in (1, 7, 20, 37):
+        phi = cm.completion_fraction(l, 0.3, -102.64)
+        assert 0.0 <= float(phi) <= 1.0

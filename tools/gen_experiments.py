@@ -1,0 +1,118 @@
+#!/usr/bin/env python
+"""Generate the data-driven sections of EXPERIMENTS.md (§Dry-run table,
+§Roofline table, §Perf variant comparisons) from the dry-run artifacts.
+Prints markdown to stdout; EXPERIMENTS.md includes the output verbatim."""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ART = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                   "artifacts", "dryrun")
+PEAK_FLOPS, HBM_BW, ICI_BW = 197e12, 819e9, 50e9
+HBM_BYTES = 16e9    # v5e
+
+
+def cells(include_variants=False):
+    out = []
+    for p in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        d = json.load(open(p))
+        tagged = bool((d.get("variant") or {}).get("tag"))
+        if tagged != include_variants:
+            continue
+        out.append(d)
+    return out
+
+
+def gb(x):
+    return f"{x/2**30:.2f}"
+
+
+def dryrun_table():
+    rows = ["| arch | shape | mesh | status | compile(s) | peak GiB/dev | fits v5e |",
+            "|---|---|---|---|---|---|---|"]
+    for d in cells():
+        if d["status"] == "skipped":
+            rows.append(f"| {d['arch']} | {d['shape']} | {d['mesh']} | "
+                        f"skipped | — | — | — |")
+            continue
+        peak = d["memory"]["peak_bytes"] + d["memory"]["argument_bytes"]
+        fits = "yes" if peak <= HBM_BYTES else "**no**"
+        rows.append(f"| {d['arch']} | {d['shape']} | {d['mesh']} | ok | "
+                    f"{d['compile_s']} | {gb(peak)} | {fits} |")
+    return "\n".join(rows)
+
+
+def _move_hint(dom, d):
+    arch = d["arch"]
+    if dom == "compute":
+        return "fp8 expert compute / lower capacity factor" \
+            if "kimi" in arch else "causal-skip attention (Pallas kernel)"
+    if dom == "collective":
+        return "drop FSDP re-gather (serve) / fp8 gather (train)"
+    return ("fuse softmax chain (TPU fusion) + bf16 intermediates"
+            if d["shape"] != "decode_32k" else
+            "weight streaming is the physical decode floor; fp8 weights halve it")
+
+
+def roofline_table():
+    from benchmarks.roofline_report import model_flops
+    rows = ["| arch | shape | mesh | compute(s) | memory(s) | collective(s) "
+            "| dominant | MODEL/HLO flops | what moves it |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for d in cells():
+        if d["status"] != "ok":
+            continue
+        a = d.get("analysis") or {}
+        if "flops" not in a:
+            continue
+        tc = a["flops"] / PEAK_FLOPS
+        tm = a["bytes_accessed"] / HBM_BW
+        tl = (a.get("collectives") or {}).get("total", 0) / ICI_BW
+        dom = max((tc, "compute"), (tm, "memory"), (tl, "collective"))[1]
+        mf = model_flops(d["arch"], d["shape"]) / d["n_chips"]
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | {tc:.4f} | "
+            f"{tm:.4f} | {tl:.4f} | {dom} | {mf/max(a['flops'],1e-9):.3f} | "
+            f"{_move_hint(dom, d)} |")
+    return "\n".join(rows)
+
+
+def variants_table():
+    rows = ["| cell | variant | compute(s) | memory(s) | collective(s) |",
+            "|---|---|---|---|---|"]
+    everything = cells() + cells(include_variants=True)
+    everything.sort(key=lambda d: (d["arch"], d["shape"], d["mesh"],
+                                   (d.get("variant") or {}).get("tag", "")))
+    interesting = {("kimi-k2-1t-a32b", "train_4k", "pod"),
+                   ("kimi-k2-1t-a32b", "decode_32k", "pod"),
+                   ("qwen2-1.5b", "train_4k", "pod")}
+    for d in everything:
+        key = (d["arch"], d["shape"], d["mesh"])
+        if key not in interesting or d["status"] != "ok":
+            continue
+        a = d.get("analysis") or {}
+        if "flops" not in a:
+            continue
+        tag = (d.get("variant") or {}).get("tag") or "baseline"
+        tc = a["flops"] / PEAK_FLOPS
+        tm = a["bytes_accessed"] / HBM_BW
+        tl = (a.get("collectives") or {}).get("total", 0) / ICI_BW
+        rows.append(f"| {d['arch']}/{d['shape']}/{d['mesh']} | {tag} | "
+                    f"{tc:.4f} | {tm:.4f} | {tl:.4f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("<!-- generated: dryrun -->\n")
+        print(dryrun_table())
+    if which in ("all", "roofline"):
+        print("\n<!-- generated: roofline -->\n")
+        print(roofline_table())
+    if which in ("all", "variants"):
+        print("\n<!-- generated: variants -->\n")
+        print(variants_table())

@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""Fan out every (arch x shape x mesh) dry-run cell as its own subprocess
+(compile-memory isolation), with bounded concurrency. Skips cells whose
+artifact is already status=ok unless --force."""
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ARCHS = [
+    "kimi-k2-1t-a32b", "qwen2-moe-a2.7b", "qwen2-1.5b", "deepseek-7b",
+    "h2o-danube-3-4b", "starcoder2-15b", "musicgen-large",
+    "recurrentgemma-2b", "rwkv6-3b", "internvl2-26b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+MESHES = ["pod", "multipod"]
+
+
+def cell_done(out, arch, shape, mesh):
+    p = os.path.join(out, f"{arch}__{shape}__{mesh}.json")
+    if not os.path.exists(p):
+        return False
+    try:
+        d = json.load(open(p))
+        return d.get("status") in ("ok", "skipped")
+    except Exception:
+        return False
+
+
+def run(cell, out, timeout, extra=()):
+    arch, shape, mesh = cell
+    t0 = time.time()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    try:
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+             "--shape", shape, "--mesh", mesh, "--out", out, *extra],
+            capture_output=True, text=True, timeout=timeout, env=env,
+            cwd=os.path.join(os.path.dirname(__file__), ".."))
+        tail = (r.stdout + r.stderr).strip().splitlines()[-1:]
+        print(f"[{time.strftime('%H:%M:%S')}] {arch}/{shape}/{mesh}: "
+              f"rc={r.returncode} {time.time()-t0:.0f}s :: "
+              f"{tail[0] if tail else ''}", flush=True)
+    except subprocess.TimeoutExpired:
+        with open(os.path.join(out, f"{arch}__{shape}__{mesh}.json"), "w") as f:
+            json.dump(dict(arch=arch, shape=shape, mesh=mesh,
+                           status="error", error="driver timeout"), f)
+        print(f"[{time.strftime('%H:%M:%S')}] {arch}/{shape}/{mesh}: "
+              f"TIMEOUT after {timeout}s", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    ap.add_argument("--jobs", type=int, default=5)
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--archs", nargs="*", default=ARCHS)
+    ap.add_argument("--meshes", nargs="*", default=MESHES)
+    ap.add_argument("--extra", nargs="*", default=[],
+                    help="extra args passed to repro.launch.dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    refresh = "--refresh-analysis" in args.extra
+    cells = [(a, s, m) for a in args.archs for s in SHAPES
+             for m in args.meshes
+             if args.force or refresh
+             or not cell_done(args.out, a, s, m)]
+    print(f"{len(cells)} cells to run, {args.jobs} concurrent", flush=True)
+    with ThreadPoolExecutor(max_workers=args.jobs) as ex:
+        for c in cells:
+            ex.submit(run, c, args.out, args.timeout, tuple(args.extra))
+
+
+if __name__ == "__main__":
+    main()
