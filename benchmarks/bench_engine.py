@@ -1,0 +1,280 @@
+"""BO engine benchmark: sequential ``BayesSplitEdge`` loop vs the
+device-resident ``BatchedBayesSplitEdge`` over a seed x gain x budget
+scenario sweep. Emits ``BENCH_bo_engine.json`` (repo root + artifacts/)
+with wall-clock, speedup, per-iteration compile counts (must be flat after
+warmup => zero re-jits in the BO loop) and candidates/sec, so the speedup
+is tracked across PRs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_json
+from repro.core import BayesSplitEdge, BatchedBayesSplitEdge, Scenario
+from repro.core.acquisition import compile_counters
+from repro.core.batch_bo import make_vgg19_scenarios
+
+ROOT_JSON = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_bo_engine.json")
+
+
+def _legacy_maximize(gp, problem, weights, t_norm, best_feasible, grid,
+                     incumbent=None, refine_steps=25, refine_lr=0.02,
+                     boundary=None):
+    del boundary  # the seed path recomputed boundary candidates per call
+    """Seed-faithful acquisition hot path (pre-engine): vmap-of-single-point
+    posterior, fresh ``jax.jit(lambda ...)`` closures every call (so every
+    BO iteration recompiles), and 25 host<->device round-trips during
+    refinement. Kept here verbatim as the benchmark's 'before' baseline."""
+    import jax
+    from repro.core import gp as gpm
+    from repro.core.acquisition import local_candidates, schedule
+
+    posterior_single = jax.vmap(gpm.posterior, in_axes=(None, 0))
+
+    def legacy_scores(gp, cand, bf, pens, lb, lg, lp, beta, y_scale):
+        mu, sigma = posterior_single(gp, cand)
+        g = gpm.grad_mean_batch(gp, cand)
+        gn = jnp.sqrt(jnp.sum(jnp.square(g), axis=-1) + 1e-12) / y_scale
+        from repro.core.acquisition import expected_improvement, ucb
+        ei = expected_improvement(mu, sigma, bf) / y_scale
+        ub = (ucb(mu, sigma, beta) - bf) / y_scale
+        return lb * (ei + ub) - lg * gn - lp * pens
+
+    lam_base = schedule(weights.lam_base0, weights.lam_baseT, t_norm)
+    lam_g = schedule(weights.lam_g0, weights.lam_gT, t_norm)
+    extra = [np.zeros((0, 2))]
+    if weights.lam_p > 0:
+        extra = [problem.boundary_candidates(),
+                 local_candidates(problem, incumbent)]
+    cand = np.concatenate([grid] + extra, axis=0)
+    pens = problem.penalty_batch(cand)
+    y_scale = float(gp["y_sigma"])
+    scores = np.asarray(legacy_scores(
+        gp, jnp.asarray(cand), best_feasible, jnp.asarray(pens),
+        lam_base, lam_g, weights.lam_p, weights.beta, y_scale))
+    a0 = cand[int(np.argmax(scores))]
+
+    score_fn = jax.jit(lambda a, p: legacy_scores(
+        gp, a[None], best_feasible, jnp.asarray([p]), lam_base, lam_g,
+        weights.lam_p, weights.beta, y_scale)[0])
+    grad_fn = jax.jit(jax.grad(
+        lambda a, p: legacy_scores(
+            gp, a[None], best_feasible, jnp.asarray([p]), lam_base, lam_g,
+            weights.lam_p, weights.beta, y_scale)[0]))
+
+    def pen_cap(a_):
+        return min(problem.penalty(a_), 1e6)
+
+    a = np.asarray(a0, dtype=np.float64)
+    best_a, best_s = a.copy(), float(score_fn(jnp.asarray(a), pen_cap(a)))
+    for _ in range(refine_steps):
+        g = np.asarray(grad_fn(jnp.asarray(a), pen_cap(a)))
+        if not np.all(np.isfinite(g)):
+            break
+        a = np.clip(a + refine_lr * g, 0.0, 1.0)
+        s = float(score_fn(jnp.asarray(a), pen_cap(a)))
+        if s > best_s:
+            best_a, best_s = a.copy(), s
+    return best_a
+
+
+def _run_legacy(scenarios):
+    """Sequential loop with the seed acquisition implementation patched in
+    (loop/GP logic identical — only the hot path differs)."""
+    import repro.core.bo as bo_mod
+    orig = bo_mod.maximize
+    bo_mod.maximize = _legacy_maximize
+    try:
+        return _run_sequential(scenarios)
+    finally:
+        bo_mod.maximize = orig
+
+
+class CompileMonitor:
+    """Counts XLA backend compiles via jax.monitoring duration events."""
+
+    _installed = None
+
+    def __new__(cls):
+        if cls._installed is None:
+            self = super().__new__(cls)
+            self.count = 0
+            jax.monitoring.register_event_duration_secs_listener(
+                self._on_event)
+            cls._installed = self
+        return cls._installed
+
+    def _on_event(self, key, value, **kw):
+        if key == "/jax/core/compile/backend_compile_duration":
+            self.count += 1
+
+
+def _scenario_grid(n_scenarios: int, budget: int):
+    seeds = tuple(range(max(1, n_scenarios // 4)))
+    scs = make_vgg19_scenarios(seeds=seeds, gain_offsets_db=(0.0, -2.0),
+                               budgets=(budget, budget + 8))
+    return scs[:n_scenarios]
+
+
+def _run_sequential(scenarios):
+    results = []
+    for sc in scenarios:
+        res = BayesSplitEdge(sc.problem, budget=sc.budget).run(seed=sc.seed)
+        results.append(res)
+    return results
+
+
+def run(n_scenarios: int = 16, budget: int = 20, repeats: int = 1,
+        n_legacy: int | None = None, save: bool = True) -> dict:
+    mon = CompileMonitor()
+
+    # -- seed baseline: per-iteration recompiling sequential loop ------------
+    # (the implementation this PR replaced; measured on a subset and scaled
+    # because every iteration pays fresh traces + XLA compiles)
+    if n_legacy is None:
+        n_legacy = min(2, n_scenarios)
+    legacy_s = None
+    legacy_compiles = 0
+    if n_legacy > 0:
+        c0 = mon.count
+        scs = _scenario_grid(n_legacy, budget)
+        t0 = time.time()
+        _run_legacy(scs)
+        legacy_s = (time.time() - t0) * n_scenarios / n_legacy
+        legacy_compiles = (mon.count - c0) * n_scenarios // n_legacy
+
+    # -- warmup: compile both new paths on a throwaway scenario + full-size
+    #    bucket so the timed sections below run with zero compiles ----------
+    t0 = time.time()
+    _run_sequential(_scenario_grid(1, budget))
+    BatchedBayesSplitEdge(_scenario_grid(n_scenarios, budget)).run()
+    warmup_s = time.time() - t0
+    warmup_compiles = mon.count
+
+    # -- sequential loop (this PR's jit-hoisted implementation) --------------
+    t_seq = []
+    for _ in range(repeats):
+        scs = _scenario_grid(n_scenarios, budget)
+        t0 = time.time()
+        seq_results = _run_sequential(scs)
+        t_seq.append(time.time() - t0)
+    seq_compiles = mon.count - warmup_compiles
+
+    # -- batched engine ------------------------------------------------------
+    t_bat = []
+    per_iter_compiles = []
+    per_iter_caches = []
+    for _ in range(repeats):
+        scs = _scenario_grid(n_scenarios, budget)
+        engine = BatchedBayesSplitEdge(scs)
+        per_iter_compiles.clear()
+        per_iter_caches.clear()
+
+        def probe(it, counters):
+            per_iter_compiles.append(mon.count)
+            per_iter_caches.append(sum(counters.values()))
+
+        t0 = time.time()
+        bat_results = engine.run(on_iteration=probe)
+        t_bat.append(time.time() - t0)
+
+    n_iters = len(per_iter_compiles)
+    # flat == no new XLA compiles and no new jit traces after iteration 0
+    flat_after_warmup = (n_iters <= 1 or
+                         (per_iter_compiles[-1] == per_iter_compiles[0]
+                          and per_iter_caches[-1] == per_iter_caches[0]))
+
+    seq_s, bat_s = float(np.min(t_seq)), float(np.min(t_bat))
+    n_cand = 64 * 64 + scs[0].problem.L + 45
+    evals = sum(r.n_evals for r in bat_results)
+
+    # -- candidates/sec: fused matern-score sweep (ref path off-TPU) ---------
+    from repro.kernels.matern_score import matern_score
+    S, n, N = n_scenarios, 64, 4160
+    rng = np.random.default_rng(0)
+    args = (jnp.asarray(rng.random((S, N, 2)), jnp.float32),
+            jnp.asarray(rng.random((S, n, 2)), jnp.float32),
+            jnp.asarray(rng.random((S, n)), jnp.float32),
+            jnp.ones((S, n), jnp.float32),
+            jnp.full((S,), 0.3, jnp.float32),
+            jnp.ones((S,), jnp.float32))
+    matern_score(*args).block_until_ready()
+    reps = 50
+    t0 = time.time()
+    for _ in range(reps):
+        out = matern_score(*args)
+    out.block_until_ready()
+    score_cps = reps * S * N / (time.time() - t0)
+
+    report = dict(
+        backend=jax.default_backend(),
+        n_scenarios=n_scenarios,
+        budget=budget,
+        # 'before': seed implementation — fresh jit closures every BO
+        # iteration + host-loop refinement, scaled from n_legacy scenarios
+        sequential_seed_s=None if legacy_s is None else round(legacy_s, 4),
+        sequential_seed_n_measured=n_legacy,
+        sequential_seed_compiles_est=legacy_compiles,
+        # 'after', same per-scenario loop: jit-hoisted single-dispatch path
+        sequential_s=round(seq_s, 4),
+        batched_s=round(bat_s, 4),
+        speedup_vs_seed=(None if legacy_s is None
+                         else round(legacy_s / bat_s, 2)),
+        speedup_vs_sequential=round(seq_s / bat_s, 2),
+        warmup_s=round(warmup_s, 2),
+        warmup_compiles=warmup_compiles,
+        sequential_extra_compiles=seq_compiles,
+        batched_iterations=n_iters,
+        per_iteration_compile_counts=per_iter_compiles,
+        per_iteration_trace_cache_sizes=per_iter_caches,
+        zero_rejits_after_warmup=bool(flat_after_warmup),
+        candidates_scored_per_iteration=n_cand * n_scenarios,
+        bo_candidates_per_sec=round(n_iters * n_cand * n_scenarios / bat_s),
+        matern_score_candidates_per_sec=round(score_cps),
+        total_evals_batched=evals,
+        accuracies=dict(
+            sequential=[r.best_accuracy for r in seq_results],
+            batched=[r.best_accuracy for r in bat_results]),
+        compile_counters=compile_counters(),
+    )
+    if save:
+        save_json("BENCH_bo_engine.json", report)
+        with open(ROOT_JSON, "w") as f:
+            json.dump(report, f, indent=1)
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenarios", type=int, default=16)
+    ap.add_argument("--budget", type=int, default=20)
+    ap.add_argument("--repeats", type=int, default=1)
+    ap.add_argument("--legacy", type=int, default=None,
+                    help="scenarios to measure the seed baseline on "
+                         "(scaled up; 0 disables)")
+    args = ap.parse_args()
+    r = run(args.scenarios, args.budget, args.repeats, args.legacy)
+    seed_s = r["sequential_seed_s"]
+    print(f"seed-sequential {'n/a' if seed_s is None else f'{seed_s:.2f}s'}"
+          f"  sequential {r['sequential_s']:.2f}s"
+          f"  batched {r['batched_s']:.2f}s")
+    vs_seed = (f"{r['speedup_vs_seed']}x" if r["speedup_vs_seed"] is not None
+               else "n/a")
+    print(f"speedup vs seed {vs_seed}, "
+          f"vs jit-hoisted sequential {r['speedup_vs_sequential']}x  "
+          f"zero-rejits={r['zero_rejits_after_warmup']}")
+    print(f"matern-score {r['matern_score_candidates_per_sec']:,} cand/s  "
+          f"BO loop {r['bo_candidates_per_sec']:,} cand/s")
+    return r
+
+
+if __name__ == "__main__":
+    main()

@@ -32,7 +32,7 @@ def _np_default(o):
     raise TypeError(type(o))
 
 
-def cumulative_regret(problem, utilities, u_star):
+def cumulative_regret(utilities, u_star):
     u = np.asarray(utilities, dtype=float)
     return np.cumsum(u_star - u)
 

@@ -1,27 +1,38 @@
 """Fig 10: convergence iteration across 10 random seeds (paper: all
-below 20, average < 8)."""
+below 20, average < 8). ``--batched`` runs all seeds as one vmapped
+program via the batched engine."""
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
 from benchmarks.common import save_json
-from repro.core import BayesSplitEdge, default_vgg19_problem
+from repro.core import (BatchedBayesSplitEdge, BayesSplitEdge, Scenario,
+                        default_vgg19_problem)
 
 
-def run(n_seeds: int = 10):
-    hits = []
-    for seed in range(n_seeds):
-        pb = default_vgg19_problem()
-        res = BayesSplitEdge(pb, budget=20).run(seed=seed)
-        hit = next((i + 1 for i, a in enumerate(res.accuracies)
-                    if a >= 87.5), None)
-        hits.append(hit)
-    save_json("fig10_seeds.json", dict(hits=hits))
+def run(n_seeds: int = 10, batched: bool = False):
+    if batched:
+        scs = [Scenario(default_vgg19_problem(), seed=s, budget=20)
+               for s in range(n_seeds)]
+        results = BatchedBayesSplitEdge(scs).run()
+    else:
+        results = [BayesSplitEdge(default_vgg19_problem(), budget=20)
+                   .run(seed=seed) for seed in range(n_seeds)]
+    hits = [next((i + 1 for i, a in enumerate(res.accuracies)
+                  if a >= 87.5), None) for res in results]
+    save_json("fig10_seeds.json", dict(hits=hits, batched=batched))
     return hits
 
 
 def main():
-    hits = run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batched", action="store_true",
+                    help="run all seeds as one vmapped BO program")
+    ap.add_argument("--seeds", type=int, default=10)
+    args, _ = ap.parse_known_args()
+    hits = run(args.seeds, batched=args.batched)
     ok = [h for h in hits if h is not None]
     print(f"converged {len(ok)}/{len(hits)} seeds; iterations: {hits}")
     if ok:

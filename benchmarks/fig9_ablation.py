@@ -30,7 +30,7 @@ def run(n_seeds: int = 3):
         for seed in range(n_seeds):
             pb = default_vgg19_problem()
             res = mk(pb).run(seed=seed)
-            regs.append(cumulative_regret(pb, res.utilities, u_star))
+            regs.append(cumulative_regret(res.utilities, u_star))
             hit = next((i + 1 for i, a in enumerate(res.accuracies)
                         if a >= 87.5), None)
             hits.append(hit)
@@ -48,7 +48,7 @@ def run(n_seeds: int = 3):
         bo = BayesSplitEdge(pb, budget=25, n_max_repeat=10 ** 9)
         bo.gp_feasible_only = False
         res = bo.run(seed=seed)
-        regs.append(cumulative_regret(pb, res.utilities, u_star))
+        regs.append(cumulative_regret(res.utilities, u_star))
         hits.append(next((i + 1 for i, a in enumerate(res.accuracies)
                           if a >= 87.5), None))
     n = min(len(r) for r in regs)

@@ -1,6 +1,9 @@
 """Table 1: performance comparison of optimization methods on the
-split-inference task (VGG19 / ImageNet-Mini / 5 J / 5 s)."""
+split-inference task (VGG19 / ImageNet-Mini / 5 J / 5 s). ``--batched``
+routes the BO rows through the device-resident batched engine."""
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
@@ -8,7 +11,22 @@ from benchmarks.common import Timer, save_json
 from repro.baselines import (CMAES, ComputeFirst, DirectSearch,
                              ExhaustiveSearch, PPOBaseline, RandomSearch,
                              TransmitFirst)
-from repro.core import BasicBO, BayesSplitEdge, default_vgg19_problem
+from repro.core import (BasicBO, BatchedBayesSplitEdge, BayesSplitEdge,
+                        Scenario, default_vgg19_problem)
+
+
+class _BatchedRunner:
+    """Adapter: runs one scenario through the batched engine (the engine's
+    single-scenario path shares every jitted program with larger sweeps)."""
+
+    def __init__(self, problem, budget=20, **engine_kw):
+        self.problem = problem
+        self.budget = budget
+        self.engine_kw = engine_kw
+
+    def run(self, seed=0):
+        sc = Scenario(self.problem, seed=seed, budget=self.budget)
+        return BatchedBayesSplitEdge([sc], **self.engine_kw).run()[0]
 
 PAPER_ROWS = {
     "Bayes-Split-Edge (Ours)": (20, 7, 0.38, 87.50, 1.53, 5.00),
@@ -23,11 +41,18 @@ PAPER_ROWS = {
 }
 
 
-def run(seed: int = 0):
+def run(seed: int = 0, batched: bool = False):
+    if batched:
+        from repro.core.bo import BASIC_BO_KW
+        mk_ours = lambda pb: _BatchedRunner(pb, budget=20)  # noqa: E731
+        mk_basic = lambda pb: _BatchedRunner(  # noqa: E731
+            pb, budget=48, **BASIC_BO_KW)
+    else:
+        mk_ours = lambda pb: BayesSplitEdge(pb, budget=20)  # noqa: E731
+        mk_basic = lambda pb: BasicBO(pb, budget=48)        # noqa: E731
     algos = [
-        ("Bayes-Split-Edge (Ours)",
-         lambda pb: BayesSplitEdge(pb, budget=20)),
-        ("Basic-BO", lambda pb: BasicBO(pb, budget=48)),
+        ("Bayes-Split-Edge (Ours)", mk_ours),
+        ("Basic-BO", mk_basic),
         ("Exhaustive Search", lambda pb: ExhaustiveSearch(pb, n_power=1001)),
         ("Direct Search", lambda pb: DirectSearch(pb)),
         ("CMA-ES", lambda pb: CMAES(pb)),
@@ -59,7 +84,11 @@ def run(seed: int = 0):
 
 
 def main():
-    rows = run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batched", action="store_true",
+                    help="route the BO rows through the batched engine")
+    args, _ = ap.parse_known_args()
+    rows = run(batched=args.batched)
     hdr = (f"{'algorithm':26s} {'evals':>6s} {'l':>3s} {'P(W)':>6s} "
            f"{'acc%':>6s} {'E(J)':>6s} {'tau(s)':>6s} | paper: l P acc")
     print(hdr)

@@ -1,6 +1,9 @@
 """The paper's primary contribution: constrained Bayesian optimization for
 wireless split inference (GP surrogate + hybrid acquisition + Algorithm 1),
 over the analytic cost substrate."""
+from repro.core.batch_bo import (  # noqa: F401
+    BatchedBayesSplitEdge, Scenario, make_vgg19_scenarios,
+)
 from repro.core.bo import BasicBO, BayesSplitEdge, BOResult  # noqa: F401
 from repro.core.cost_model import (  # noqa: F401
     Budgets, CostModel, DeviceParams, LayerProfile, ServerParams,

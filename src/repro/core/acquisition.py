@@ -3,17 +3,32 @@
 alpha(a) = lam_base*(EI + UCB) - lam_g*||grad mu|| - lam_p*penalty
 (Alg. 1 line 10: lam_base multiplies both utility-driven terms; lam_p is
 constant over the run, lam_base/lam_g decay exponentially.)
+
+The hot path is fully device-resident: one module-level jitted program
+scores a fixed-shape candidate block (dense grid + feasibility-boundary +
+incumbent-local slots) and runs the projected-gradient refinement as a
+``lax.fori_loop`` — a single dispatch per BO iteration instead of ~50
+host round-trips and a fresh ``jax.jit(lambda ...)`` per call. Weights,
+scalars and the analytic constraint surface (see ``jax_cost``) are traced
+arguments, so nothing recompiles after warmup.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import gp as gpm
+from repro.core import jax_cost
+
+SIGMA_FLOOR = 1e-9      # EI guard: sigma -> 0 must not NaN/Inf the argmax
+N_LOCAL = 45            # incumbent-local slots: 5 layer offsets x 9 powers
+REFINE_STEPS = 25       # projected-gradient refinement (shared by the
+REFINE_LR = 0.02        # sequential and batched engines — Eq. 12)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +49,7 @@ def schedule(w0: float, wT: float, t: float) -> float:
 
 
 def expected_improvement(mu, sigma, best):
+    sigma = jnp.maximum(sigma, SIGMA_FLOOR)
     z = (mu - best) / sigma
     cdf = 0.5 * (1.0 + jax.scipy.special.erf(z / jnp.sqrt(2.0)))
     pdf = jnp.exp(-0.5 * z * z) / jnp.sqrt(2.0 * jnp.pi)
@@ -83,48 +99,119 @@ def local_candidates(problem, incumbent: Optional[np.ndarray],
     return np.array(out)
 
 
+def assemble_candidates(problem, grid: np.ndarray,
+                        incumbent: Optional[np.ndarray],
+                        constraint_aware: bool,
+                        boundary: Optional[np.ndarray] = None) -> np.ndarray:
+    """Fixed-shape candidate block: (len(grid) + L + N_LOCAL, 2).
+
+    Unused boundary/local slots are filled with ``grid[0]`` duplicates so
+    the argmax is unchanged (first occurrence wins) while the shape stays
+    constant across iterations and scenarios — the jitted scorer compiles
+    exactly once per problem size. ``boundary`` takes precomputed
+    feasibility-boundary candidates (they depend only on the channel, so
+    callers cache them per problem).
+    """
+    fill = grid[:1]
+    bpad = np.repeat(fill, problem.L, axis=0)
+    loc = np.repeat(fill, N_LOCAL, axis=0)
+    if constraint_aware:
+        b = problem.boundary_candidates() if boundary is None else boundary
+        if len(b):
+            bpad[:len(b)] = b[:problem.L]
+        if incumbent is not None:
+            loc = local_candidates(problem, incumbent)
+    return np.concatenate([grid, bpad, loc], axis=0)
+
+
+def _maximize_core(gp, params, cand, best_feasible, lam_base, lam_g, lam_p,
+                   beta, refine_lr, refine_steps):
+    """Grid-argmax + projected-gradient refinement, all on device.
+
+    Returns (best_a, best_score, grid_scores). The penalty at the moved
+    point is re-evaluated analytically via ``jax_cost`` each step (treated
+    as locally constant for the gradient, matching Eq. 12's utility-driven
+    ascent direction).
+    """
+    y_scale = gp["y_sigma"]
+    penalties = jax_cost.penalty(params, cand)
+    scores = hybrid_scores(gp, cand, best_feasible, penalties, lam_base,
+                           lam_g, lam_p, beta, y_scale)
+    a0 = cand[jnp.argmax(scores)]
+
+    def score1(a, pen_const):
+        return hybrid_scores(gp, a[None], best_feasible, pen_const[None],
+                             lam_base, lam_g, lam_p, beta, y_scale)[0]
+
+    grad1 = jax.grad(score1)
+
+    def body(_, carry):
+        a, best_a, best_s, alive = carry
+        g = grad1(a, jax_cost.penalty(params, a))
+        ok = alive & jnp.all(jnp.isfinite(g))
+        a = jnp.where(ok, jnp.clip(a + refine_lr * g, 0.0, 1.0), a)
+        s = score1(a, jax_cost.penalty(params, a))
+        better = ok & (s > best_s)
+        return (a,
+                jnp.where(better, a, best_a),
+                jnp.where(better, s, best_s),
+                ok)
+
+    s0 = score1(a0, jax_cost.penalty(params, a0))
+    _, best_a, best_s, _ = jax.lax.fori_loop(
+        0, refine_steps, body, (a0, a0, s0, jnp.bool_(True)))
+    return best_a, best_s, scores
+
+
+_maximize_jit = jax.jit(_maximize_core, static_argnames=("refine_steps",))
+
+
+@partial(jax.jit, static_argnames=("refine_steps",))
+def maximize_batch(gps, params_b, cand_b, best_feasible_b, lam_base_b,
+                   lam_g_b, lam_p, beta, refine_lr, refine_steps):
+    """One vmapped dispatch maximizing S scenarios' acquisitions at once.
+
+    gps / params_b / cand_b / *_b carry a leading S axis; lam_p, beta and
+    refine_lr are shared scalars. Returns (best_a (S,2), best_s (S,)).
+    """
+    def one(gp, params, cand, bf, lb, lg):
+        a, s, _ = _maximize_core(gp, params, cand, bf, lb, lg, lam_p, beta,
+                                 refine_lr, refine_steps)
+        return a, s
+
+    return jax.vmap(one)(gps, params_b, cand_b, best_feasible_b,
+                         lam_base_b, lam_g_b)
+
+
 def maximize(gp, problem, weights: AcqWeights, t_norm: float,
              best_feasible: float, grid: np.ndarray,
              incumbent: Optional[np.ndarray] = None,
-             refine_steps: int = 25, refine_lr: float = 0.02) -> np.ndarray:
+             refine_steps: int = REFINE_STEPS,
+             refine_lr: float = REFINE_LR,
+             boundary: Optional[np.ndarray] = None) -> np.ndarray:
     """argmax over dense grid + feasibility-boundary + incumbent-local
     candidates, then projected-gradient refinement of the continuous
-    (power) coordinate."""
+    (power) coordinate — one jitted dispatch end to end."""
     lam_base = schedule(weights.lam_base0, weights.lam_baseT, t_norm)
     lam_g = schedule(weights.lam_g0, weights.lam_gT, t_norm)
+    cand = assemble_candidates(problem, grid, incumbent, weights.lam_p > 0,
+                               boundary=boundary)
+    params = problem.jax_params()
+    best_a, _, _ = _maximize_jit(
+        gp, params, jnp.asarray(cand, jnp.float32),
+        jnp.float32(best_feasible), jnp.float32(lam_base),
+        jnp.float32(lam_g), jnp.float32(weights.lam_p),
+        jnp.float32(weights.beta), jnp.float32(refine_lr),
+        refine_steps=refine_steps)
+    return np.asarray(best_a, dtype=np.float64)
 
-    extra = [np.zeros((0, 2))]
-    if weights.lam_p > 0:   # constraint-aware: exploit the feasible boundary
-        extra = [problem.boundary_candidates(),
-                 local_candidates(problem, incumbent)]
-    cand = np.concatenate([grid] + extra, axis=0)
-    pen = problem.penalty_batch(cand)
-    y_scale = float(gp["y_sigma"])
-    scores = np.asarray(hybrid_scores(
-        gp, jnp.asarray(cand), best_feasible, jnp.asarray(pen),
-        lam_base, lam_g, weights.lam_p, weights.beta, y_scale))
-    a0 = cand[int(np.argmax(scores))]
 
-    # local refinement (penalty re-evaluated at the moved point; the
-    # constraint surface is analytic so this stays exact)
-    score_fn = jax.jit(lambda a, p: hybrid_scores(
-        gp, a[None], best_feasible, jnp.asarray([p]), lam_base, lam_g,
-        weights.lam_p, weights.beta, y_scale)[0])
-    grad_fn = jax.jit(jax.grad(
-        lambda a, p: hybrid_scores(
-            gp, a[None], best_feasible, jnp.asarray([p]), lam_base, lam_g,
-            weights.lam_p, weights.beta, y_scale)[0]))
-    def pen(a_):
-        return min(problem.penalty(a_), 1e6)   # inf-safe (deep-fade frames)
-
-    a = np.asarray(a0, dtype=np.float64)
-    best_a, best_s = a.copy(), float(score_fn(jnp.asarray(a), pen(a)))
-    for _ in range(refine_steps):
-        g = np.asarray(grad_fn(jnp.asarray(a), pen(a)))
-        if not np.all(np.isfinite(g)):
-            break
-        a = np.clip(a + refine_lr * g, 0.0, 1.0)
-        s = float(score_fn(jnp.asarray(a), pen(a)))
-        if s > best_s:
-            best_a, best_s = a.copy(), s
-    return best_a
+def compile_counters() -> dict:
+    """Tracing-cache sizes of the hot-path jitted programs; flat counts
+    across BO iterations == zero re-jits after warmup."""
+    return {
+        "gp.fit": gpm.fit._cache_size(),
+        "gp.fit_batch": gpm.fit_batch._cache_size(),
+        "acq.maximize": _maximize_jit._cache_size(),
+        "acq.maximize_batch": maximize_batch._cache_size(),
+    }

@@ -34,6 +34,31 @@ class GPConfig:
     jitter: float = 1e-6
 
 
+DATASET_BUCKETS = (16, 32, 48, 64)
+
+
+def bucket_size(n_pts: int, max_points: int) -> int:
+    """Smallest dataset bucket covering n_pts active points.
+
+    The masked-kernel construction makes the padded block an exact
+    identity block, so fitting on the first ``m`` rows is mathematically
+    identical to the full ``max_points`` layout while the Cholesky cost
+    drops as m^3. Buckets keep the number of traced shapes bounded.
+    """
+    for b in DATASET_BUCKETS:
+        if b >= min(n_pts, max_points):
+            return min(b, max_points)
+    return max_points
+
+
+def slice_data(data, m: int):
+    """First-m-rows view of a (batched or single) padded dataset."""
+    if data["x"].ndim == 3:
+        return dict(x=data["x"][:, :m], y=data["y"][:, :m],
+                    mask=data["mask"][:, :m])
+    return dict(x=data["x"][:m], y=data["y"][:m], mask=data["mask"][:m])
+
+
 def empty_dataset(cfg: GPConfig, dim: int = 2):
     return dict(
         x=jnp.zeros((cfg.max_points, dim)),
@@ -80,8 +105,7 @@ def _neg_mll(theta, x, y_std, mask, jitter):
     return quad + logdet + 0.5 * n * jnp.log(2 * jnp.pi)
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def fit(data, cfg: GPConfig):
+def _fit_core(data, cfg: GPConfig):
     """Returns fitted (theta, posterior-cache). Pure-JAX Adam on the MLL."""
     y_std, y_mu, y_sigma = _standardize(data["y"], data["mask"])
     theta = dict(log_ls=jnp.log(cfg.init_lengthscale),
@@ -117,14 +141,61 @@ def fit(data, cfg: GPConfig):
                 x=data["x"], mask=data["mask"])
 
 
+fit = jax.jit(_fit_core, static_argnames=("cfg",))
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def fit_batch(data, cfg: GPConfig):
+    """Fit S independent GPs in one dispatch.
+
+    ``data`` is the batched-dataset layout: ``x (S, max_points, d)``,
+    ``y (S, max_points)``, ``mask (S, max_points)``. Returns the fitted
+    posterior-cache pytree with a leading S axis on every leaf — exactly
+    ``vmap`` of :func:`fit`, compiled once for the whole scenario batch.
+    """
+    return jax.vmap(lambda d: _fit_core(d, cfg))(data)
+
+
+def empty_dataset_batch(cfg: GPConfig, s: int, dim: int = 2):
+    """Batched-dataset layout for S scenarios: (S, max_points, ...)."""
+    return dict(
+        x=jnp.zeros((s, cfg.max_points, dim)),
+        y=jnp.zeros((s, cfg.max_points)),
+        mask=jnp.zeros((s, cfg.max_points), bool),
+    )
+
+
+@jax.jit
+def add_point_batch(data, x, y, active):
+    """Append one observation per scenario; ``active (S,)`` gates which
+    scenarios actually receive their point (masked scenarios keep their
+    dataset unchanged)."""
+    def upd(d, xi, yi, ai):
+        nd, _ = add_point(d, xi, yi)
+        return jax.tree.map(lambda new, old: jnp.where(ai, new, old), nd, d)
+
+    return jax.vmap(upd)(data, x, y, active)
+
+
 def posterior(gp, a):
     """Posterior mean/std at a single point a: (d,) -> (mu, sigma), raw scale."""
+    mu, sigma = posterior_batch(gp, a[None])
+    return mu[0], sigma[0]
+
+
+def posterior_batch(gp, A):
+    """Fused batched posterior: A (N, d) -> (mu (N,), sigma (N,)), raw scale.
+
+    One cross-kernel build + one ``cho_solve`` over the ``(n, N)``
+    right-hand side, instead of ``vmap``-of-single-point (which solved one
+    triangular system per candidate).
+    """
     ls = jnp.exp(gp["theta"]["log_ls"])
     sv = jnp.exp(gp["theta"]["log_sv"])
-    ks = matern52(a[None], gp["x"], ls, sv)[0] * gp["mask"]
-    mu_std = jnp.dot(ks, gp["alpha"])
-    w = jax.scipy.linalg.cho_solve((gp["L"], True), ks)
-    var = jnp.maximum(sv - jnp.dot(ks, w), 1e-12)
+    ks = matern52(gp["x"], A, ls, sv) * gp["mask"][:, None]    # (n, N)
+    mu_std = ks.T @ gp["alpha"]                                # (N,)
+    w = jax.scipy.linalg.cho_solve((gp["L"], True), ks)        # (n, N)
+    var = jnp.maximum(sv - jnp.sum(ks * w, axis=0), 1e-12)
     return (mu_std * gp["y_sigma"] + gp["y_mu"],
             jnp.sqrt(var) * gp["y_sigma"])
 
@@ -135,5 +206,4 @@ def posterior_mean(gp, a):
 
 grad_mean = jax.grad(posterior_mean, argnums=1)
 
-posterior_batch = jax.vmap(posterior, in_axes=(None, 0))
 grad_mean_batch = jax.vmap(grad_mean, in_axes=(None, 0))

@@ -1,0 +1,84 @@
+"""JAX-native analytic constraint surface — Eq. (1)-(4) + penalty Eq. (11).
+
+Mirror of the numpy ``CostModel``/``SplitInferenceProblem`` math with the
+per-layer profile precomputed into device arrays, so the penalty can be
+evaluated *inside* a jitted acquisition program (grid scoring, the
+``lax.fori_loop`` refinement, and the vmapped batch engine) with zero host
+round-trips. Non-finite penalties (deep-fade frames where the achievable
+rate underflows) are capped at ``PENALTY_CAP`` to keep gradients usable,
+matching ``SplitInferenceProblem.penalty_batch``.
+
+A scenario's parameters are a flat dict of jnp arrays (a pytree), so S
+scenarios stack into one batched pytree for ``jax.vmap``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+PENALTY_CAP = 1e6
+
+
+def make_params(problem) -> dict:
+    """Precompute per-layer profile arrays for a ``SplitInferenceProblem``.
+
+    Index ``l`` (1..L) into the ``(L+1,)`` arrays is the split layer;
+    index 0 is the (unused) transmit-raw-input split.
+    """
+    cm = problem.cm
+    prof = cm.profile
+    ls = jnp.arange(prof.n_layers + 1)
+    gain_lin = 10.0 ** (problem.gain_db / 10.0)
+    return dict(
+        dev_energy=jnp.asarray(cm.device_energy_j(ls), jnp.float32),
+        dev_delay=jnp.asarray(cm.device_delay_s(ls), jnp.float32),
+        srv_delay=jnp.asarray(cm.server_delay_s(ls), jnp.float32),
+        tx_bits=jnp.asarray(cm.tx_bits(ls), jnp.float32),
+        gain_lin=jnp.float32(gain_lin),
+        noise_w=jnp.float32(cm.link.noise_power_w),
+        bandwidth_hz=jnp.float32(cm.link.bandwidth_hz),
+        e_max=jnp.float32(cm.budgets.e_max_j),
+        tau_max=jnp.float32(cm.budgets.tau_max_s),
+        p_min=jnp.float32(problem.p_min),
+        p_max=jnp.float32(problem.p_max),
+        n_layers=jnp.float32(prof.n_layers),
+    )
+
+
+def stack_params(params_list) -> dict:
+    """Stack per-scenario param dicts into one batched pytree (S, ...).
+
+    All scenarios must share the same profile length (same architecture);
+    mixed-architecture batches are an open item (pad-to-max layout).
+    """
+    keys = params_list[0].keys()
+    return {k: jnp.stack([p[k] for p in params_list]) for k in keys}
+
+
+def denormalize(params, a):
+    """a: (..., 2) normalized -> (layer index int32, power watts)."""
+    a = jnp.clip(a, 0.0, 1.0)
+    p = params["p_min"] + a[..., 0] * (params["p_max"] - params["p_min"])
+    lf = jnp.rint(1.0 + a[..., 1] * (params["n_layers"] - 1.0))
+    li = jnp.clip(lf, 1.0, params["n_layers"]).astype(jnp.int32)
+    return li, p
+
+
+def energy_delay(params, li, p):
+    """Total energy (J) and delay (s) at split-layer index li, power p."""
+    snr = p * params["gain_lin"] / params["noise_w"]
+    rate = params["bandwidth_hz"] * jnp.log2(1.0 + snr)
+    bits = params["tx_bits"][li]
+    tx_delay = bits / jnp.maximum(rate, 1e-30)
+    e = params["dev_energy"][li] + p * tx_delay
+    t = params["dev_delay"][li] + tx_delay + params["srv_delay"][li]
+    return e, t
+
+
+def penalty(params, a):
+    """Eq. (11): ReLU'd budget violations, capped (inf-safe)."""
+    li, p = denormalize(params, a)
+    e, t = energy_delay(params, li, p)
+    pen = (jnp.maximum(0.0, e - params["e_max"])
+           + jnp.maximum(0.0, t - params["tau_max"]))
+    pen = jnp.where(jnp.isnan(pen), PENALTY_CAP, pen)
+    return jnp.minimum(pen, PENALTY_CAP)

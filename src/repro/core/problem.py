@@ -140,6 +140,16 @@ class SplitInferenceProblem:
     def feasible(self, a) -> bool:
         return self.penalty(a) == 0.0
 
+    def jax_params(self) -> dict:
+        """Device-resident analytic constraint surface (see ``jax_cost``),
+        cached per channel state so jitted acquisition programs can take it
+        as a traced argument."""
+        from repro.core import jax_cost
+        cached = getattr(self, "_jax_params", None)
+        if cached is None or cached[0] != self.gain_db:
+            self._jax_params = (self.gain_db, jax_cost.make_params(self))
+        return self._jax_params[1]
+
     # --- utility oracle -----------------------------------------------------
     def _accuracy(self, l: int, p: float) -> Tuple[float, float]:
         """Returns (smooth utility, quantized reported accuracy)."""

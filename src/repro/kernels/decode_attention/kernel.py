@@ -15,6 +15,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax<0.6 names this TPUCompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 NEG_INF = -1e30
 
 
@@ -85,7 +89,7 @@ def decode_attention_kernel(q, k, v, kv_pos, q_pos, *, window: int = 0,
             pltpu.VMEM((1,), jnp.float32),
             pltpu.VMEM((hd,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q_pos, q, k, v, kv_pos)

@@ -1,0 +1,2 @@
+from repro.kernels.matern_score.ops import matern_score  # noqa: F401
+from repro.kernels.matern_score.ref import matern_score_ref  # noqa: F401

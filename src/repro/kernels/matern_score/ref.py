@@ -1,0 +1,26 @@
+"""Reference (pure-jnp) batched Matérn-5/2 cross-kernel + masked mat-vec
+scoring: the standardized GP posterior mean of every candidate in every
+scenario, ``(S, N_cand)`` from the scenarios' fitted ``alpha`` vectors.
+
+This is the semantics oracle for the Pallas kernel and the fast path on
+non-TPU backends (XLA fuses it reasonably; the Pallas kernel additionally
+keeps the ``(N_cand, n)`` tile in VMEM so the cross-kernel matrix never
+round-trips through HBM).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gp import matern52
+
+
+def matern_score_ref(cand, x, alpha, mask, ls, sv):
+    """cand (S,N,d), x (S,n,d), alpha (S,n), mask (S,n), ls (S,), sv (S,)
+    -> scores (S,N): masked cross-kernel mat-vec k(cand, x) @ alpha."""
+
+    def one(c, xs, al, m, l, s):
+        k = matern52(c, xs, l, s) * m.astype(c.dtype)[None, :]
+        return k @ al
+
+    return jax.vmap(one)(cand, x, alpha, jnp.asarray(mask), ls, sv)

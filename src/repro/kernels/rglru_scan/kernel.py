@@ -15,6 +15,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax<0.6 names this TPUCompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 
 def _kernel(a_ref, b_ref, h0_ref, h_ref, hlast_ref, h_scr, *,
             chunk: int, nc: int):
@@ -57,7 +61,7 @@ def rglru_scan_kernel(a, b, h0, *, chunk: int = 256, block_r: int = 512,
         out_shape=[jax.ShapeDtypeStruct((B, S, R), a.dtype),
                    jax.ShapeDtypeStruct((B, R), jnp.float32)],
         scratch_shapes=[pltpu.VMEM((br,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b, h0)

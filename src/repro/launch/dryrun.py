@@ -171,6 +171,14 @@ def _make_ctx_for(cfg, mesh, shape, fsdp_mode: str = "always",
     return ctx
 
 
+def _cost_dict(ca) -> dict:
+    """Normalize Compiled.cost_analysis() across jax versions (0.4.x
+    returns a one-element list of dicts, >=0.5 returns the dict)."""
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def _rwkv_step_flops(cfg, batch_local: int, heads_local: int) -> float:
     """Per-time-step wkv flops (per device), measured from XLA itself."""
     hd = cfg.rwkv_head_dim
@@ -185,7 +193,7 @@ def _rwkv_step_flops(cfg, batch_local: int, heads_local: int) -> float:
     args = (sh((B, H, hd, hd), jnp.float32),) + \
         tuple(sh((B, H, hd), jnp.float32) for _ in range(4)) + \
         (sh((H, hd), jnp.float32),)
-    c = jax.jit(step).lower(*args).compile().cost_analysis()
+    c = _cost_dict(jax.jit(step).lower(*args).compile().cost_analysis())
     return float(c.get("flops", 0.0))
 
 
@@ -215,7 +223,7 @@ def measure_analysis(cfg, shape, mesh, fsdp_mode: str = "always",
         ctx = _make_ctx_for(c2, mesh, shape, fsdp_mode, seq_parallel)
         lowered = _lower_cell(c2, shape, ctx, mesh)
         compiled = lowered.compile()
-        ca = compiled.cost_analysis() or {}
+        ca = _cost_dict(compiled.cost_analysis())
         coll = _collective_bytes(compiled.as_text())
         return (float(ca.get("flops", 0.0)),
                 float(ca.get("bytes accessed", 0.0)), coll)
@@ -299,7 +307,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled.cost_analysis())
     # collectives only exist post-SPMD-partitioning -> compiled HLO.
     # NOTE: raw counts below see scan bodies once; the `analysis` block
     # holds the depth-extrapolated numbers §Roofline uses.

@@ -40,7 +40,9 @@ def build_problem(cfg, seq: int, budgets: Budgets = None, executor=None,
         e_anchor = float(cm.energy_j(l_q, p_max, gain_db))
         budgets = Budgets(e_max_j=2.0 * e_anchor,
                           tau_max_s=float(1.25 * delays[best]))
-        cm = CostModel(prof, budgets=budgets)
+    # (re)build with the effective budgets — caller-supplied ones included,
+    # which the pre-engine code silently dropped
+    cm = CostModel(prof, budgets=budgets)
     pb = SplitInferenceProblem(cm, gain_db, executor=executor, p_max=p_max)
     return pb
 
@@ -70,6 +72,12 @@ def main(argv=None):
                            min(l, exec_cfg.n_layers), p))
     bo = BayesSplitEdge(pb, budget=args.budget)
     res = bo.run(seed=0)
+    if res.best_a is None:
+        print(f"[serve] {args.arch}: no feasible (split, power) found "
+              f"within {res.n_evals} evals — budgets E<={pb.cm.budgets.e_max_j} J"
+              f" tau<={pb.cm.budgets.tau_max_s} s are unsatisfiable on this "
+              f"channel; not starting the serving loop")
+        return
     l, p = pb.denormalize(res.best_a)
     e, t = pb.constraint_values(res.best_a)
     print(f"[serve] {args.arch}: split l={l}/{cfg.n_layers} "

@@ -86,6 +86,63 @@ def test_ei_nonnegative_and_monotone_in_mu(mu, sigma, best):
     assert e2 >= e1 - 1e-5
 
 
+def test_ei_zero_sigma_is_finite():
+    """sigma -> 0 must not NaN/Inf the acquisition (a zero-variance
+    posterior otherwise silently wins or poisons the argmax)."""
+    for mu in (-1.0, 0.0, 2.5):
+        for sigma in (0.0, 1e-30, 1e-9):
+            e = float(expected_improvement(jnp.float32(mu),
+                                           jnp.float32(sigma),
+                                           jnp.float32(0.5)))
+            assert np.isfinite(e)
+            assert e >= -1e-6
+    # EI at zero variance degenerates to ReLU(mu - best)
+    assert float(expected_improvement(
+        jnp.float32(2.0), jnp.float32(0.0), jnp.float32(0.5))
+    ) == pytest.approx(1.5, abs=1e-5)
+    assert float(expected_improvement(
+        jnp.float32(-2.0), jnp.float32(0.0), jnp.float32(0.5))
+    ) == pytest.approx(0.0, abs=1e-5)
+
+
+def test_zero_variance_posterior_scores_finite():
+    """Degenerate GP (identical targets => ~zero posterior variance
+    everywhere) must still produce finite hybrid scores."""
+    from repro.core.acquisition import hybrid_scores
+    gp = _fit_gp(np.array([[0.4, 0.4], [0.6, 0.6]]), np.array([1.0, 1.0]),
+                 gpm.GPConfig(fit_steps=1))
+    cand = jnp.asarray(np.random.default_rng(0).random((16, 2)))
+    s = np.asarray(hybrid_scores(gp, cand, 1.0, jnp.zeros(16), 1.0, 0.1,
+                                 2.0, 2.0, float(gp["y_sigma"])))
+    assert np.all(np.isfinite(s))
+
+
+def test_maximize_grid_consistent_argmax():
+    """Regression for the former `pen` name shadowing in maximize: with
+    refinement disabled, maximize must return exactly the candidate-block
+    argmax of the hybrid scores."""
+    from repro.core.acquisition import (assemble_candidates, candidate_grid,
+                                        hybrid_scores, maximize)
+    from repro.core import jax_cost
+
+    pb = default_vgg19_problem()
+    rng = np.random.default_rng(5)
+    xs = rng.random((10, 2))
+    ys = 80.0 + 5.0 * rng.random(10)
+    gp = _fit_gp(xs, ys)
+    w = AcqWeights()
+    grid = candidate_grid(32)
+    a = maximize(gp, pb, w, t_norm=0.0, best_feasible=84.0, grid=grid,
+                 refine_steps=0)
+    cand = assemble_candidates(pb, grid, None, True)
+    pen = jax_cost.penalty(pb.jax_params(),
+                           jnp.asarray(cand, jnp.float32))
+    scores = np.asarray(hybrid_scores(
+        gp, jnp.asarray(cand, jnp.float32), jnp.float32(84.0), pen,
+        w.lam_base0, w.lam_g0, w.lam_p, w.beta, float(gp["y_sigma"])))
+    np.testing.assert_allclose(a, cand[int(np.argmax(scores))], atol=1e-6)
+
+
 def test_schedule_decays_exponentially():
     assert schedule(1.0, 0.1, 0.0) == pytest.approx(1.0)
     assert schedule(1.0, 0.1, 1.0) == pytest.approx(0.1)
@@ -162,6 +219,25 @@ def test_bo_respects_budget_and_history():
     res = BasicBO(pb, budget=15).run(seed=1)
     assert res.n_evals <= 15
     assert len(pb.history) == res.n_evals
+
+
+def test_no_feasible_solution_is_explicit():
+    """Impossible energy budget: the optimizer must report best_a=None
+    (not a fabricated origin point) with -inf utility and no feasible
+    evals."""
+    from repro.core.cost_model import Budgets, CostModel
+    from repro.core.problem import SplitInferenceProblem
+    from repro.core.profiles import vgg19_profile
+
+    gain = default_vgg19_problem().gain_db
+    pb = SplitInferenceProblem(
+        CostModel(vgg19_profile(), budgets=Budgets(e_max_j=1e-9)), gain)
+    res = BayesSplitEdge(pb, budget=12).run(seed=0)
+    assert res.best_a is None
+    assert res.best_utility == -np.inf
+    assert res.best_accuracy == 0.0
+    assert not any(res.feasible)
+    assert all(v == 0.0 for v in res.incumbent_trace)
 
 
 def test_resnet_pair_converges():

@@ -18,7 +18,10 @@ from repro.train.optimizer import adafactor, adamw, cosine_schedule
 def _fake_mesh(shape, axes):
     """AbstractMesh-backed spec checks (no devices needed)."""
     from jax.sharding import AbstractMesh
-    return AbstractMesh(shape, axes)
+    try:
+        return AbstractMesh(shape, axes)       # jax >= 0.5 signature
+    except TypeError:                          # jax 0.4.x: ((name, size), ...)
+        return AbstractMesh(tuple(zip(axes, shape)))
 
 
 MESHES = [((16, 16), ("data", "model")),

@@ -1,0 +1,63 @@
+#!/usr/bin/env python
+"""CI gate for the BO engine: runs benchmarks/bench_engine.py in a small
+smoke configuration and fails (exit 1) if
+
+  * the batched engine is slower than the sequential jit-hoisted loop, or
+  * the BO iteration loop re-jits after warmup (per-iteration compile
+    count / trace-cache size not flat), or
+  * the batched engine diverges from the sequential accuracies.
+
+Usage: PYTHONPATH=src python tools/bench_check.py [--scenarios 4]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenarios", type=int, default=4)
+    ap.add_argument("--budget", type=int, default=16)
+    ap.add_argument("--repeats", type=int, default=2)
+    args = ap.parse_args()
+
+    from benchmarks.bench_engine import run
+
+    # legacy baseline disabled: the gate compares against the current
+    # sequential loop, which is the stricter bar
+    r = run(n_scenarios=args.scenarios, budget=args.budget,
+            repeats=args.repeats, n_legacy=0, save=False)
+
+    failures = []
+    if r["batched_s"] > r["sequential_s"]:
+        failures.append(
+            f"batched path slower than sequential: "
+            f"{r['batched_s']:.3f}s > {r['sequential_s']:.3f}s")
+    if not r["zero_rejits_after_warmup"]:
+        failures.append(
+            f"BO loop re-jits after warmup: per-iteration compile counts "
+            f"{r['per_iteration_compile_counts']}, trace caches "
+            f"{r['per_iteration_trace_cache_sizes']}")
+    if r["accuracies"]["sequential"] != r["accuracies"]["batched"]:
+        failures.append(
+            f"batched/sequential accuracy mismatch: "
+            f"{r['accuracies']}")
+
+    print(f"bench_check: {args.scenarios} scenarios, budget {args.budget}: "
+          f"sequential {r['sequential_s']:.2f}s, batched {r['batched_s']:.2f}s "
+          f"({r['speedup_vs_sequential']}x), "
+          f"zero-rejits={r['zero_rejits_after_warmup']}")
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}", file=sys.stderr)
+        return 1
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
