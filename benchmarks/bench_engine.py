@@ -1,9 +1,11 @@
 """BO engine benchmark: sequential ``BayesSplitEdge`` loop vs the
-device-resident ``BatchedBayesSplitEdge`` over a seed x gain x budget
-scenario sweep. Emits ``BENCH_bo_engine.json`` (repo root + artifacts/)
-with wall-clock, speedup, per-iteration compile counts (must be flat after
-warmup => zero re-jits in the BO loop) and candidates/sec, so the speedup
-is tracked across PRs.
+device-resident ``BatchedBayesSplitEdge`` (2 dispatches/iteration) vs the
+whole-run ``WholeRunBayesSplitEdge`` (1 dispatch/run, warm-started GP
+refits, optional scenario sharding) over a seed x gain x budget scenario
+sweep. Emits ``BENCH_bo_engine.json`` (repo root + artifacts/) with
+wall-clock, speedups, per-iteration compile counts (must be flat after
+warmup => zero re-jits in the BO loop), warm-start fit-step accounting
+and candidates/sec, so the speedup is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -17,7 +19,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import save_json
-from repro.core import BayesSplitEdge, BatchedBayesSplitEdge, Scenario
+from repro.core import (BayesSplitEdge, BatchedBayesSplitEdge, Scenario,
+                        WholeRunBayesSplitEdge)
 from repro.core.acquisition import compile_counters
 from repro.core.batch_bo import make_vgg19_scenarios
 
@@ -193,6 +196,57 @@ def run(n_scenarios: int = 16, budget: int = 20, repeats: int = 1,
                           and per_iter_caches[-1] == per_iter_caches[0]))
 
     seq_s, bat_s = float(np.min(t_seq)), float(np.min(t_bat))
+
+    # -- whole-run single-dispatch engine ------------------------------------
+    WholeRunBayesSplitEdge(_scenario_grid(n_scenarios, budget)).run()
+    c0 = mon.count
+    t_wr = []
+    for _ in range(repeats):
+        eng = WholeRunBayesSplitEdge(_scenario_grid(n_scenarios, budget))
+        t0 = time.time()
+        wr_results = eng.run()
+        t_wr.append(time.time() - t0)
+    wholerun_compiles = mon.count - c0         # must be 0 after warmup
+    wholerun_s = float(np.min(t_wr))
+    fit_stats = eng.fit_cost_stats()
+
+    def _same_results(r1, r2, atol=0.5):
+        # sharded results match unsharded within the studied trace
+        # tolerance (XLA may reassociate f32 reductions per shard size)
+        return all(a.n_evals == b.n_evals
+                   and a.best_accuracy == b.best_accuracy
+                   and np.allclose(a.incumbent_trace, b.incumbent_trace,
+                                   atol=atol)
+                   for a, b in zip(r1, r2))
+
+    # -- scenario-sharded whole run (needs >1 device, e.g. CI under
+    #    XLA_FLAGS=--xla_force_host_platform_device_count=8) ----------------
+    n_devices = len(jax.devices())
+    sharded_s = sharded_match = scaling_frac = None
+    if n_devices > 1:
+        from repro.distributed.sharding import scenario_mesh
+        mesh = scenario_mesh()
+        WholeRunBayesSplitEdge(_scenario_grid(n_scenarios, budget),
+                               mesh=mesh).run()
+        t_sh = []
+        for _ in range(repeats):
+            t0 = time.time()
+            sh_results = WholeRunBayesSplitEdge(
+                _scenario_grid(n_scenarios, budget), mesh=mesh).run()
+            t_sh.append(time.time() - t0)
+        sharded_s = float(np.min(t_sh))
+        sharded_match = _same_results(wr_results, sh_results)
+        if n_scenarios >= n_devices:
+            # weak scaling: D shards should run in ~the time of one
+            shard_scs = _scenario_grid(n_scenarios // n_devices, budget)
+            WholeRunBayesSplitEdge(shard_scs).run()
+            t_one = []
+            for _ in range(repeats):
+                t0 = time.time()
+                WholeRunBayesSplitEdge(
+                    _scenario_grid(n_scenarios // n_devices, budget)).run()
+                t_one.append(time.time() - t0)
+            scaling_frac = float(np.min(t_one)) / sharded_s
     n_cand = 64 * 64 + scs[0].problem.L + 45
     evals = sum(r.n_evals for r in bat_results)
 
@@ -226,6 +280,24 @@ def run(n_scenarios: int = 16, budget: int = 20, repeats: int = 1,
         # 'after', same per-scenario loop: jit-hoisted single-dispatch path
         sequential_s=round(seq_s, 4),
         batched_s=round(bat_s, 4),
+        # whole-run engine: init + all iterations as ONE dispatch,
+        # warm-started adaptive GP refits
+        wholerun_s=round(wholerun_s, 4),
+        speedup_wholerun_vs_batched=round(bat_s / wholerun_s, 2),
+        speedup_wholerun_vs_seed=(None if legacy_s is None
+                                  else round(legacy_s / wholerun_s, 2)),
+        warmstart_fit_steps_mean=round(fit_stats["warm_steps_mean"], 2),
+        wholerun_fit_calls=fit_stats["fit_calls"],
+        wholerun_extra_compiles=wholerun_compiles,
+        # scenario sharding (None on single-device hosts)
+        sharded_s=None if sharded_s is None else round(sharded_s, 4),
+        n_devices=n_devices,
+        # weak-scaling ceiling on forced-host-device runs is
+        # cpu_count / n_devices (shards share the physical cores)
+        cpu_count=os.cpu_count(),
+        sharded_matches_unsharded=sharded_match,
+        sharded_linear_scaling_frac=(None if scaling_frac is None
+                                     else round(scaling_frac, 3)),
         speedup_vs_seed=(None if legacy_s is None
                          else round(legacy_s / bat_s, 2)),
         speedup_vs_sequential=round(seq_s / bat_s, 2),
@@ -242,7 +314,8 @@ def run(n_scenarios: int = 16, budget: int = 20, repeats: int = 1,
         total_evals_batched=evals,
         accuracies=dict(
             sequential=[r.best_accuracy for r in seq_results],
-            batched=[r.best_accuracy for r in bat_results]),
+            batched=[r.best_accuracy for r in bat_results],
+            wholerun=[r.best_accuracy for r in wr_results]),
         compile_counters=compile_counters(),
     )
     if save:
@@ -265,12 +338,21 @@ def main():
     seed_s = r["sequential_seed_s"]
     print(f"seed-sequential {'n/a' if seed_s is None else f'{seed_s:.2f}s'}"
           f"  sequential {r['sequential_s']:.2f}s"
-          f"  batched {r['batched_s']:.2f}s")
+          f"  batched {r['batched_s']:.2f}s"
+          f"  wholerun {r['wholerun_s']:.2f}s")
     vs_seed = (f"{r['speedup_vs_seed']}x" if r["speedup_vs_seed"] is not None
                else "n/a")
     print(f"speedup vs seed {vs_seed}, "
           f"vs jit-hoisted sequential {r['speedup_vs_sequential']}x  "
           f"zero-rejits={r['zero_rejits_after_warmup']}")
+    print(f"wholerun vs batched {r['speedup_wholerun_vs_batched']}x  "
+          f"warm-fit steps {r['warmstart_fit_steps_mean']} "
+          f"(cold 150)  extra-compiles {r['wholerun_extra_compiles']}")
+    if r["sharded_s"] is not None:
+        frac = r["sharded_linear_scaling_frac"]
+        print(f"sharded {r['sharded_s']:.2f}s on {r['n_devices']} devices  "
+              f"match={r['sharded_matches_unsharded']}  "
+              f"weak-scaling {'n/a' if frac is None else f'{frac:.2f}'}")
     print(f"matern-score {r['matern_score_candidates_per_sec']:,} cand/s  "
           f"BO loop {r['bo_candidates_per_sec']:,} cand/s")
     return r

@@ -1,68 +1,79 @@
 """Fig 9: acquisition-component ablation — cumulative regret of the full
 hybrid vs each component removed (plus our beyond-paper feasible-only-GP
-component)."""
+component). ``--batched`` runs each variant's seed sweep as one vmapped
+program via the batched engine (it was the last paper figure still
+driving the sequential loop)."""
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
 from benchmarks.common import cumulative_regret, fit_decay_exponent, save_json
-from repro.core import BayesSplitEdge, default_vgg19_problem
+from repro.core import (BatchedBayesSplitEdge, BayesSplitEdge, Scenario,
+                        default_vgg19_problem)
+
+BUDGET = 25
 
 
-def _variant(**kw):
-    def mk(pb):
-        bo = BayesSplitEdge(pb, budget=25, n_max_repeat=10 ** 9, **kw)
-        return bo
-    return mk
+def _run_variant(n_seeds: int, batched: bool, gp_feasible_only=None, **kw):
+    """One ablation variant across seeds — sequential loop or one batched
+    engine run. ``gp_feasible_only`` applies the beyond-paper flag surgery
+    on either engine."""
+    if batched:
+        scs = [Scenario(default_vgg19_problem(), seed=seed, budget=BUDGET)
+               for seed in range(n_seeds)]
+        eng = BatchedBayesSplitEdge(scs, n_max_repeat=10 ** 9, **kw)
+        if gp_feasible_only is not None:
+            eng.gp_feasible_only = gp_feasible_only
+        return eng.run()
+    out = []
+    for seed in range(n_seeds):
+        bo = BayesSplitEdge(default_vgg19_problem(), budget=BUDGET,
+                            n_max_repeat=10 ** 9, **kw)
+        if gp_feasible_only is not None:
+            bo.gp_feasible_only = gp_feasible_only
+        out.append(bo.run(seed=seed))
+    return out
 
 
-def run(n_seeds: int = 3):
+def _curve(results, u_star):
+    regs = [cumulative_regret(res.utilities, u_star) for res in results]
+    hits = [next((i + 1 for i, a in enumerate(res.accuracies)
+                  if a >= 87.5), None) for res in results]
+    n = min(len(r) for r in regs)
+    avg_cum = np.mean([r[:n] for r in regs], axis=0)
+    avg_reg = avg_cum / np.arange(1, n + 1)
+    return dict(cum_regret=avg_cum.tolist(),
+                decay_exponent=fit_decay_exponent(avg_reg),
+                hits=hits)
+
+
+def run(n_seeds: int = 3, batched: bool = False):
     variants = {
-        "full hybrid (ours)": _variant(),
-        "no gradient term": _variant(use_grad_term=False),
-        "no constraint penalty": _variant(constraint_aware=False),
-        "no weight schedules": _variant(use_schedules=False),
+        "full hybrid (ours)": {},
+        "no gradient term": dict(use_grad_term=False),
+        "no constraint penalty": dict(constraint_aware=False),
+        "no weight schedules": dict(use_schedules=False),
     }
     u_star = default_vgg19_problem().exhaustive_optimum(n_power=301)[1]
     out = {}
-    for name, mk in variants.items():
-        regs, hits = [], []
-        for seed in range(n_seeds):
-            pb = default_vgg19_problem()
-            res = mk(pb).run(seed=seed)
-            regs.append(cumulative_regret(res.utilities, u_star))
-            hit = next((i + 1 for i, a in enumerate(res.accuracies)
-                        if a >= 87.5), None)
-            hits.append(hit)
-        n = min(len(r) for r in regs)
-        avg_cum = np.mean([r[:n] for r in regs], axis=0)
-        avg_reg = avg_cum / np.arange(1, n + 1)
-        # also ablate the beyond-paper feasible-only GP via flag surgery
-        out[name] = dict(cum_regret=avg_cum.tolist(),
-                         decay_exponent=fit_decay_exponent(avg_reg),
-                         hits=hits)
+    for name, kw in variants.items():
+        out[name] = _curve(_run_variant(n_seeds, batched, **kw), u_star)
     # beyond-paper component: GP trained on all (incl. infeasible-0) evals
-    regs, hits = [], []
-    for seed in range(n_seeds):
-        pb = default_vgg19_problem()
-        bo = BayesSplitEdge(pb, budget=25, n_max_repeat=10 ** 9)
-        bo.gp_feasible_only = False
-        res = bo.run(seed=seed)
-        regs.append(cumulative_regret(res.utilities, u_star))
-        hits.append(next((i + 1 for i, a in enumerate(res.accuracies)
-                          if a >= 87.5), None))
-    n = min(len(r) for r in regs)
-    avg_cum = np.mean([r[:n] for r in regs], axis=0)
-    out["GP on all evals (paper's Eq.7 only)"] = dict(
-        cum_regret=avg_cum.tolist(),
-        decay_exponent=fit_decay_exponent(avg_cum / np.arange(1, n + 1)),
-        hits=hits)
+    out["GP on all evals (paper's Eq.7 only)"] = _curve(
+        _run_variant(n_seeds, batched, gp_feasible_only=False), u_star)
     save_json("fig9_ablation.json", out)
     return out
 
 
 def main():
-    out = run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batched", action="store_true",
+                    help="vmap each variant's seed sweep on device")
+    ap.add_argument("--seeds", type=int, default=3)
+    args, _ = ap.parse_known_args()
+    out = run(n_seeds=args.seeds, batched=args.batched)
     print(f"{'variant':38s} {'R_T':>8s} {'decay':>7s} {'hit-iters':>12s}")
     for name, c in out.items():
         print(f"{name:38s} {c['cum_regret'][-1]:8.2f} "

@@ -1,0 +1,62 @@
+"""Single home for the jax-version compatibility points.
+
+The repo pins jax 0.4.37 while the code is written against newer-jax
+APIs; every shim that papers over the difference lives here so the next
+jax bump is a one-file change (the hypothesis test shim stays in
+``tests/_hypothesis_shim.py`` — it is a test-only concern).
+
+Covered points:
+
+* ``shard_map`` — promoted to ``jax.shard_map`` in jax>=0.6; before
+  that it lives in ``jax.experimental.shard_map`` and the ``check_vma``
+  kwarg was named ``check_rep``.
+* ``tpu_compiler_params`` — ``pltpu.CompilerParams`` is named
+  ``TPUCompilerParams`` on jax<0.6.
+* ``abstract_mesh`` / ``mesh_shape`` — ``jax.sharding.AbstractMesh``
+  takes ``(shape, axes)`` on jax>=0.5 but a single axis/size pair tuple
+  on 0.4.x; ``dict(mesh.shape)`` is the portable way to read axis sizes
+  off both ``Mesh`` and ``AbstractMesh``.
+* ``cost_dict`` — ``Compiled.cost_analysis()`` returns a one-element
+  list of dicts on 0.4.x, the dict itself on >=0.5.
+"""
+from __future__ import annotations
+
+try:
+    from jax import shard_map  # type: ignore[attr-defined]  # jax>=0.6
+except ImportError:  # jax<0.6: not yet promoted, check_vma was check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map_exp
+
+    def shard_map(*args, check_vma=None, **kw):
+        if check_vma is not None:
+            kw["check_rep"] = check_vma
+        return _shard_map_exp(*args, **kw)
+
+
+def tpu_compiler_params():
+    """The Pallas-TPU compiler-params class (jax<0.6 names it
+    ``TPUCompilerParams``). Lazy so importing :mod:`repro.compat` does
+    not pull in the Pallas TPU backend."""
+    from jax.experimental.pallas import tpu as pltpu
+    return getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def abstract_mesh(shape, axes):
+    """``AbstractMesh(shape, axes)`` across the 0.4.x/0.5 signature flip."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(shape, axes)       # jax >= 0.5 signature
+    except TypeError:                          # jax 0.4.x
+        return AbstractMesh(tuple(zip(axes, shape)))
+
+
+def mesh_shape(mesh) -> dict:
+    """Axis-name -> size dict; works for both Mesh and AbstractMesh."""
+    return dict(mesh.shape)
+
+
+def cost_dict(ca) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across jax versions (0.4.x
+    returns a one-element list of dicts, >=0.5 returns the dict)."""
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}

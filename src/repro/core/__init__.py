@@ -4,6 +4,7 @@ over the analytic cost substrate."""
 from repro.core.batch_bo import (  # noqa: F401
     BatchedBayesSplitEdge, Scenario, make_vgg19_scenarios,
 )
+from repro.core.wholerun import WholeRunBayesSplitEdge  # noqa: F401
 from repro.core.bo import BasicBO, BayesSplitEdge, BOResult  # noqa: F401
 from repro.core.cost_model import (  # noqa: F401
     Budgets, CostModel, DeviceParams, LayerProfile, ServerParams,

@@ -68,8 +68,7 @@ def hybrid_scores(gp, cand, best_feasible, penalties, lam_base, lam_g,
     EI/UCB/grad terms operate on the standardized scale (divide by the
     GP's y std) so the weights are problem-scale independent.
     """
-    mu, sigma = gpm.posterior_batch(gp, cand)
-    g = gpm.grad_mean_batch(gp, cand)
+    mu, sigma, g = gpm.posterior_with_grad_batch(gp, cand)
     # safe norm: d||g||/dg at g=0 is NaN otherwise (differentiated again
     # during acquisition refinement)
     gn = jnp.sqrt(jnp.sum(jnp.square(g), axis=-1) + 1e-12) / y_scale
@@ -99,6 +98,41 @@ def local_candidates(problem, incumbent: Optional[np.ndarray],
     return np.array(out)
 
 
+def local_candidates_dev(params, incumbent, has_incumbent, fill):
+    """Device mirror of :func:`local_candidates`: ``(N_LOCAL, 2)`` block of
+    +-2 layer x 9 power neighbors of the incumbent, or ``fill`` duplicates
+    when there is no incumbent yet. Shapes are fixed, so it can run inside
+    the whole-run ``lax.while_loop`` (``core/wholerun.py``)."""
+    l0, p0 = jax_cost.denormalize(params, incumbent)
+    lo = jnp.maximum(params["p_min"], p0 - 0.1)
+    hi = jnp.minimum(params["p_max"], p0 + 0.1)
+    ps = lo + (hi - lo) * (jnp.arange(9, dtype=jnp.float32) / 8.0)   # (9,)
+    blocks = []
+    l_max = params["n_layers"].astype(jnp.int32)
+    for dl in (-2, -1, 0, 1, 2):
+        l = jnp.clip(l0 + dl, 1, l_max)
+        blocks.append(jax_cost.normalize(params, jnp.broadcast_to(l, (9,)),
+                                         ps))
+    loc = jnp.concatenate(blocks, axis=0)                            # (45, 2)
+    return jnp.where(has_incumbent, loc, jnp.broadcast_to(fill, loc.shape))
+
+
+def assemble_candidates_dev(params, grid, boundary, incumbent,
+                            has_incumbent, constraint_aware: bool):
+    """Device mirror of :func:`assemble_candidates`.
+
+    ``grid (G,2)`` is shared; ``boundary (L,2)`` is the per-scenario
+    feasibility-boundary block pre-padded with ``grid[0]`` on the host
+    (it depends only on the channel). Returns ``(G + L + N_LOCAL, 2)``.
+    """
+    fill = grid[0]
+    if constraint_aware:
+        loc = local_candidates_dev(params, incumbent, has_incumbent, fill)
+    else:
+        loc = jnp.broadcast_to(fill, (N_LOCAL, 2))
+    return jnp.concatenate([grid, boundary, loc], axis=0)
+
+
 def assemble_candidates(problem, grid: np.ndarray,
                         incumbent: Optional[np.ndarray],
                         constraint_aware: bool,
@@ -125,16 +159,18 @@ def assemble_candidates(problem, grid: np.ndarray,
 
 
 def _maximize_core(gp, params, cand, best_feasible, lam_base, lam_g, lam_p,
-                   beta, refine_lr, refine_steps):
+                   beta, refine_lr, refine_steps, penalties=None):
     """Grid-argmax + projected-gradient refinement, all on device.
 
     Returns (best_a, best_score, grid_scores). The penalty at the moved
     point is re-evaluated analytically via ``jax_cost`` each step (treated
     as locally constant for the gradient, matching Eq. 12's utility-driven
-    ascent direction).
+    ascent direction). ``penalties`` takes precomputed Eq.-(11) values for
+    ``cand`` (the whole-run engine caches the static grid/boundary slots).
     """
     y_scale = gp["y_sigma"]
-    penalties = jax_cost.penalty(params, cand)
+    if penalties is None:
+        penalties = jax_cost.penalty(params, cand)
     scores = hybrid_scores(gp, cand, best_feasible, penalties, lam_base,
                            lam_g, lam_p, beta, y_scale)
     a0 = cand[jnp.argmax(scores)]
@@ -143,24 +179,29 @@ def _maximize_core(gp, params, cand, best_feasible, lam_base, lam_g, lam_p,
         return hybrid_scores(gp, a[None], best_feasible, pen_const[None],
                              lam_base, lam_g, lam_p, beta, y_scale)[0]
 
-    grad1 = jax.grad(score1)
+    vag1 = jax.value_and_grad(score1)
 
+    # each visited point is scored exactly once: the loop body evaluates
+    # score+gradient together (one forward instead of grad-then-rescore),
+    # and the last moved point is scored after the loop
     def body(_, carry):
         a, best_a, best_s, alive = carry
-        g = grad1(a, jax_cost.penalty(params, a))
+        s, g = vag1(a, jax_cost.penalty(params, a))
+        better = alive & (s > best_s)
+        best_a = jnp.where(better, a, best_a)
+        best_s = jnp.where(better, s, best_s)
         ok = alive & jnp.all(jnp.isfinite(g))
         a = jnp.where(ok, jnp.clip(a + refine_lr * g, 0.0, 1.0), a)
-        s = score1(a, jax_cost.penalty(params, a))
-        better = ok & (s > best_s)
-        return (a,
-                jnp.where(better, a, best_a),
-                jnp.where(better, s, best_s),
-                ok)
+        return a, best_a, best_s, ok
 
-    s0 = score1(a0, jax_cost.penalty(params, a0))
-    _, best_a, best_s, _ = jax.lax.fori_loop(
-        0, refine_steps, body, (a0, a0, s0, jnp.bool_(True)))
-    return best_a, best_s, scores
+    # best_s starts at -inf: the first body iteration scores a0 itself,
+    # so no pre-loop evaluation is needed
+    a_f, best_a, best_s, alive = jax.lax.fori_loop(
+        0, refine_steps, body, (a0, a0, -jnp.inf, jnp.bool_(True)))
+    s_f = score1(a_f, jax_cost.penalty(params, a_f))
+    better = alive & (s_f > best_s)
+    return (jnp.where(better, a_f, best_a),
+            jnp.where(better, s_f, best_s), scores)
 
 
 _maximize_jit = jax.jit(_maximize_core, static_argnames=("refine_steps",))
@@ -209,9 +250,15 @@ def maximize(gp, problem, weights: AcqWeights, t_norm: float,
 def compile_counters() -> dict:
     """Tracing-cache sizes of the hot-path jitted programs; flat counts
     across BO iterations == zero re-jits after warmup."""
-    return {
+    out = {
         "gp.fit": gpm.fit._cache_size(),
         "gp.fit_batch": gpm.fit_batch._cache_size(),
         "acq.maximize": _maximize_jit._cache_size(),
         "acq.maximize_batch": maximize_batch._cache_size(),
     }
+    import sys
+    wr = sys.modules.get("repro.core.wholerun")
+    if wr is not None:       # lazy: wholerun imports this module
+        out["wholerun"] = wr.whole_run._cache_size()
+        out["wholerun_sharded"] = wr.whole_run_sharded._cache_size()
+    return out

@@ -1,4 +1,5 @@
-"""JAX-native analytic constraint surface — Eq. (1)-(4) + penalty Eq. (11).
+"""JAX-native analytic scenario surface — Eq. (1)-(4), penalty Eq. (11),
+and the calibrated utility oracle (DESIGN.md §6).
 
 Mirror of the numpy ``CostModel``/``SplitInferenceProblem`` math with the
 per-layer profile precomputed into device arrays, so the penalty can be
@@ -7,6 +8,12 @@ evaluated *inside* a jitted acquisition program (grid scoring, the
 round-trips. Non-finite penalties (deep-fade frames where the achievable
 rate underflows) are capped at ``PENALTY_CAP`` to keep gradients usable,
 matching ``SplitInferenceProblem.penalty_batch``.
+
+Beyond the constraints, this module mirrors the full evaluation step —
+:func:`utility` (the calibrated deterministic oracle), :func:`normalize`
+and :func:`project_feasible` (analytic min-feasible power lift) — which is
+what lets the *whole* Algorithm-1 loop (``core/wholerun.py``) run as one
+device program with no host round-trip per evaluation.
 
 A scenario's parameters are a flat dict of jnp arrays (a pytree), so S
 scenarios stack into one batched pytree for ``jax.vmap``.
@@ -28,7 +35,16 @@ def make_params(problem) -> dict:
     prof = cm.profile
     ls = jnp.arange(prof.n_layers + 1)
     gain_lin = 10.0 ** (problem.gain_db / 10.0)
+    u = problem.util
     return dict(
+        # utility-oracle calibration (ignored by penalty/energy_delay)
+        base_acc=jnp.float32(u.base_acc),
+        bump=jnp.float32(u.bump),
+        peak_layer=jnp.float32(u.peak_layer),
+        sigma_u=jnp.float32(u.sigma),
+        eps_energy=jnp.float32(u.eps_energy),
+        quantum=jnp.float32(u.quantum),
+        completion_floor=jnp.float32(u.completion_floor),
         dev_energy=jnp.asarray(cm.device_energy_j(ls), jnp.float32),
         dev_delay=jnp.asarray(cm.device_delay_s(ls), jnp.float32),
         srv_delay=jnp.asarray(cm.server_delay_s(ls), jnp.float32),
@@ -82,3 +98,65 @@ def penalty(params, a):
            + jnp.maximum(0.0, t - params["tau_max"]))
     pen = jnp.where(jnp.isnan(pen), PENALTY_CAP, pen)
     return jnp.minimum(pen, PENALTY_CAP)
+
+
+def normalize(params, li, p):
+    """Inverse of :func:`denormalize`: (layer index, power W) -> a in
+    [0,1]^2 (same layout as ``SplitInferenceProblem.normalize``)."""
+    a0 = (p - params["p_min"]) / (params["p_max"] - params["p_min"])
+    a1 = (li.astype(jnp.float32) - 1.0) / (params["n_layers"] - 1.0)
+    return jnp.stack(jnp.broadcast_arrays(a0, a1), axis=-1)
+
+
+def seen_key(p):
+    """``round(p_w, 3)`` — the eval-ledger dedupe key for discrete probes
+    (jnp.round matches Python's round-half-to-even)."""
+    return jnp.round(p * 1000.0) / 1000.0
+
+
+def utility(params, li, p):
+    """The calibrated deterministic oracle (DESIGN.md §6), device-side.
+
+    Mirror of ``SplitInferenceProblem._accuracy`` + the feasibility bit:
+    returns ``(smooth utility, quantized reported accuracy, feasible)``.
+    """
+    e, t = energy_delay(params, li, p)
+    phi = jnp.minimum(1.0, params["tau_max"] / jnp.maximum(t, 1e-9))
+    # deadline truncation: tail skipped, base accuracy retained
+    trunc = params["base_acc"] * jnp.minimum(
+        1.0, phi / params["completion_floor"])
+    acc_trunc = jnp.floor(trunc / params["quantum"]) * params["quantum"]
+    # full completion: feature-robustness bump + energy tie-break
+    bump = params["bump"] * jnp.exp(
+        -0.5 * jnp.square((li.astype(jnp.float32) - params["peak_layer"])
+                          / params["sigma_u"]))
+    raw = params["base_acc"] + bump
+    full_smooth = raw - params["eps_energy"] * e / params["e_max"]
+    acc_full = jnp.floor(raw / params["quantum"] + 1e-9) * params["quantum"]
+    full = phi >= 1.0
+    smooth = jnp.where(full, full_smooth, trunc)
+    acc = jnp.where(full, acc_full, acc_trunc)
+    dead = (e > params["e_max"]) | (phi < params["completion_floor"])
+    feas = (e <= params["e_max"]) & (t <= params["tau_max"])
+    return (jnp.where(dead, 0.0, smooth), jnp.where(dead, 0.0, acc), feas)
+
+
+def project_feasible(params, a, margin: float = 1.02):
+    """Lift the power coordinate to the analytic min-feasible power for
+    the point's layer (identity if already feasible, or if no feasible
+    power exists for that layer) — ``SplitInferenceProblem
+    .project_feasible`` on device."""
+    li, p = denormalize(params, a)
+    e, t = energy_delay(params, li, p)
+    feas = (e <= params["e_max"]) & (t <= params["tau_max"])
+    slack = (params["tau_max"] - params["dev_delay"][li]
+             - params["srv_delay"][li])
+    rate_needed = params["tx_bits"][li] / jnp.maximum(slack, 1e-30)
+    x = 2.0 ** (rate_needed / params["bandwidth_hz"]) - 1.0
+    p_req = x * params["noise_w"] / params["gain_lin"] * margin
+    cand = normalize(params, li, jnp.maximum(p, p_req))
+    lc, pc = denormalize(params, cand)
+    ec, tc = energy_delay(params, lc, pc)
+    cand_ok = ((slack > 0.0) & (p_req <= params["p_max"])
+               & (ec <= params["e_max"]) & (tc <= params["tau_max"]))
+    return jnp.where(~feas & cand_ok, cand, a)

@@ -1,0 +1,529 @@
+"""Whole-run on-device Bayes-Split-Edge: Algorithm 1 as ONE dispatch.
+
+``BatchedBayesSplitEdge`` (PR 1) made each BO iteration two device
+dispatches but kept the Algorithm-1 bookkeeping — eval ledger, probe
+queue, early-stop masking, feasible-only GP filtering — in host Python,
+paying a host<->device round-trip per iteration plus numpy restacking.
+This engine moves that bookkeeping into fixed-shape device arrays stepped
+by a ``lax.while_loop``: an entire S-scenario BO run (init design + all
+<=20 iterations) is a single jitted program launch.
+
+Each loop step performs exactly one evaluation per live scenario —
+either the front of its discrete-probe queue (Alg. 1 mixed-integer local
+search) or the acquisition argmax — so every scenario's eval sequence is
+identical to the host engines'; the host-driven paths remain the
+trace-equivalence oracle (``tests/test_wholerun.py``).
+
+Inside the loop, GP refits are warm-started from the previous
+iteration's hyperparameters with an adaptive step count
+(``gp._fit_core_from``): Adam stops once the MLL gradient norm falls
+below ``GPConfig.warm_gtol``, cutting the ~150-step from-scratch refit
+cost ~5x. Warm starting changes the fit trajectory, so it is gated by an
+equivalence-tolerance study (incumbent-trace divergence bounds as tests)
+and ``warm_start=False`` falls back to bitwise cold-fit behavior.
+
+The leading scenario axis is embarrassingly parallel:
+``run(...)`` with a mesh shards it via ``shard_map`` over a 1-D
+``("scen",)`` mesh — each device steps its own ``while_loop`` over its
+shard with zero collectives, and results gather host-side.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+from repro.compat import shard_map
+from repro.core import gp as gpm
+from repro.core import jax_cost as jc
+from repro.core.acquisition import (REFINE_LR, REFINE_STEPS, AcqWeights,
+                                    _maximize_core, assemble_candidates_dev,
+                                    candidate_grid)
+from repro.core.batch_bo import Scenario
+from repro.core.bo import BOResult, _init_grid
+
+
+@dataclasses.dataclass(frozen=True)
+class WholeRunConfig:
+    """Static (trace-time) shape/flag configuration of the device program."""
+    n_init: int
+    n_max_repeat: int
+    budget_max: int              # eval-ledger length (max budget in batch)
+    n_layers: int
+    constraint_aware: bool
+    gp_feasible_only: bool
+    use_schedules: bool
+    warm_start: bool
+    gp: gpm.GPConfig
+
+
+def _sched(w0, wT, t):
+    """Device mirror of acquisition.schedule: w0 * (wT/w0)^t, 0 if w0<=0."""
+    safe = jnp.where(w0 > 0.0, w0, 1.0)
+    return jnp.where(w0 > 0.0, w0 * (wT / safe) ** t, 0.0)
+
+
+def _sel(pred, new, old):
+    """Per-scenario select with broadcasting over trailing dims."""
+    p = pred.reshape(pred.shape + (1,) * (new.ndim - pred.ndim))
+    return jnp.where(p, new, old)
+
+
+def _init_state(s: int, cfg: WholeRunConfig, dim: int = 2):
+    m, t = cfg.gp.max_points, cfg.budget_max
+    q = t + 2                    # probe queue can never outgrow the budget
+    f32, i32 = jnp.float32, jnp.int32
+    th0 = gpm.init_theta(cfg.gp)
+    return dict(
+        # GP dataset (feasible-only gated numpy mirror of ScenarioState)
+        x=jnp.zeros((s, m, dim), f32), y=jnp.zeros((s, m), f32),
+        mask=jnp.zeros((s, m), bool), n_pts=jnp.zeros((s,), i32),
+        # eval ledger
+        ev_u=jnp.zeros((s, t), f32), ev_acc=jnp.zeros((s, t), f32),
+        ev_feas=jnp.zeros((s, t), bool), ev_trace=jnp.zeros((s, t), f32),
+        ev_l=jnp.full((s, t), -1, i32), ev_pr=jnp.zeros((s, t), f32),
+        n=jnp.zeros((s,), i32),
+        # incumbent
+        best_a=jnp.zeros((s, dim), f32),
+        best_u=jnp.full((s,), -jnp.inf, f32),
+        has_best=jnp.zeros((s,), bool),
+        inc_layer=jnp.full((s,), -1, i32),
+        # discrete-probe queue (Alg. 1 mixed-integer local search)
+        probe_q=jnp.zeros((s, q, dim), f32),
+        probe_n=jnp.zeros((s,), i32),
+        # early-stop masking
+        n_c=jnp.zeros((s,), i32), active=jnp.ones((s,), bool),
+        # warm-start carry + fit-cost accounting
+        theta=jax.tree.map(lambda v: jnp.broadcast_to(v, (s,)).astype(f32),
+                           th0),
+        fit_steps=jnp.zeros((s,), i32), fit_calls=jnp.zeros((s,), i32),
+    )
+
+
+# -- per-scenario Algorithm-1 bookkeeping (vmapped by the callers) ----------
+
+def _observe(st, a, params, cfg: WholeRunConfig):
+    """One oracle evaluation: ledger append, incumbent update, gated GP
+    dataset append, seen-key record (mirror of ScenarioState.observe)."""
+    li, p = jc.denormalize(params, a)
+    u, acc, feas = jc.utility(params, li, p)
+    n = st["n"]
+    newbest = feas & (u > st["best_u"])
+    best_u = jnp.where(newbest, u, st["best_u"])
+    st = dict(st)
+    st["best_u"] = best_u
+    st["best_a"] = jnp.where(newbest, a, st["best_a"])
+    st["has_best"] = st["has_best"] | newbest
+    st["ev_u"] = st["ev_u"].at[n].set(u)
+    st["ev_acc"] = st["ev_acc"].at[n].set(acc)
+    st["ev_feas"] = st["ev_feas"].at[n].set(feas)
+    st["ev_trace"] = st["ev_trace"].at[n].set(
+        jnp.where(jnp.isfinite(best_u), best_u, 0.0))
+    st["ev_l"] = st["ev_l"].at[n].set(li)
+    st["ev_pr"] = st["ev_pr"].at[n].set(jc.seen_key(p))
+    add = feas if cfg.gp_feasible_only else jnp.bool_(True)
+    k = jnp.minimum(st["n_pts"], cfg.gp.max_points - 1)
+    st["x"] = st["x"].at[k].set(jnp.where(add, a, st["x"][k]))
+    st["y"] = st["y"].at[k].set(jnp.where(add, u, st["y"][k]))
+    st["mask"] = st["mask"].at[k].set(st["mask"][k] | add)
+    st["n_pts"] = st["n_pts"] + (
+        add & (st["n_pts"] < cfg.gp.max_points)).astype(jnp.int32)
+    st["n"] = n + 1
+    return st
+
+
+def _push_probes(st, params, cfg: WholeRunConfig):
+    """Queue +-1 layer neighbors of a new incumbent layer at the analytic
+    min-feasible power (mirror of ScenarioState.push_probes)."""
+    if not cfg.constraint_aware:
+        return st
+    l_star, p_star = jc.denormalize(params, st["best_a"])
+    do = st["has_best"] & (l_star != st["inc_layer"])
+    st = dict(st)
+    st["inc_layer"] = jnp.where(do, l_star, st["inc_layer"])
+    t = st["ev_l"].shape[0]
+    q = st["probe_q"].shape[0]
+    idx = jnp.arange(t)
+    for dl in (1, -1):
+        l = l_star + dl
+        ok = do & (l >= 1) & (l <= cfg.n_layers)
+        lc = jnp.clip(l, 1, cfg.n_layers)
+        a = jc.project_feasible(params, jc.normalize(params, lc, p_star))
+        lp, pp = jc.denormalize(params, a)
+        seen = jnp.any((idx < st["n"]) & (st["ev_l"] == lp)
+                       & (st["ev_pr"] == jc.seen_key(pp)))
+        enq = ok & ~seen & (st["probe_n"] < q)
+        qi = jnp.minimum(st["probe_n"], q - 1)
+        st["probe_q"] = st["probe_q"].at[qi].set(
+            jnp.where(enq, a, st["probe_q"][qi]))
+        st["probe_n"] = st["probe_n"] + enq.astype(jnp.int32)
+    return st
+
+
+def _step(st, a, params, budget, cfg: WholeRunConfig):
+    """Observation + probe push + incumbent-repeat early stop
+    (Alg. 1 lines 14-21; mirror of ScenarioState.step)."""
+    li_n, p_n = jc.denormalize(params, a)
+    li_b, p_b = jc.denormalize(params, st["best_a"])
+    same = st["has_best"] & (li_n == li_b) & (p_n == p_b)
+    st = _observe(st, a, params, cfg)
+    st = _push_probes(st, params, cfg)
+    n_c = jnp.where(same, st["n_c"] + 1, 0)
+    st["n_c"] = n_c
+    st["active"] = (st["n"] < budget) & (n_c < cfg.n_max_repeat)
+    return st
+
+
+# -- the whole-run program ---------------------------------------------------
+
+_OUT_KEYS = ("ev_u", "ev_acc", "ev_feas", "ev_trace", "n", "best_a",
+             "best_u", "has_best", "fit_steps", "fit_calls")
+
+
+def _whole_run(stacked, grid, wvec, cfg: WholeRunConfig):
+    """Init design + every BO iteration for the whole scenario batch, as
+    one traced program (callers jit / shard_map it).
+
+    The loop runs in dataset-bucket *phases* (16/32/48/64 rows, same
+    ``gp.DATASET_BUCKETS`` the host engine uses): within phase ``m`` the
+    GP fits and posteriors slice the first ``m`` rows of the padded
+    dataset — exact w.r.t. the masked kernel — and the loop falls through
+    to the next bucket once any scenario outgrows it, so early iterations
+    never pay the full ``max_points``^3 Cholesky.
+    """
+    params = stacked["params"]
+    s = stacked["budget"].shape[0]
+
+    def one_init(st, p1, pts, budget):
+        for j in range(cfg.n_init):
+            st = _observe(st, pts[j], p1, cfg)
+        st = _push_probes(st, p1, cfg)
+        st["active"] = st["n"] < budget
+        return st
+
+    state = jax.vmap(one_init)(_init_state(s, cfg), params,
+                               stacked["init_pts"], stacked["budget"])
+
+    # Eq.-(11) penalties for the grid + boundary candidate slots depend
+    # only on the channel — computed once per run, not per iteration
+    pen_static = jnp.concatenate([
+        jax.vmap(lambda p1: jc.penalty(p1, grid))(params),
+        jax.vmap(jc.penalty)(params, stacked["boundary"]),
+    ], axis=1)                                   # (S, G + L)
+
+    def body_for(m: int):
+        def cold_fit(data, _theta0):
+            gp = jax.vmap(lambda d: gpm._fit_core(d, cfg.gp))(data)
+            return gp, jnp.full((s,), cfg.gp.fit_steps, jnp.int32)
+
+        def warm_fit(data, theta0):
+            return jax.vmap(lambda d, t0: gpm._fit_core_from(
+                d, cfg.gp, t0, cfg.gp.warm_steps,
+                cfg.gp.warm_gtol))(data, theta0)
+
+        def body(carry):
+            st, it = carry
+            data = gpm.slice_data(
+                dict(x=st["x"], y=st["y"], mask=st["mask"]), m)
+            first = it == 0
+            # iterations where every live scenario is draining its probe
+            # queue skip the fit + acquisition entirely (probes bypass the
+            # GP in the host engines too). Iteration 0 always fits: every
+            # lane's warm-start carry is seeded by a cold fit of its init
+            # design, which keeps each scenario's theta trajectory
+            # independent of the batch composition (=> sharding-invariant)
+            need_acq = jnp.any(st["active"] & (st["probe_n"] == 0)) | first
+
+            def fit_and_maximize(theta0):
+                # GP refits: cold on iteration 0 (no previous
+                # hyperparameters), warm-started + adaptive after
+                if cfg.warm_start:
+                    gp_b, steps = jax.lax.cond(first, cold_fit, warm_fit,
+                                               data, theta0)
+                else:
+                    gp_b, steps = cold_fit(data, theta0)
+
+                cand_b = jax.vmap(
+                    lambda p1, b1, a1, h1: assemble_candidates_dev(
+                        p1, grid, b1, a1, h1, cfg.constraint_aware))(
+                        params, stacked["boundary"], st["best_a"],
+                        st["has_best"])
+
+                live_ev = (jnp.arange(cfg.budget_max)[None, :]
+                           < st["n"][:, None])
+                ev_min = jnp.min(jnp.where(live_ev, st["ev_u"], jnp.inf),
+                                 axis=1)
+                bf = jnp.where(jnp.isfinite(st["best_u"]), st["best_u"],
+                               ev_min)
+                if cfg.use_schedules:
+                    t_norm = ((st["n"] - cfg.n_init).astype(jnp.float32)
+                              / jnp.maximum(stacked["budget"] - 1, 1))
+                else:
+                    t_norm = jnp.zeros((s,), jnp.float32)
+                lam_b = _sched(wvec["lam_base0"], wvec["lam_baseT"], t_norm)
+                lam_g = _sched(wvec["lam_g0"], wvec["lam_gT"], t_norm)
+
+                n_stat = pen_static.shape[1]
+                pen_b = jnp.concatenate([
+                    pen_static,
+                    jax.vmap(jc.penalty)(params, cand_b[:, n_stat:]),
+                ], axis=1)
+
+                def one_max(gp, p1, c, bf1, lb1, lg1, pen1):
+                    a, _, _ = _maximize_core(
+                        gp, p1, c, bf1, lb1, lg1, wvec["lam_p"],
+                        wvec["beta"], jnp.float32(REFINE_LR), REFINE_STEPS,
+                        penalties=pen1)
+                    return a
+                a_acq = jax.vmap(one_max)(gp_b, params, cand_b, bf,
+                                          lam_b, lam_g, pen_b)
+                return gp_b["theta"], steps, a_acq
+
+            def probe_only(theta0):
+                return (theta0, jnp.zeros((s,), jnp.int32),
+                        jnp.zeros((s, 2), jnp.float32))
+
+            theta, steps, a_acq = jax.lax.cond(
+                need_acq, fit_and_maximize, probe_only, st["theta"])
+
+            # probe-or-acquisition select + FIFO pop (probes bypass the
+            # GP, matching ScenarioState.drain_probes' eval order)
+            use_probe = st["probe_n"] > 0
+            a_next = jnp.where(use_probe[:, None], st["probe_q"][:, 0],
+                               a_acq)
+            st2 = dict(st)
+            st2["probe_q"] = jnp.where(use_probe[:, None, None],
+                                       jnp.roll(st["probe_q"], -1, axis=1),
+                                       st["probe_q"])
+            st2["probe_n"] = st["probe_n"] - use_probe.astype(jnp.int32)
+            # a lane's warm-start carry advances only on ITS acquisition
+            # iterations (plus the aligned iteration-0 cold seed), so the
+            # theta trajectory is a function of the lane's own eval
+            # sequence — independent of batch composition and sharding
+            upd = first | ~use_probe
+            st2["theta"] = jax.tree.map(partial(_sel, upd), theta,
+                                        st["theta"])
+            st2["fit_steps"] = st["fit_steps"] + jnp.where(upd, steps, 0)
+            st2["fit_calls"] = st["fit_calls"] + upd.astype(jnp.int32)
+            st2 = jax.vmap(lambda s1, a, p1, b: _step(s1, a, p1, b, cfg))(
+                st2, a_next, params, stacked["budget"])
+            # freeze finished scenarios (early-stop masking)
+            new = jax.tree.map(partial(_sel, st["active"]), st2, st)
+            return new, it + 1
+
+        return body
+
+    m_final = gpm.bucket_size(min(cfg.budget_max, cfg.gp.max_points),
+                              cfg.gp.max_points)
+    phases = [b for b in gpm.DATASET_BUCKETS if b < m_final] + [m_final]
+
+    carry = (state, jnp.int32(0))
+    for m in phases:
+        last = m == phases[-1]
+
+        def cond(carry, m=m, last=last):
+            st, it = carry
+            ok = jnp.any(st["active"]) & (it < cfg.budget_max)
+            if not last:           # fall through once a dataset outgrows m
+                ok = ok & (jnp.max(st["n_pts"]) <= m)
+            return ok
+
+        carry = jax.lax.while_loop(cond, body_for(m), carry)
+    state = carry[0]
+    return {k: state[k] for k in _OUT_KEYS}
+
+
+whole_run = jax.jit(_whole_run, static_argnames=("cfg",))
+
+
+@partial(jax.jit, static_argnames=("cfg", "mesh"))
+def whole_run_sharded(stacked, grid, wvec, cfg: WholeRunConfig, mesh: Mesh):
+    """Scenario-sharded whole run: the leading S axis splits across the
+    1-D ``("scen",)`` mesh; each device steps its own ``while_loop`` over
+    its shard (the per-scenario programs are embarrassingly parallel, so
+    there are no collectives).
+
+    The per-lane warm-start gating makes each scenario's trajectory
+    independent of batch *composition*, but XLA may reassociate f32
+    reductions for different local batch sizes, so sharded results are
+    guaranteed equivalent to the unsharded program only within the
+    studied trace tolerance (empirically bitwise on multi-lane shards).
+    """
+    f = shard_map(lambda st, g, w: _whole_run(st, g, w, cfg), mesh=mesh,
+                  in_specs=(PS("scen"), PS(), PS()), out_specs=PS("scen"),
+                  check_vma=False)
+    return f(stacked, grid, wvec)
+
+
+def scenario_sharding(mesh: Mesh) -> NamedSharding:
+    """Leading-axis NamedSharding for the stacked scenario pytree."""
+    return NamedSharding(mesh, PS("scen"))
+
+
+# -- host wrapper ------------------------------------------------------------
+
+class WholeRunBayesSplitEdge:
+    """Single-dispatch Bayes-Split-Edge over a scenario batch.
+
+    Same surface as ``BatchedBayesSplitEdge`` (one ``BOResult`` per
+    scenario, trace-equivalent to sequential ``BayesSplitEdge.run`` up to
+    f32-on-device numerics), plus:
+
+    * ``warm_start`` — warm-started adaptive GP refits (default on;
+      ``False`` restores bitwise cold-fit traces).
+    * ``mesh`` — a 1-D ``("scen",)`` mesh to shard the scenario axis
+      across devices (see :func:`repro.distributed.sharding
+      .scenario_mesh`).
+    """
+
+    name = "WholeRun-Bayes-Split-Edge"
+
+    def __init__(self, scenarios: Sequence[Scenario], n_init: int = 9,
+                 n_max_repeat: int = 5, weights: AcqWeights = AcqWeights(),
+                 gp_cfg: gpm.GPConfig = gpm.GPConfig(), grid_n: int = 64,
+                 constraint_aware: bool = True, use_grad_term: bool = True,
+                 use_schedules: bool = True, warm_start: bool = True,
+                 mesh: Optional[Mesh] = None):
+        if not scenarios:
+            raise ValueError("need at least one scenario")
+        ls = {sc.problem.L for sc in scenarios}
+        if len(ls) != 1:
+            raise ValueError(
+                f"scenarios must share a layer profile, got L in {ls} "
+                "(mixed-profile pad-to-max batching is an open item)")
+        self.scenarios = list(scenarios)
+        self.n_init = n_init
+        self.n_max_repeat = n_max_repeat
+        w = weights
+        if not use_grad_term:
+            w = dataclasses.replace(w, lam_g0=0.0, lam_gT=1e-9)
+        if not constraint_aware:
+            w = dataclasses.replace(w, lam_p=0.0)
+        self.weights = w
+        self.gp_cfg = gp_cfg
+        self.grid = candidate_grid(grid_n)
+        self.constraint_aware = constraint_aware
+        self.use_schedules = use_schedules
+        self.warm_start = warm_start
+        self.mesh = mesh
+        self.gp_feasible_only = constraint_aware
+
+    # -- input staging -------------------------------------------------------
+    def _pad_to(self) -> int:
+        """Scenario count padded to a power of 2 (bounded trace count), and
+        to a multiple of the mesh size when sharding."""
+        s = 1
+        while s < len(self.scenarios):
+            s *= 2
+        if self.mesh is not None:
+            d = self.mesh.size
+            s = max(s, d)
+            if s % d:
+                s = (s // d + 1) * d
+        return s
+
+    def _stacked(self) -> dict:
+        fill = self.grid[:1]
+        params, budgets, init_pts, boundary = [], [], [], []
+        for sc in self.scenarios:
+            pb = sc.problem
+            rng = np.random.default_rng(sc.seed)
+            pts = _init_grid(self.n_init, rng)
+            if self.constraint_aware:
+                pts = np.stack([pb.project_feasible(a) for a in pts])
+            bpad = np.repeat(fill, pb.L, axis=0)
+            if self.constraint_aware:
+                b = pb.boundary_candidates()
+                if len(b):
+                    bpad = bpad.copy()
+                    bpad[:len(b)] = b[:pb.L]
+            params.append(pb.jax_params())
+            budgets.append(sc.budget)
+            init_pts.append(pts)
+            boundary.append(bpad)
+        pad = self._pad_to() - len(self.scenarios)
+        for lst in (params, budgets, init_pts, boundary):
+            lst.extend([lst[0]] * pad)
+        return dict(
+            params=jc.stack_params(params),
+            budget=jnp.asarray(np.asarray(budgets), jnp.int32),
+            init_pts=jnp.asarray(np.stack(init_pts), jnp.float32),
+            boundary=jnp.asarray(np.stack(boundary), jnp.float32),
+        )
+
+    def run(self) -> List[BOResult]:
+        cfg = WholeRunConfig(
+            n_init=self.n_init, n_max_repeat=self.n_max_repeat,
+            # the ledger must hold the full init design even when a
+            # scenario's budget is below n_init (the host engines still
+            # evaluate all n_init points before stopping)
+            budget_max=max(max(sc.budget for sc in self.scenarios),
+                           self.n_init),
+            n_layers=self.scenarios[0].problem.L,
+            constraint_aware=self.constraint_aware,
+            gp_feasible_only=self.gp_feasible_only,
+            use_schedules=self.use_schedules, warm_start=self.warm_start,
+            gp=self.gp_cfg)
+        w = self.weights
+        wvec = dict(lam_base0=jnp.float32(w.lam_base0),
+                    lam_baseT=jnp.float32(w.lam_baseT),
+                    lam_g0=jnp.float32(w.lam_g0),
+                    lam_gT=jnp.float32(w.lam_gT),
+                    lam_p=jnp.float32(w.lam_p), beta=jnp.float32(w.beta))
+        stacked = self._stacked()
+        grid = jnp.asarray(self.grid, jnp.float32)
+        if self.mesh is not None:
+            sh = scenario_sharding(self.mesh)
+            stacked = jax.device_put(stacked, sh)
+            out = whole_run_sharded(stacked, grid, wvec, cfg, self.mesh)
+        else:
+            out = whole_run(stacked, grid, wvec, cfg)
+        out = jax.tree.map(np.asarray, out)      # host-side gather
+
+        live = len(self.scenarios)
+        fc = out["fit_calls"][:live].astype(np.int64)
+        fs = out["fit_steps"][:live].astype(np.int64)
+        calls, total = int(fc.sum()), int(fs.sum())
+        # a lane's first counted refit (iteration 0, if it was active) is
+        # the cold seed (cfg.fit_steps Adam steps); the warm-only mean is
+        # the per-refit cost after it. Lanes that never fit (e.g.
+        # budget == n_init) contribute nothing to either bucket.
+        seeded = (fc > 0).astype(np.int64)
+        if self.warm_start:
+            warm_calls = int((fc - seeded).sum())
+            warm_total = int((fs - seeded * self.gp_cfg.fit_steps).sum())
+        else:
+            warm_calls, warm_total = calls, total
+        self._fit_stats = dict(
+            fit_calls=calls,
+            fit_steps_mean=float(total / calls) if calls else 0.0,
+            warm_steps_mean=(float(warm_total / warm_calls)
+                             if warm_calls else 0.0))
+
+        results = []
+        for i, sc in enumerate(self.scenarios):
+            n = int(out["n"][i])
+            has_best = bool(out["has_best"][i])
+            best_a = (np.asarray(out["best_a"][i], np.float64) if has_best
+                      else None)
+            best_acc = 0.0
+            if has_best:
+                best_acc = float(sc.problem._accuracy(
+                    *sc.problem.denormalize(best_a))[1])
+            results.append(BOResult(
+                best_a, float(out["best_u"][i]), best_acc, n,
+                [float(v) for v in out["ev_u"][i][:n]],
+                [float(v) for v in out["ev_acc"][i][:n]],
+                [bool(v) for v in out["ev_feas"][i][:n]],
+                [float(v) for v in out["ev_trace"][i][:n]]))
+        return results
+
+    def fit_cost_stats(self) -> dict:
+        """Adam-step accounting of the last ``run``: total refit calls and
+        mean Adam steps per refit (cold fits count ``fit_steps`` each)."""
+        return dict(getattr(self, "_fit_stats", {}))

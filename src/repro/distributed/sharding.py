@@ -14,6 +14,8 @@ from typing import Dict, Optional, Tuple
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
 
+from repro.compat import mesh_shape
+
 
 # Logical axes that appear in the model code.
 #   layers   - stacked scan dimension (never sharded)
@@ -39,7 +41,7 @@ class ShardCtx:
 
     @property
     def axis_sizes(self) -> Dict[str, int]:
-        return dict(self.mesh.shape)   # works for Mesh and AbstractMesh
+        return mesh_shape(self.mesh)
 
     def spec(self, axes: Tuple[Optional[str], ...]) -> PS:
         mapped = []
@@ -66,7 +68,7 @@ def build_rules(cfg, mesh: Mesh, *, fsdp: bool = False,
                 seq_parallel: bool = False,
                 dp_over_pod: bool = True) -> Dict[str, Optional[str]]:
     """Divisibility-aware logical->mesh mapping for one architecture."""
-    sizes = dict(mesh.shape)           # works for Mesh and AbstractMesh
+    sizes = mesh_shape(mesh)
     model = sizes.get("model", 1)
     data_axes: Tuple[str, ...] = ("data",) if "data" in sizes else ()
     if "pod" in sizes and dp_over_pod:
@@ -122,6 +124,19 @@ def build_rules(cfg, mesh: Mesh, *, fsdp: bool = False,
 
 def make_ctx(cfg, mesh: Mesh, **kw) -> ShardCtx:
     return ShardCtx(mesh=mesh, rules=build_rules(cfg, mesh, **kw))
+
+
+def scenario_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """1-D ``("scen",)`` mesh over the scenario axis for the whole-run BO
+    engine (``core/wholerun.py``): the per-scenario programs are
+    embarrassingly parallel, so the batch data-parallelizes with no
+    collectives. ``n_devices`` limits the mesh to a device prefix
+    (default: all local devices)."""
+    import numpy as np
+    devs = jax.devices()
+    if n_devices is not None:
+        devs = devs[:n_devices]
+    return Mesh(np.array(devs), ("scen",))
 
 
 def local_ctx(cfg=None) -> ShardCtx:

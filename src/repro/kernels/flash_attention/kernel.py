@@ -22,9 +22,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# jax<0.6 names this TPUCompilerParams
-_CompilerParams = getattr(pltpu, "CompilerParams", None) \
-    or pltpu.TPUCompilerParams
+from repro.compat import tpu_compiler_params
+
+_CompilerParams = tpu_compiler_params()
 
 NEG_INF = -1e30
 

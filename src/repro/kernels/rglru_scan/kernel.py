@@ -15,9 +15,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# jax<0.6 names this TPUCompilerParams
-_CompilerParams = getattr(pltpu, "CompilerParams", None) \
-    or pltpu.TPUCompilerParams
+from repro.compat import tpu_compiler_params
+
+_CompilerParams = tpu_compiler_params()
 
 
 def _kernel(a_ref, b_ref, h0_ref, h_ref, hlast_ref, h_scr, *,

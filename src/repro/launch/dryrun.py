@@ -25,6 +25,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro.compat import cost_dict as _cost_dict
 from repro.configs import SHAPES, get_config, list_configs, shape_applicable
 from repro.distributed.sharding import make_ctx, spec_tree, sharding_tree
 from repro.launch.mesh import make_production_mesh
@@ -169,14 +170,6 @@ def _make_ctx_for(cfg, mesh, shape, fsdp_mode: str = "always",
         rules["batch"] = None        # B=1 long-decode: replicate batch
         ctx = type(ctx)(mesh=mesh, rules=rules)
     return ctx
-
-
-def _cost_dict(ca) -> dict:
-    """Normalize Compiled.cost_analysis() across jax versions (0.4.x
-    returns a one-element list of dicts, >=0.5 returns the dict)."""
-    if isinstance(ca, (list, tuple)):
-        ca = ca[0] if ca else {}
-    return ca or {}
 
 
 def _rwkv_step_flops(cfg, batch_local: int, heads_local: int) -> float:

@@ -11,16 +11,9 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-try:
-    from jax import shard_map
-except ImportError:  # jax<0.6: not yet promoted, check_vma was check_rep
-    from jax.experimental.shard_map import shard_map as _shard_map_exp
-
-    def shard_map(*args, check_vma=None, **kw):
-        if check_vma is not None:
-            kw["check_rep"] = check_vma
-        return _shard_map_exp(*args, **kw)
 from jax.sharding import PartitionSpec as PS
+
+from repro.compat import shard_map
 
 
 def _chunked_ce_dense(hidden, w, labels, n_chunks: int, vocab_valid: int):

@@ -17,11 +17,8 @@ from repro.train.optimizer import adafactor, adamw, cosine_schedule
 
 def _fake_mesh(shape, axes):
     """AbstractMesh-backed spec checks (no devices needed)."""
-    from jax.sharding import AbstractMesh
-    try:
-        return AbstractMesh(shape, axes)       # jax >= 0.5 signature
-    except TypeError:                          # jax 0.4.x: ((name, size), ...)
-        return AbstractMesh(tuple(zip(axes, shape)))
+    from repro.compat import abstract_mesh
+    return abstract_mesh(shape, axes)
 
 
 MESHES = [((16, 16), ("data", "model")),

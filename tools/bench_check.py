@@ -1,13 +1,22 @@
 #!/usr/bin/env python
 """CI gate for the BO engine: runs benchmarks/bench_engine.py in a small
-smoke configuration and fails (exit 1) if
+smoke configuration — under 8 forced host-platform devices so the
+scenario-sharded path is exercised — and fails (exit 1) if
 
   * the batched engine is slower than the sequential jit-hoisted loop, or
+  * the whole-run single-dispatch engine is slower than the batched
+    (PR 1) engine, or
   * the BO iteration loop re-jits after warmup (per-iteration compile
-    count / trace-cache size not flat), or
-  * the batched engine diverges from the sequential accuracies.
+    count / trace-cache size not flat), or the whole-run engine compiles
+    anything on its timed (post-warmup) runs, or
+  * the batched engine diverges from the sequential accuracies, or the
+    whole-run engine diverges from the batched accuracies, or
+  * the sharded whole run diverges from the unsharded one (eval counts
+    and accuracies equal, incumbent traces within the studied
+    tolerance — bitwise equality is not a contract across shard sizes).
 
 Usage: PYTHONPATH=src python tools/bench_check.py [--scenarios 4]
+       (--devices 0 disables the forced host-device override)
 """
 from __future__ import annotations
 
@@ -23,7 +32,18 @@ def main() -> int:
     ap.add_argument("--scenarios", type=int, default=4)
     ap.add_argument("--budget", type=int, default=16)
     ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--devices", type=int, default=8,
+                    help="forced host-platform device count for the "
+                         "sharded path (0 disables)")
     args = ap.parse_args()
+
+    # must run before jax initializes (the first jax import below)
+    if args.devices:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.devices}").strip()
 
     from benchmarks.bench_engine import run
 
@@ -37,19 +57,35 @@ def main() -> int:
         failures.append(
             f"batched path slower than sequential: "
             f"{r['batched_s']:.3f}s > {r['sequential_s']:.3f}s")
+    if r["wholerun_s"] > r["batched_s"]:
+        failures.append(
+            f"whole-run path slower than batched: "
+            f"{r['wholerun_s']:.3f}s > {r['batched_s']:.3f}s")
     if not r["zero_rejits_after_warmup"]:
         failures.append(
             f"BO loop re-jits after warmup: per-iteration compile counts "
             f"{r['per_iteration_compile_counts']}, trace caches "
             f"{r['per_iteration_trace_cache_sizes']}")
+    if r["wholerun_extra_compiles"]:
+        failures.append(
+            f"whole-run engine compiled {r['wholerun_extra_compiles']} "
+            f"programs on its timed (post-warmup) runs")
     if r["accuracies"]["sequential"] != r["accuracies"]["batched"]:
         failures.append(
-            f"batched/sequential accuracy mismatch: "
-            f"{r['accuracies']}")
+            f"batched/sequential accuracy mismatch: {r['accuracies']}")
+    if r["accuracies"]["wholerun"] != r["accuracies"]["batched"]:
+        failures.append(
+            f"wholerun/batched accuracy mismatch: {r['accuracies']}")
+    if r["n_devices"] > 1 and not r["sharded_matches_unsharded"]:
+        failures.append("sharded whole run diverges from unsharded")
 
+    sharded = ("n/a" if r["sharded_s"] is None
+               else f"{r['sharded_s']:.2f}s/{r['n_devices']}dev")
     print(f"bench_check: {args.scenarios} scenarios, budget {args.budget}: "
           f"sequential {r['sequential_s']:.2f}s, batched {r['batched_s']:.2f}s "
-          f"({r['speedup_vs_sequential']}x), "
+          f"({r['speedup_vs_sequential']}x), wholerun {r['wholerun_s']:.2f}s "
+          f"({r['speedup_wholerun_vs_batched']}x vs batched), "
+          f"sharded {sharded}, "
           f"zero-rejits={r['zero_rejits_after_warmup']}")
     if failures:
         for f in failures:
