@@ -2,15 +2,17 @@
 device-resident ``BatchedBayesSplitEdge`` (2 dispatches/iteration) vs the
 whole-run ``WholeRunBayesSplitEdge`` (1 dispatch/run, warm-started GP
 refits, optional scenario sharding) over a seed x gain x budget scenario
-sweep. Emits ``BENCH_bo_engine.json`` (repo root + artifacts/) with
-wall-clock, speedups, per-iteration compile counts (must be flat after
-warmup => zero re-jits in the BO loop), warm-start fit-step accounting
-and candidates/sec, so the speedup is tracked across PRs.
+sweep, plus a mixed-architecture (VGG19 + ResNet101, max-L padded)
+parity-and-throughput section. Emits the canonical artifact
+``benchmarks/artifacts/BENCH_bo_engine.json`` with wall-clock, speedups,
+per-iteration compile counts (must be flat after warmup => zero re-jits
+in the BO loop), warm-start fit-step accounting, candidates/sec and
+``mixed_matches_per_arch``, so the speedup and the mixed-batch contract
+are tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
@@ -22,10 +24,7 @@ from benchmarks.common import save_json
 from repro.core import (BayesSplitEdge, BatchedBayesSplitEdge, Scenario,
                         WholeRunBayesSplitEdge)
 from repro.core.acquisition import compile_counters
-from repro.core.batch_bo import make_vgg19_scenarios
-
-ROOT_JSON = os.path.join(os.path.dirname(__file__), "..",
-                         "BENCH_bo_engine.json")
+from repro.core.batch_bo import make_mixed_scenarios, make_vgg19_scenarios
 
 
 def _legacy_maximize(gp, problem, weights, t_norm, best_feasible, grid,
@@ -135,8 +134,64 @@ def _run_sequential(scenarios):
     return results
 
 
+def _same_results(r1, r2, atol=0.5):
+    """Per-scenario equivalence: eval counts and accuracies equal,
+    incumbent traces within the studied trace tolerance (XLA may
+    reassociate f32 reductions across batch compositions / shard sizes,
+    so bitwise equality is not a contract)."""
+    return all(a.n_evals == b.n_evals
+               and a.best_accuracy == b.best_accuracy
+               and np.allclose(a.incumbent_trace, b.incumbent_trace,
+                               atol=atol)
+               for a, b in zip(r1, r2))
+
+
+def run_mixed(budget: int = 12, seeds=(0, 1), repeats: int = 1) -> dict:
+    """Mixed-architecture batch (VGG19 + ResNet101, max-L padded layout):
+    times one heterogeneous batch through both engines and checks it
+    matches per-architecture batched runs scenario-for-scenario."""
+    def mk():
+        return make_mixed_scenarios(seeds=seeds, budgets=(budget,))
+
+    # warm the padded-shape programs
+    BatchedBayesSplitEdge(mk()).run()
+    WholeRunBayesSplitEdge(mk()).run()
+
+    t_bat, t_wr = [], []
+    for _ in range(repeats):
+        t0 = time.time()
+        mix_bat = BatchedBayesSplitEdge(mk()).run()
+        t_bat.append(time.time() - t0)
+        t0 = time.time()
+        mix_wr = WholeRunBayesSplitEdge(mk()).run()
+        t_wr.append(time.time() - t0)
+
+    # per-architecture reference: the same scenarios re-run as
+    # single-architecture batches, results re-interleaved
+    scs = mk()
+    groups: dict = {}
+    for i, sc in enumerate(scs):
+        groups.setdefault(sc.problem.cm.profile.name, []).append(i)
+    per = [None] * len(scs)
+    for idxs in groups.values():
+        for i, r in zip(idxs, BatchedBayesSplitEdge(
+                [scs[i] for i in idxs]).run()):
+            per[i] = r
+
+    matches = (_same_results(mix_bat, per, atol=1e-4)
+               and _same_results(mix_wr, per))
+    return dict(
+        n_scenarios=len(scs), budget=budget,
+        archs=sorted(groups), l_values={k: scs[i[0]].problem.L
+                                        for k, i in groups.items()},
+        batched_s=round(float(np.min(t_bat)), 4),
+        wholerun_s=round(float(np.min(t_wr)), 4),
+        matches_per_arch=bool(matches))
+
+
 def run(n_scenarios: int = 16, budget: int = 20, repeats: int = 1,
-        n_legacy: int | None = None, save: bool = True) -> dict:
+        n_legacy: int | None = None, save: bool = True,
+        mixed: bool = True) -> dict:
     mon = CompileMonitor()
 
     # -- seed baseline: per-iteration recompiling sequential loop ------------
@@ -210,15 +265,6 @@ def run(n_scenarios: int = 16, budget: int = 20, repeats: int = 1,
     wholerun_s = float(np.min(t_wr))
     fit_stats = eng.fit_cost_stats()
 
-    def _same_results(r1, r2, atol=0.5):
-        # sharded results match unsharded within the studied trace
-        # tolerance (XLA may reassociate f32 reductions per shard size)
-        return all(a.n_evals == b.n_evals
-                   and a.best_accuracy == b.best_accuracy
-                   and np.allclose(a.incumbent_trace, b.incumbent_trace,
-                                   atol=atol)
-                   for a, b in zip(r1, r2))
-
     # -- scenario-sharded whole run (needs >1 device, e.g. CI under
     #    XLA_FLAGS=--xla_force_host_platform_device_count=8) ----------------
     n_devices = len(jax.devices())
@@ -247,6 +293,10 @@ def run(n_scenarios: int = 16, budget: int = 20, repeats: int = 1,
                     _scenario_grid(n_scenarios // n_devices, budget)).run()
                 t_one.append(time.time() - t0)
             scaling_frac = float(np.min(t_one)) / sharded_s
+    # -- mixed-architecture batch (max-L padded layout) ----------------------
+    mixed_report = run_mixed(budget=min(budget, 12),
+                             repeats=repeats) if mixed else None
+
     n_cand = 64 * 64 + scs[0].problem.L + 45
     evals = sum(r.n_evals for r in bat_results)
 
@@ -316,12 +366,16 @@ def run(n_scenarios: int = 16, budget: int = 20, repeats: int = 1,
             sequential=[r.best_accuracy for r in seq_results],
             batched=[r.best_accuracy for r in bat_results],
             wholerun=[r.best_accuracy for r in wr_results]),
+        # mixed-architecture batch: one max-L padded VGG19+ResNet101 batch
+        # must match per-architecture runs scenario-for-scenario
+        mixed_arch=mixed_report,
+        mixed_matches_per_arch=(None if mixed_report is None
+                                else mixed_report["matches_per_arch"]),
         compile_counters=compile_counters(),
     )
     if save:
+        # single canonical artifact path (benchmarks/artifacts/)
         save_json("BENCH_bo_engine.json", report)
-        with open(ROOT_JSON, "w") as f:
-            json.dump(report, f, indent=1)
     return report
 
 
@@ -333,8 +387,13 @@ def main():
     ap.add_argument("--legacy", type=int, default=None,
                     help="scenarios to measure the seed baseline on "
                          "(scaled up; 0 disables)")
+    ap.add_argument("--mixed-arch", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="run the mixed VGG19+ResNet101 (max-L padded) "
+                         "parity section (--no-mixed-arch disables)")
     args = ap.parse_args()
-    r = run(args.scenarios, args.budget, args.repeats, args.legacy)
+    r = run(args.scenarios, args.budget, args.repeats, args.legacy,
+            mixed=args.mixed_arch)
     seed_s = r["sequential_seed_s"]
     print(f"seed-sequential {'n/a' if seed_s is None else f'{seed_s:.2f}s'}"
           f"  sequential {r['sequential_s']:.2f}s"
@@ -353,6 +412,12 @@ def main():
         print(f"sharded {r['sharded_s']:.2f}s on {r['n_devices']} devices  "
               f"match={r['sharded_matches_unsharded']}  "
               f"weak-scaling {'n/a' if frac is None else f'{frac:.2f}'}")
+    if r["mixed_arch"] is not None:
+        m = r["mixed_arch"]
+        print(f"mixed-arch {'+'.join(m['archs'])} ({m['n_scenarios']} "
+              f"scenarios): batched {m['batched_s']:.2f}s, wholerun "
+              f"{m['wholerun_s']:.2f}s, matches-per-arch "
+              f"{m['matches_per_arch']}")
     print(f"matern-score {r['matern_score_candidates_per_sec']:,} cand/s  "
           f"BO loop {r['bo_candidates_per_sec']:,} cand/s")
     return r

@@ -1,6 +1,8 @@
 """Fig 8: cumulative regret across two model/dataset pairs
 (VGG19/ImageNet-Mini, ResNet101/Tiny-ImageNet) + decay-exponent fits.
-``--batched`` runs each algorithm's seed sweep as one vmapped program."""
+``--batched`` runs each algorithm's seed sweep as one vmapped program;
+``--mixed-arch`` goes further and runs BOTH pairs' sweeps as ONE
+architecture-heterogeneous (max-L padded) batch per algorithm."""
 from __future__ import annotations
 
 import argparse
@@ -15,9 +17,28 @@ from repro.core import (BasicBO, BatchedBayesSplitEdge, BayesSplitEdge,
 from repro.core.bo import BASIC_BO_KW
 
 
-def run(n_seeds: int = 3, budget: int = 30, batched: bool = False):
+def run(n_seeds: int = 3, budget: int = 30, batched: bool = False,
+        mixed_arch: bool = False):
     pairs = [("VGG19/ImageNet-Mini", default_vgg19_problem),
              ("ResNet101/Tiny-ImageNet", default_resnet101_problem)]
+    algos = [("Bayes-Split-Edge",
+              lambda pb: BayesSplitEdge(pb, budget=budget), {}),
+             ("Basic-BO",
+              lambda pb: BasicBO(pb, budget=budget), BASIC_BO_KW)]
+    # --mixed-arch: both pairs' seed sweeps as ONE max-L padded batch per
+    # algorithm (2 dispatches/iteration for ALL pairs x seeds at once)
+    mixed_results = {}
+    if mixed_arch:
+        for algo_name, _, engine_kw in algos:
+            scs, tags = [], []
+            for pair_name, mk_pb in pairs:
+                for seed in range(n_seeds):
+                    scs.append(Scenario(mk_pb(), seed=seed, budget=budget))
+                    tags.append(pair_name)
+            for tag, res in zip(tags,
+                                BatchedBayesSplitEdge(scs,
+                                                      **engine_kw).run()):
+                mixed_results.setdefault((tag, algo_name), []).append(res)
     out = {}
     for pair_name, mk_pb in pairs:
         pb0 = mk_pb()
@@ -26,12 +47,10 @@ def run(n_seeds: int = 3, budget: int = 30, batched: bool = False):
         # internal energy-tie-break surrogate
         acc_star = pb0._accuracy(*pb0.denormalize(a_star))[1]
         curves = {}
-        for algo_name, mk, engine_kw in [
-                ("Bayes-Split-Edge",
-                 lambda pb: BayesSplitEdge(pb, budget=budget), {}),
-                ("Basic-BO",
-                 lambda pb: BasicBO(pb, budget=budget), BASIC_BO_KW)]:
-            if batched:
+        for algo_name, mk, engine_kw in algos:
+            if mixed_arch:
+                results = mixed_results[(pair_name, algo_name)]
+            elif batched:
                 scs = [Scenario(mk_pb(), seed=seed, budget=budget)
                        for seed in range(n_seeds)]
                 results = BatchedBayesSplitEdge(scs, **engine_kw).run()
@@ -62,9 +81,13 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--batched", action="store_true",
                     help="vmap each algorithm's seed sweep on device")
+    ap.add_argument("--mixed-arch", action="store_true",
+                    help="run both model/dataset pairs as one "
+                         "architecture-heterogeneous (max-L padded) batch")
     ap.add_argument("--seeds", type=int, default=3)
     args, _ = ap.parse_known_args()
-    out = run(n_seeds=args.seeds, batched=args.batched)
+    out = run(n_seeds=args.seeds, batched=args.batched,
+              mixed_arch=args.mixed_arch)
     print(f"{'pair':26s} {'algorithm':18s} {'R_T':>8s} {'decay O(T^x)':>12s} "
           f"(paper: ours -0.85, basic -0.43)")
     for pair, curves in out.items():

@@ -136,18 +136,22 @@ def assemble_candidates_dev(params, grid, boundary, incumbent,
 def assemble_candidates(problem, grid: np.ndarray,
                         incumbent: Optional[np.ndarray],
                         constraint_aware: bool,
-                        boundary: Optional[np.ndarray] = None) -> np.ndarray:
-    """Fixed-shape candidate block: (len(grid) + L + N_LOCAL, 2).
+                        boundary: Optional[np.ndarray] = None,
+                        l_pad: Optional[int] = None) -> np.ndarray:
+    """Fixed-shape candidate block: (len(grid) + l_pad + N_LOCAL, 2).
 
     Unused boundary/local slots are filled with ``grid[0]`` duplicates so
     the argmax is unchanged (first occurrence wins) while the shape stays
     constant across iterations and scenarios — the jitted scorer compiles
     exactly once per problem size. ``boundary`` takes precomputed
     feasibility-boundary candidates (they depend only on the channel, so
-    callers cache them per problem).
+    callers cache them per problem). ``l_pad`` sizes the boundary block
+    to a batch-wide ``L_max`` so mixed-architecture scenarios share one
+    candidate shape (default: this problem's own L — bit-identical to the
+    unpadded layout).
     """
     fill = grid[:1]
-    bpad = np.repeat(fill, problem.L, axis=0)
+    bpad = np.repeat(fill, problem.L if l_pad is None else l_pad, axis=0)
     loc = np.repeat(fill, N_LOCAL, axis=0)
     if constraint_aware:
         b = problem.boundary_candidates() if boundary is None else boundary

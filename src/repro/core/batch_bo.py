@@ -9,8 +9,12 @@ layout) and ``acquisition.maximize_batch`` (vmapped grid scoring +
 scenario's incumbent trace matches a sequential ``BayesSplitEdge.run``
 of the same seed structurally, not by parallel maintenance.
 
-Scenarios must share a layer profile (same architecture); mixed-profile
-batches via pad-to-max layout are an open roadmap item.
+Scenarios may mix architectures (different layer profiles / ``L``): all
+per-layer arrays and the candidate boundary block are padded to the
+batch-wide ``L_max`` (``l_pad``) with masked tails, so one compiled
+program serves e.g. VGG19 and ResNet101 scenarios together. A
+single-architecture batch has ``l_pad == L`` and is bit-identical to the
+historical unpadded layout (tests/test_mixed_arch.py).
 """
 from __future__ import annotations
 
@@ -52,14 +56,16 @@ class BatchedBayesSplitEdge:
                  n_max_repeat: int = 5, weights: AcqWeights = AcqWeights(),
                  gp_cfg: gpm.GPConfig = gpm.GPConfig(), grid_n: int = 64,
                  constraint_aware: bool = True, use_grad_term: bool = True,
-                 use_schedules: bool = True):
+                 use_schedules: bool = True, l_pad: Optional[int] = None):
         if not scenarios:
             raise ValueError("need at least one scenario")
-        ls = {sc.problem.L for sc in scenarios}
-        if len(ls) != 1:
-            raise ValueError(
-                f"scenarios must share a layer profile, got L in {ls} "
-                "(mixed-profile pad-to-max batching is an open item)")
+        # mixed-architecture batches: pad every per-layer surface to the
+        # batch-wide L_max (a single-arch batch pads to its own L, which
+        # is the bit-identical unpadded layout)
+        l_max = max(sc.problem.L for sc in scenarios)
+        self.l_pad = l_max if l_pad is None else l_pad
+        if self.l_pad < l_max:
+            raise ValueError(f"l_pad={l_pad} < batch L_max={l_max}")
         self.scenarios = list(scenarios)
         self.n_init = n_init
         self.n_max_repeat = n_max_repeat
@@ -123,7 +129,7 @@ class BatchedBayesSplitEdge:
             key = tuple(id(st) for st in batch)
             if key not in params_cache:
                 params_cache = {key: jax_cost.stack_params(
-                    [st.pb.jax_params() for st in batch])}
+                    [st.pb.jax_params(self.l_pad) for st in batch])}
             params_b = params_cache[key]
 
             # two dispatches for the whole bucket: fit_batch + maximize_batch
@@ -134,7 +140,8 @@ class BatchedBayesSplitEdge:
                 inc = st.best_a if self.constraint_aware else None
                 cand.append(assemble_candidates(st.pb, self.grid, inc,
                                                 self.constraint_aware,
-                                                boundary=st.boundary))
+                                                boundary=st.boundary,
+                                                l_pad=self.l_pad))
                 bf.append(st.best_feasible())
                 t_norm = st.t_norm(self.use_schedules)
                 lb.append(schedule(w.lam_base0, w.lam_baseT, t_norm))
@@ -178,4 +185,23 @@ def make_vgg19_scenarios(seeds: Sequence[int] = (0, 1, 2, 3),
                 pb = SplitInferenceProblem(
                     CostModel(vgg19_profile()), base.gain_db + off)
                 out.append(Scenario(pb, seed=seed, budget=budget))
+    return out
+
+
+def make_mixed_scenarios(seeds: Sequence[int] = (0, 1),
+                         budgets: Sequence[int] = (16,)) -> List[Scenario]:
+    """Architecture-heterogeneous batch: the paper's two backbones
+    (VGG19/ImageNet-Mini, L=37 and ResNet101/Tiny-ImageNet, L=36)
+    interleaved per seed x budget — the canonical mixed max-L-padded
+    workload for benchmarks and parity gates."""
+    from repro.core.problem import (default_resnet101_problem,
+                                    default_vgg19_problem)
+
+    out = []
+    for seed in seeds:
+        for budget in budgets:
+            out.append(Scenario(default_vgg19_problem(), seed=seed,
+                                budget=budget))
+            out.append(Scenario(default_resnet101_problem(), seed=seed,
+                                budget=budget))
     return out

@@ -56,6 +56,31 @@ def profile_from_cnn(cnn) -> LayerProfile:
     return LayerProfile(cnn.name, cum[:n + 1], float(cum[-1]), tx, n)
 
 
+def pad_profile(profile: LayerProfile, l_max: int):
+    """Edge-pad a profile's per-layer arrays to a batch-wide ``l_max``.
+
+    Returns ``(padded profile, valid mask)``. The padded profile keeps the
+    TRUE ``n_layers`` (valid splits stay 1..L) but its ``(l_max+1,)``
+    arrays repeat the final-layer entry in the tail, so mixed-architecture
+    scenario batches stack into dense device arrays and an index that was
+    clipped to ``n_layers`` reads the same value as the unpadded profile.
+    ``valid[l]`` marks the real (non-padded) entries ``l <= n_layers``.
+    """
+    L = profile.n_layers
+    if l_max < L:
+        raise ValueError(f"l_max={l_max} < profile n_layers={L}")
+    pad = l_max - L
+    valid = np.arange(l_max + 1) <= L
+    if pad == 0:
+        return profile, valid
+    return LayerProfile(
+        profile.name,
+        np.pad(profile.cum_macs, (0, pad), mode="edge"),
+        profile.total_macs,
+        np.pad(profile.tx_bytes, (0, pad), mode="edge"),
+        L), valid
+
+
 class CostModel:
     """Deterministic energy/delay for (split l, power P) given a channel."""
 

@@ -16,27 +16,45 @@ what lets the *whole* Algorithm-1 loop (``core/wholerun.py``) run as one
 device program with no host round-trip per evaluation.
 
 A scenario's parameters are a flat dict of jnp arrays (a pytree), so S
-scenarios stack into one batched pytree for ``jax.vmap``.
+scenarios stack into one batched pytree for ``jax.vmap``. Scenarios of
+*different architectures* (different ``L``) stack too: per-layer arrays
+are padded to a batch-wide ``L_max`` (edge values, plus a ``layer_mask``
+marking the real splits) while ``n_layers`` stays each scenario's true
+``L`` — :func:`denormalize` clips the layer coordinate to ``n_layers``,
+so padded tail split points can never be proposed, probed or counted.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 PENALTY_CAP = 1e6
 
 
-def make_params(problem) -> dict:
+def make_params(problem, l_pad: int | None = None) -> dict:
     """Precompute per-layer profile arrays for a ``SplitInferenceProblem``.
 
     Index ``l`` (1..L) into the ``(L+1,)`` arrays is the split layer;
-    index 0 is the (unused) transmit-raw-input split.
+    index 0 is the (unused) transmit-raw-input split. ``l_pad`` pads the
+    per-layer arrays to a batch-wide ``(l_pad+1,)`` max-L layout (edge
+    values; ``layer_mask`` stays False in the tail) so mixed-architecture
+    scenarios stack into one dense batch — ``l_pad=None`` (or ``== L``)
+    is the bit-identical unpadded layout.
     """
+    from repro.core.cost_model import CostModel, pad_profile
+
     cm = problem.cm
     prof = cm.profile
-    ls = jnp.arange(prof.n_layers + 1)
+    if l_pad is None:
+        l_pad = prof.n_layers
+    prof_p, valid = pad_profile(prof, l_pad)
+    if prof_p is not prof:
+        cm = CostModel(prof_p, cm.device, cm.server, cm.link, cm.budgets)
+    ls = jnp.arange(l_pad + 1)
     gain_lin = 10.0 ** (problem.gain_db / 10.0)
     u = problem.util
     return dict(
+        layer_mask=jnp.asarray((np.arange(l_pad + 1) >= 1) & valid),
         # utility-oracle calibration (ignored by penalty/energy_delay)
         base_acc=jnp.float32(u.base_acc),
         bump=jnp.float32(u.bump),
@@ -63,11 +81,32 @@ def make_params(problem) -> dict:
 def stack_params(params_list) -> dict:
     """Stack per-scenario param dicts into one batched pytree (S, ...).
 
-    All scenarios must share the same profile length (same architecture);
-    mixed-architecture batches are an open item (pad-to-max layout).
+    Mixed-architecture batches stack directly: any per-layer array
+    shorter than the batch-wide ``L_max`` is padded on the fly (edge
+    values for the cost surfaces, False for ``layer_mask``). Each
+    scenario's ``n_layers`` stays its true ``L``, which is what keeps the
+    padded tail unreachable (:func:`denormalize` clips to it).
     """
-    keys = params_list[0].keys()
-    return {k: jnp.stack([p[k] for p in params_list]) for k in keys}
+    out = {}
+    for k in params_list[0].keys():
+        vals = [jnp.asarray(p[k]) for p in params_list]
+        if vals[0].ndim:
+            n = max(v.shape[0] for v in vals)
+            vals = [v if v.shape[0] == n
+                    else (jnp.pad(v, (0, n - v.shape[0]))  # False tail
+                          if k == "layer_mask"
+                          else jnp.pad(v, (0, n - v.shape[0]), mode="edge"))
+                    for v in vals]
+        out[k] = jnp.stack(vals)
+    return out
+
+
+def valid_split(params, li):
+    """True iff ``li`` is a real (non-padded) split layer for the
+    scenario: ``1 <= li <= n_layers``. Everything :func:`denormalize`
+    emits satisfies this by construction; it exists for ledger audits and
+    for masking candidate blocks assembled at the batch ``L_max``."""
+    return (li >= 1) & (li <= params["n_layers"].astype(jnp.int32))
 
 
 def denormalize(params, a):

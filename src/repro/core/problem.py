@@ -140,14 +140,17 @@ class SplitInferenceProblem:
     def feasible(self, a) -> bool:
         return self.penalty(a) == 0.0
 
-    def jax_params(self) -> dict:
+    def jax_params(self, l_pad: Optional[int] = None) -> dict:
         """Device-resident analytic constraint surface (see ``jax_cost``),
-        cached per channel state so jitted acquisition programs can take it
-        as a traced argument."""
+        cached per (channel state, pad width) so jitted acquisition
+        programs can take it as a traced argument. ``l_pad`` pads the
+        per-layer arrays to a batch-wide max-L layout for
+        mixed-architecture batches (None: this problem's own L)."""
         from repro.core import jax_cost
+        key = (self.gain_db, l_pad)
         cached = getattr(self, "_jax_params", None)
-        if cached is None or cached[0] != self.gain_db:
-            self._jax_params = (self.gain_db, jax_cost.make_params(self))
+        if cached is None or cached[0] != key:
+            self._jax_params = (key, jax_cost.make_params(self, l_pad))
         return self._jax_params[1]
 
     # --- utility oracle -----------------------------------------------------

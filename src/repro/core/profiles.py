@@ -12,7 +12,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.configs.cnn import get_cnn_config
-from repro.core.cost_model import LayerProfile, profile_from_cnn
+from repro.core.cost_model import LayerProfile, pad_profile, profile_from_cnn
 
 
 def vgg19_profile() -> LayerProfile:
@@ -21,6 +21,23 @@ def vgg19_profile() -> LayerProfile:
 
 def resnet101_profile() -> LayerProfile:
     return profile_from_cnn(get_cnn_config("resnet101-tiny-imagenet"))
+
+
+def max_split_layers(profiles) -> int:
+    """Batch-wide ``L_max`` for a mixed-architecture scenario batch."""
+    return max(p.n_layers for p in profiles)
+
+
+def padded_profiles(profiles):
+    """Pad a heterogeneous profile set to a shared ``L_max`` layout.
+
+    Returns ``[(padded profile, valid mask), ...]`` — every profile's
+    per-layer arrays become ``(L_max+1,)`` with edge-padded tails and a
+    validity mask, so VGG19 and ResNet101 scenarios can stack into one
+    dense batch (see ``jax_cost.stack_params``).
+    """
+    l_max = max_split_layers(profiles)
+    return [pad_profile(p, l_max) for p in profiles]
 
 
 # ---------------------------------------------------------------------------

@@ -26,6 +26,14 @@ The leading scenario axis is embarrassingly parallel:
 ``run(...)`` with a mesh shards it via ``shard_map`` over a 1-D
 ``("scen",)`` mesh — each device steps its own ``while_loop`` over its
 shard with zero collectives, and results gather host-side.
+
+The scenario axis is architecture-heterogeneous: per-layer constraint
+surfaces and the boundary candidate block are padded to the batch-wide
+``L_max`` (``cfg.l_pad``) with masked tails, and every layer clip inside
+the loop uses the scenario's own ``params["n_layers"]``, so one compiled
+whole-run program mixes VGG19 and ResNet101 scenarios while padded tail
+split points stay unreachable. A single-architecture batch pads to its
+own ``L`` — the bit-identical historical layout.
 """
 from __future__ import annotations
 
@@ -54,7 +62,8 @@ class WholeRunConfig:
     n_init: int
     n_max_repeat: int
     budget_max: int              # eval-ledger length (max budget in batch)
-    n_layers: int
+    l_pad: int                   # batch-wide padded layer count (L_max);
+                                 # per-scenario clips use params["n_layers"]
     constraint_aware: bool
     gp_feasible_only: bool
     use_schedules: bool
@@ -149,10 +158,13 @@ def _push_probes(st, params, cfg: WholeRunConfig):
     t = st["ev_l"].shape[0]
     q = st["probe_q"].shape[0]
     idx = jnp.arange(t)
+    # the scenario's OWN layer count, not the batch-wide padded L_max:
+    # a probe must never land on a padded tail split of a shorter arch
+    l_hi = params["n_layers"].astype(jnp.int32)
     for dl in (1, -1):
         l = l_star + dl
-        ok = do & (l >= 1) & (l <= cfg.n_layers)
-        lc = jnp.clip(l, 1, cfg.n_layers)
+        ok = do & (l >= 1) & (l <= l_hi)
+        lc = jnp.clip(l, 1, l_hi)
         a = jc.project_feasible(params, jc.normalize(params, lc, p_star))
         lp, pp = jc.denormalize(params, a)
         seen = jnp.any((idx < st["n"]) & (st["ev_l"] == lp)
@@ -181,8 +193,8 @@ def _step(st, a, params, budget, cfg: WholeRunConfig):
 
 # -- the whole-run program ---------------------------------------------------
 
-_OUT_KEYS = ("ev_u", "ev_acc", "ev_feas", "ev_trace", "n", "best_a",
-             "best_u", "has_best", "fit_steps", "fit_calls")
+_OUT_KEYS = ("ev_u", "ev_acc", "ev_feas", "ev_trace", "ev_l", "n",
+             "best_a", "best_u", "has_best", "fit_steps", "fit_calls")
 
 
 def _whole_run(stacked, grid, wvec, cfg: WholeRunConfig):
@@ -388,14 +400,16 @@ class WholeRunBayesSplitEdge:
                  gp_cfg: gpm.GPConfig = gpm.GPConfig(), grid_n: int = 64,
                  constraint_aware: bool = True, use_grad_term: bool = True,
                  use_schedules: bool = True, warm_start: bool = True,
-                 mesh: Optional[Mesh] = None):
+                 mesh: Optional[Mesh] = None, l_pad: Optional[int] = None):
         if not scenarios:
             raise ValueError("need at least one scenario")
-        ls = {sc.problem.L for sc in scenarios}
-        if len(ls) != 1:
-            raise ValueError(
-                f"scenarios must share a layer profile, got L in {ls} "
-                "(mixed-profile pad-to-max batching is an open item)")
+        # mixed-architecture batches: pad every per-layer surface to the
+        # batch-wide L_max (a single-arch batch pads to its own L, which
+        # is the bit-identical unpadded layout)
+        l_max = max(sc.problem.L for sc in scenarios)
+        self.l_pad = l_max if l_pad is None else l_pad
+        if self.l_pad < l_max:
+            raise ValueError(f"l_pad={l_pad} < batch L_max={l_max}")
         self.scenarios = list(scenarios)
         self.n_init = n_init
         self.n_max_repeat = n_max_repeat
@@ -436,13 +450,13 @@ class WholeRunBayesSplitEdge:
             pts = _init_grid(self.n_init, rng)
             if self.constraint_aware:
                 pts = np.stack([pb.project_feasible(a) for a in pts])
-            bpad = np.repeat(fill, pb.L, axis=0)
+            bpad = np.repeat(fill, self.l_pad, axis=0)
             if self.constraint_aware:
                 b = pb.boundary_candidates()
                 if len(b):
                     bpad = bpad.copy()
                     bpad[:len(b)] = b[:pb.L]
-            params.append(pb.jax_params())
+            params.append(pb.jax_params(self.l_pad))
             budgets.append(sc.budget)
             init_pts.append(pts)
             boundary.append(bpad)
@@ -464,7 +478,7 @@ class WholeRunBayesSplitEdge:
             # evaluate all n_init points before stopping)
             budget_max=max(max(sc.budget for sc in self.scenarios),
                            self.n_init),
-            n_layers=self.scenarios[0].problem.L,
+            l_pad=self.l_pad,
             constraint_aware=self.constraint_aware,
             gp_feasible_only=self.gp_feasible_only,
             use_schedules=self.use_schedules, warm_start=self.warm_start,
@@ -484,6 +498,9 @@ class WholeRunBayesSplitEdge:
         else:
             out = whole_run(stacked, grid, wvec, cfg)
         out = jax.tree.map(np.asarray, out)      # host-side gather
+        # raw device ledger (incl. per-eval split layers) — lets tests and
+        # gates audit that padded tail splits never entered the ledger
+        self._last_raw = out
 
         live = len(self.scenarios)
         fc = out["fit_calls"][:live].astype(np.int64)

@@ -130,8 +130,13 @@ def scenario_mesh(n_devices: Optional[int] = None) -> Mesh:
     """1-D ``("scen",)`` mesh over the scenario axis for the whole-run BO
     engine (``core/wholerun.py``): the per-scenario programs are
     embarrassingly parallel, so the batch data-parallelizes with no
-    collectives. ``n_devices`` limits the mesh to a device prefix
-    (default: all local devices)."""
+    collectives. Shards may be architecture-mixed: the max-L padded
+    scenario layout is dense (every per-layer array is ``(S, L_max+1)``
+    with per-scenario validity masks), so an even split over ``("scen",)``
+    needs no architecture-aware placement and per-lane results stay
+    independent of which shard a scenario lands on
+    (tests/test_mixed_arch.py). ``n_devices`` limits the mesh to a device
+    prefix (default: all local devices)."""
     import numpy as np
     devs = jax.devices()
     if n_devices is not None:

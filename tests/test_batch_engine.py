@@ -182,12 +182,21 @@ def test_batched_engine_heterogeneous_budgets_and_gains():
         assert r.best_accuracy > 0
 
 
-def test_batched_engine_rejects_mixed_profiles():
+def test_batched_engine_accepts_mixed_profiles():
+    """Mixed architectures batch via the max-L padded layout (deep
+    equivalence coverage lives in tests/test_mixed_arch.py); an empty
+    scenario list still raises."""
     from repro.core import default_resnet101_problem
-    scs = [Scenario(default_vgg19_problem(), seed=0),
-           Scenario(default_resnet101_problem(), seed=0)]
+    scs = [Scenario(default_vgg19_problem(), seed=0, budget=10),
+           Scenario(default_resnet101_problem(), seed=0, budget=10)]
+    engine = BatchedBayesSplitEdge(scs)
+    assert engine.l_pad == 37                      # batch-wide L_max
+    results = engine.run()
+    assert [r.n_evals for r in results] == [10, 10]
+    for r in results:
+        assert r.best_a is not None
     with pytest.raises(ValueError):
-        BatchedBayesSplitEdge(scs)
+        BatchedBayesSplitEdge([])
 
 
 def test_assemble_candidates_fixed_shape():

@@ -1,0 +1,246 @@
+"""Mixed-architecture scenario batches (max-L padded layer profiles).
+
+The contract the padded layout must keep (gated here and in
+tools/bench_check.py's ``mixed_matches_per_arch``):
+
+* a single-architecture batch run through the padded path is
+  trace-equivalent to the unpadded path (bitwise on this box);
+* a mixed VGG19+ResNet101 batch matches the per-architecture runs
+  scenario-for-scenario (eval counts, accuracies, incumbent traces);
+* padded tail split points never appear in the eval ledger;
+* sharding invariance holds for architecture-mixed shards.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (BatchedBayesSplitEdge, Scenario,
+                        WholeRunBayesSplitEdge, default_resnet101_problem,
+                        default_vgg19_problem)
+from repro.core import jax_cost as jc
+from repro.core.cost_model import pad_profile
+from repro.core.profiles import (max_split_layers, padded_profiles,
+                                 resnet101_profile, vgg19_profile)
+
+BUDGET = 12
+# same studied bounds as tests/test_wholerun.py
+COLD_TRACE_TOL = 1e-4
+WARM_TRACE_TOL = 0.5
+
+
+def _vgg(seeds=(0, 1), budget=BUDGET):
+    return [Scenario(default_vgg19_problem(), seed=s, budget=budget)
+            for s in seeds]
+
+
+def _resnet(seeds=(0, 1), budget=BUDGET):
+    return [Scenario(default_resnet101_problem(), seed=s, budget=budget)
+            for s in seeds]
+
+
+def _mixed(seeds=(0, 1), budget=BUDGET):
+    # the canonical mixed workload (same one bench_engine/bench_check use)
+    from repro.core import make_mixed_scenarios
+    return make_mixed_scenarios(seeds=seeds, budgets=(budget,))
+
+
+def _trace_div(r1, r2):
+    m = min(r1.n_evals, r2.n_evals)
+    return float(np.max(np.abs(np.asarray(r1.incumbent_trace[:m])
+                               - np.asarray(r2.incumbent_trace[:m]))))
+
+
+def _assert_match(res_a, res_b, tol):
+    for a, b in zip(res_a, res_b):
+        assert a.n_evals == b.n_evals
+        assert a.best_accuracy == b.best_accuracy
+        assert _trace_div(a, b) < tol
+
+
+# ---------------------------------------------------------------------------
+# padded profiles + padded constraint surface
+# ---------------------------------------------------------------------------
+
+
+def test_pad_profile_layout():
+    prof = resnet101_profile()
+    padded, valid = pad_profile(prof, 40)
+    assert padded.n_layers == prof.n_layers          # true L survives
+    assert padded.cum_macs.shape == padded.tx_bytes.shape == (41,)
+    # edge padding: the tail repeats the final real entry
+    np.testing.assert_array_equal(padded.cum_macs[prof.n_layers:],
+                                  prof.cum_macs[-1])
+    np.testing.assert_array_equal(valid,
+                                  np.arange(41) <= prof.n_layers)
+    with pytest.raises(ValueError):
+        pad_profile(prof, prof.n_layers - 1)
+    # pad to own L is the identity (no copy)
+    same, _ = pad_profile(prof, prof.n_layers)
+    assert same is prof
+
+
+def test_padded_profiles_share_l_max():
+    profs = [vgg19_profile(), resnet101_profile()]
+    l_max = max_split_layers(profs)
+    assert l_max == 37
+    for padded, valid in padded_profiles(profs):
+        assert padded.cum_macs.shape == (l_max + 1,)
+        assert valid.shape == (l_max + 1,)
+
+
+def test_make_params_padded_is_bitwise_on_own_l():
+    pb = default_vgg19_problem()
+    p0 = jc.make_params(pb)
+    p1 = jc.make_params(pb, l_pad=pb.L)
+    assert p0.keys() == p1.keys()
+    for k in p0:
+        np.testing.assert_array_equal(np.asarray(p0[k]), np.asarray(p1[k]))
+
+
+def test_padded_oracle_invariant_under_l_pad():
+    """utility / penalty / denormalize are independent of the pad width:
+    the layer coordinate clips to the scenario's own n_layers, so padded
+    tail splits are unreachable from the normalized input space."""
+    import jax
+    import jax.numpy as jnp
+
+    pb = default_resnet101_problem()
+    p0, p1 = jc.make_params(pb), jc.make_params(pb, l_pad=45)
+    rng = np.random.default_rng(0)
+    A = jnp.asarray(rng.random((512, 2)), jnp.float32)
+    li0, pw0 = jc.denormalize(p0, A)
+    li1, pw1 = jc.denormalize(p1, A)
+    np.testing.assert_array_equal(np.asarray(li0), np.asarray(li1))
+    assert int(np.max(np.asarray(li1))) <= pb.L
+    assert bool(np.all(np.asarray(jc.valid_split(p1, li1))))
+    np.testing.assert_array_equal(np.asarray(jc.penalty(p0, A)),
+                                  np.asarray(jc.penalty(p1, A)))
+    for a, b in zip(jc.utility(p0, li0, pw0), jc.utility(p1, li1, pw1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    pf0 = jax.vmap(lambda a: jc.project_feasible(p0, a))(A)
+    pf1 = jax.vmap(lambda a: jc.project_feasible(p1, a))(A)
+    np.testing.assert_array_equal(np.asarray(pf0), np.asarray(pf1))
+
+
+def test_stack_params_auto_pads_mixed_architectures():
+    pbv, pbr = default_vgg19_problem(), default_resnet101_problem()
+    st = jc.stack_params([pbv.jax_params(), pbr.jax_params()])
+    assert st["tx_bits"].shape == (2, 38)            # L_max = 37
+    # VGG's mask covers 1..37; ResNet's tail slot 37 is padding
+    assert bool(st["layer_mask"][0, 37])
+    assert not bool(st["layer_mask"][1, 37])
+    assert float(st["n_layers"][0]) == 37.0
+    assert float(st["n_layers"][1]) == 36.0
+    # pre-padded params stack to the same arrays
+    st2 = jc.stack_params([pbv.jax_params(37), pbr.jax_params(37)])
+    for k in st:
+        np.testing.assert_array_equal(np.asarray(st[k]), np.asarray(st2[k]))
+
+
+# ---------------------------------------------------------------------------
+# single-architecture batches through the padded path: trace-equivalent
+# ---------------------------------------------------------------------------
+
+
+def test_batched_padded_single_arch_is_bitwise():
+    """Forcing l_pad above the batch's own L must not change a single
+    eval: the padded path is the unpadded path for every per-scenario
+    quantity (the extra boundary slots are grid[0] duplicates that can
+    never win the first-occurrence argmax)."""
+    r0 = BatchedBayesSplitEdge(_resnet()).run()
+    r1 = BatchedBayesSplitEdge(_resnet(), l_pad=42).run()
+    for a, b in zip(r0, r1):
+        assert a.n_evals == b.n_evals
+        assert a.utilities == b.utilities
+        assert a.incumbent_trace == b.incumbent_trace
+        assert a.best_accuracy == b.best_accuracy
+
+
+def test_wholerun_padded_single_arch_is_bitwise():
+    r0 = WholeRunBayesSplitEdge(_resnet(), warm_start=False).run()
+    r1 = WholeRunBayesSplitEdge(_resnet(), warm_start=False,
+                                l_pad=42).run()
+    for a, b in zip(r0, r1):
+        assert a.n_evals == b.n_evals
+        assert a.utilities == b.utilities
+        assert a.incumbent_trace == b.incumbent_trace
+
+
+def test_engines_reject_l_pad_below_batch_l_max():
+    with pytest.raises(ValueError):
+        BatchedBayesSplitEdge(_vgg(), l_pad=10)
+    with pytest.raises(ValueError):
+        WholeRunBayesSplitEdge(_vgg(), l_pad=10)
+
+
+# ---------------------------------------------------------------------------
+# mixed batches match per-architecture runs scenario-for-scenario
+# ---------------------------------------------------------------------------
+
+
+def _per_arch_reference(engine_cls, **kw):
+    """The mixed scenarios re-run as single-architecture batches,
+    re-interleaved into mixed order (VGG, ResNet, VGG, ResNet)."""
+    rv = engine_cls(_vgg(), **kw).run()
+    rr = engine_cls(_resnet(), **kw).run()
+    return [rv[0], rr[0], rv[1], rr[1]]
+
+
+def test_mixed_batched_matches_per_arch():
+    mixed = BatchedBayesSplitEdge(_mixed()).run()
+    per = _per_arch_reference(BatchedBayesSplitEdge)
+    _assert_match(mixed, per, COLD_TRACE_TOL)
+
+
+def test_mixed_wholerun_matches_per_arch():
+    """Warm-start default: the carry is gated per lane, so a scenario's
+    theta trajectory — and therefore its whole trace — is independent of
+    which architectures share its batch."""
+    mixed = WholeRunBayesSplitEdge(_mixed()).run()
+    per = _per_arch_reference(WholeRunBayesSplitEdge)
+    _assert_match(mixed, per, COLD_TRACE_TOL)
+
+
+def test_mixed_wholerun_matches_mixed_batched_oracle():
+    """The host-driven engine stays the trace-equivalence oracle on
+    mixed batches too."""
+    res_w = WholeRunBayesSplitEdge(_mixed(), warm_start=False).run()
+    res_b = BatchedBayesSplitEdge(_mixed()).run()
+    _assert_match(res_w, res_b, COLD_TRACE_TOL)
+
+
+# ---------------------------------------------------------------------------
+# ledger hygiene: padded tail splits never evaluated
+# ---------------------------------------------------------------------------
+
+
+def test_padded_tail_splits_never_in_ledger():
+    engine = WholeRunBayesSplitEdge(_mixed(), warm_start=False)
+    results = engine.run()
+    raw = engine._last_raw
+    for i, sc in enumerate(engine.scenarios):
+        n = int(raw["n"][i])
+        ls = raw["ev_l"][i][:n]
+        assert n == results[i].n_evals
+        assert ls.min() >= 1
+        assert ls.max() <= sc.problem.L     # never a padded tail split
+
+    # host engines: the problem's own ledger records every eval
+    scs = _mixed()
+    BatchedBayesSplitEdge(scs).run()
+    for sc in scs:
+        assert sc.problem.history
+        for rec in sc.problem.history:
+            assert 1 <= rec.l <= sc.problem.L
+
+
+# ---------------------------------------------------------------------------
+# sharding invariance for architecture-mixed shards
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_shards_match_unsharded():
+    from repro.distributed.sharding import scenario_mesh
+
+    res_u = WholeRunBayesSplitEdge(_mixed()).run()
+    res_s = WholeRunBayesSplitEdge(_mixed(), mesh=scenario_mesh()).run()
+    _assert_match(res_u, res_s, WARM_TRACE_TOL)

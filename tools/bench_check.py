@@ -1,19 +1,33 @@
 #!/usr/bin/env python
 """CI gate for the BO engine: runs benchmarks/bench_engine.py in a small
 smoke configuration — under 8 forced host-platform devices so the
-scenario-sharded path is exercised — and fails (exit 1) if
+scenario-sharded path is exercised — and fails (nonzero exit) if any
+gate breaks:
 
-  * the batched engine is slower than the sequential jit-hoisted loop, or
-  * the whole-run single-dispatch engine is slower than the batched
-    (PR 1) engine, or
-  * the BO iteration loop re-jits after warmup (per-iteration compile
-    count / trace-cache size not flat), or the whole-run engine compiles
-    anything on its timed (post-warmup) runs, or
-  * the batched engine diverges from the sequential accuracies, or the
-    whole-run engine diverges from the batched accuracies, or
-  * the sharded whole run diverges from the unsharded one (eval counts
-    and accuracies equal, incumbent traces within the studied
-    tolerance — bitwise equality is not a contract across shard sizes).
+  * batched_not_slower_than_sequential — the batched engine beats the
+    sequential jit-hoisted loop;
+  * wholerun_not_slower_than_batched — the whole-run single-dispatch
+    engine beats the batched (PR 1) engine;
+  * zero_rejits_after_warmup — the BO iteration loop does not re-jit
+    after warmup (per-iteration compile count / trace-cache size flat);
+  * wholerun_zero_post_warmup_compiles — the whole-run engine compiles
+    nothing on its timed (post-warmup) runs;
+  * batched_matches_sequential / wholerun_matches_batched — the engines
+    agree on per-scenario accuracies;
+  * sharded_matches_unsharded — the sharded whole run matches the
+    unsharded one (eval counts and accuracies equal, incumbent traces
+    within the studied tolerance — bitwise equality is not a contract
+    across shard sizes);
+  * mixed_matches_per_arch — a mixed VGG19+ResNet101 (max-L padded)
+    batch through both engines matches per-architecture runs
+    scenario-for-scenario.
+
+The gate outcome is also emitted as ONE machine-readable line::
+
+    BENCH_CHECK_SUMMARY {"<gate>": {"ok": true, ...values...}, ...}
+
+so the CI log shows *which* gate broke and with what numbers. The exit
+status is the number of failed gates (0 == all green).
 
 Usage: PYTHONPATH=src python tools/bench_check.py [--scenarios 4]
        (--devices 0 disables the forced host-device override)
@@ -21,6 +35,7 @@ Usage: PYTHONPATH=src python tools/bench_check.py [--scenarios 4]
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
@@ -52,47 +67,57 @@ def main() -> int:
     r = run(n_scenarios=args.scenarios, budget=args.budget,
             repeats=args.repeats, n_legacy=0, save=False)
 
-    failures = []
-    if r["batched_s"] > r["sequential_s"]:
-        failures.append(
-            f"batched path slower than sequential: "
-            f"{r['batched_s']:.3f}s > {r['sequential_s']:.3f}s")
-    if r["wholerun_s"] > r["batched_s"]:
-        failures.append(
-            f"whole-run path slower than batched: "
-            f"{r['wholerun_s']:.3f}s > {r['batched_s']:.3f}s")
-    if not r["zero_rejits_after_warmup"]:
-        failures.append(
-            f"BO loop re-jits after warmup: per-iteration compile counts "
-            f"{r['per_iteration_compile_counts']}, trace caches "
-            f"{r['per_iteration_trace_cache_sizes']}")
-    if r["wholerun_extra_compiles"]:
-        failures.append(
-            f"whole-run engine compiled {r['wholerun_extra_compiles']} "
-            f"programs on its timed (post-warmup) runs")
-    if r["accuracies"]["sequential"] != r["accuracies"]["batched"]:
-        failures.append(
-            f"batched/sequential accuracy mismatch: {r['accuracies']}")
-    if r["accuracies"]["wholerun"] != r["accuracies"]["batched"]:
-        failures.append(
-            f"wholerun/batched accuracy mismatch: {r['accuracies']}")
-    if r["n_devices"] > 1 and not r["sharded_matches_unsharded"]:
-        failures.append("sharded whole run diverges from unsharded")
+    gates: dict = {}
+
+    def gate(name: str, ok, **values) -> None:
+        gates[name] = dict(ok=bool(ok), **values)
+
+    gate("batched_not_slower_than_sequential",
+         r["batched_s"] <= r["sequential_s"],
+         batched_s=r["batched_s"], sequential_s=r["sequential_s"])
+    gate("wholerun_not_slower_than_batched",
+         r["wholerun_s"] <= r["batched_s"],
+         wholerun_s=r["wholerun_s"], batched_s=r["batched_s"])
+    gate("zero_rejits_after_warmup", r["zero_rejits_after_warmup"],
+         per_iteration_compile_counts=r["per_iteration_compile_counts"],
+         per_iteration_trace_cache_sizes=(
+             r["per_iteration_trace_cache_sizes"]))
+    gate("wholerun_zero_post_warmup_compiles",
+         r["wholerun_extra_compiles"] == 0,
+         extra_compiles=r["wholerun_extra_compiles"])
+    gate("batched_matches_sequential",
+         r["accuracies"]["sequential"] == r["accuracies"]["batched"],
+         accuracies=r["accuracies"])
+    gate("wholerun_matches_batched",
+         r["accuracies"]["wholerun"] == r["accuracies"]["batched"],
+         accuracies=r["accuracies"])
+    if r["n_devices"] > 1:
+        gate("sharded_matches_unsharded", r["sharded_matches_unsharded"],
+             sharded_s=r["sharded_s"], n_devices=r["n_devices"])
+    gate("mixed_matches_per_arch", r["mixed_matches_per_arch"],
+         **(r["mixed_arch"] or {}))
 
     sharded = ("n/a" if r["sharded_s"] is None
                else f"{r['sharded_s']:.2f}s/{r['n_devices']}dev")
+    mixed = r["mixed_arch"]
     print(f"bench_check: {args.scenarios} scenarios, budget {args.budget}: "
           f"sequential {r['sequential_s']:.2f}s, batched {r['batched_s']:.2f}s "
           f"({r['speedup_vs_sequential']}x), wholerun {r['wholerun_s']:.2f}s "
           f"({r['speedup_wholerun_vs_batched']}x vs batched), "
           f"sharded {sharded}, "
+          f"mixed-arch {mixed['batched_s']:.2f}s/"
+          f"{mixed['n_scenarios']}scen, "
           f"zero-rejits={r['zero_rejits_after_warmup']}")
-    if failures:
-        for f in failures:
-            print(f"FAIL: {f}", file=sys.stderr)
-        return 1
-    print("OK")
-    return 0
+    print("BENCH_CHECK_SUMMARY " + json.dumps(gates, sort_keys=True))
+
+    failed = [name for name, g in gates.items() if not g["ok"]]
+    for name in failed:
+        vals = {k: v for k, v in gates[name].items() if k != "ok"}
+        print(f"FAIL {name}: {json.dumps(vals, sort_keys=True)}",
+              file=sys.stderr)
+    if not failed:
+        print("OK")
+    return len(failed)
 
 
 if __name__ == "__main__":
