@@ -1,14 +1,17 @@
 """BO engine benchmark: sequential ``BayesSplitEdge`` loop vs the
 device-resident ``BatchedBayesSplitEdge`` (2 dispatches/iteration) vs the
-whole-run ``WholeRunBayesSplitEdge`` (1 dispatch/run, warm-started GP
-refits, optional scenario sharding) over a seed x gain x budget scenario
-sweep, plus a mixed-architecture (VGG19 + ResNet101, max-L padded)
-parity-and-throughput section. Emits the canonical artifact
+whole-run ``WholeRunBayesSplitEdge`` (1 dispatch/run with lane
+compaction, warm-started GP refits, optional scenario sharding) over a
+seed x gain x budget scenario sweep, plus a mixed-architecture
+(VGG19 + ResNet101, max-L padded) parity-and-throughput section and a
+heterogeneous-budget (6..20) lane-compaction A/B (``--no-compaction``
+restores the one-dispatch program). Emits the canonical artifact
 ``benchmarks/artifacts/BENCH_bo_engine.json`` with wall-clock, speedups,
 per-iteration compile counts (must be flat after warmup => zero re-jits
-in the BO loop), warm-start fit-step accounting, candidates/sec and
-``mixed_matches_per_arch``, so the speedup and the mixed-batch contract
-are tracked across PRs.
+in the BO loop), warm-start fit-step accounting, candidates/sec,
+``mixed_matches_per_arch``, ``compaction_speedup``, live-lane occupancy
+and padding-waste ratios, so the speedups and the batch-layout
+contracts are tracked across PRs.
 """
 from __future__ import annotations
 
@@ -24,7 +27,8 @@ from benchmarks.common import save_json
 from repro.core import (BayesSplitEdge, BatchedBayesSplitEdge, Scenario,
                         WholeRunBayesSplitEdge)
 from repro.core.acquisition import compile_counters
-from repro.core.batch_bo import make_mixed_scenarios, make_vgg19_scenarios
+from repro.core.batch_bo import (make_hetero_scenarios, make_mixed_scenarios,
+                                 make_vgg19_scenarios, run_packed_shards)
 
 
 def _legacy_maximize(gp, problem, weights, t_norm, best_feasible, grid,
@@ -146,6 +150,109 @@ def _same_results(r1, r2, atol=0.5):
                for a, b in zip(r1, r2))
 
 
+def _bitwise_results(r1, r2):
+    """Exact per-scenario equality — the contract for pure re-schedulings
+    of the same per-lane programs (cold compaction, lane packing)."""
+    return all(a.n_evals == b.n_evals
+               and a.utilities == b.utilities
+               and a.incumbent_trace == b.incumbent_trace
+               and a.best_accuracy == b.best_accuracy
+               for a, b in zip(r1, r2))
+
+
+def _padding_waste(shards) -> float:
+    """Fraction of padded per-layer slots that are padding (each shard
+    padded to its own local L_max)."""
+    tot = wasted = 0
+    for shard in shards:
+        l_max = max(sc.problem.L for sc in shard)
+        for sc in shard:
+            tot += l_max + 1
+            wasted += l_max - sc.problem.L
+    return wasted / tot if tot else 0.0
+
+
+def run_hetero(repeats: int = 1) -> dict:
+    """Heterogeneous-budget + mixed-architecture batch (16 scenarios,
+    budgets 6..20, VGG19+ResNet101): the lane-compaction A/B.
+
+    Verifies the compaction/packing invariants — cold compacted runs are
+    bitwise identical to the one-dispatch wholerun, packing (including
+    per-shard-packed separate programs) is a pure permutation, warm runs
+    stay within the studied trace tolerance — then times
+    wholerun-with-compaction against the uncompacted wholerun.
+    """
+    from repro.distributed.sharding import pack_scenarios
+
+    mk = make_hetero_scenarios
+    scs = mk()
+    budgets = [sc.budget for sc in scs]
+    archs = sorted({sc.problem.cm.profile.name for sc in scs})
+
+    # invariants: cold = bitwise contract, warm = studied tolerance
+    r_nc_cold = WholeRunBayesSplitEdge(mk(), warm_start=False,
+                                       compact=False).run()
+    r_c_cold = WholeRunBayesSplitEdge(mk(), warm_start=False,
+                                      compact=True).run()
+    r_p_cold = WholeRunBayesSplitEdge(mk(), warm_start=False, compact=True,
+                                      pack=True).run()
+    r_sh_cold = run_packed_shards(mk(), n_shards=2, warm_start=False)
+    cold_bitwise = _bitwise_results(r_c_cold, r_nc_cold)
+    pack_bitwise = (_bitwise_results(r_p_cold, r_nc_cold)
+                    and _bitwise_results(r_sh_cold, r_nc_cold))
+
+    # warm parity + timing warmup (compiles all phase programs).
+    # Compaction and packing are timed SEPARATELY so the
+    # compaction_speedup trend / compaction_not_slower gate attribute
+    # regressions to the right mechanism; the combined layout (what
+    # packed CLI runs use) is reported as wholerun_packed_s.
+    eng_nc = WholeRunBayesSplitEdge(mk(), compact=False)
+    rw_nc = eng_nc.run()
+    eng_c = WholeRunBayesSplitEdge(mk(), compact=True)
+    rw_c = eng_c.run()
+    WholeRunBayesSplitEdge(mk(), compact=True, pack=True).run()
+    warm_ok = _same_results(rw_c, rw_nc)
+
+    t_nc, t_c, t_cp = [], [], []
+    for _ in range(repeats):
+        t0 = time.time()
+        eng_nc = WholeRunBayesSplitEdge(mk(), compact=False)
+        eng_nc.run()
+        t_nc.append(time.time() - t0)
+        t0 = time.time()
+        eng_c = WholeRunBayesSplitEdge(mk(), compact=True)
+        eng_c.run()
+        t_c.append(time.time() - t0)
+        t0 = time.time()
+        WholeRunBayesSplitEdge(mk(), compact=True, pack=True).run()
+        t_cp.append(time.time() - t0)
+    nc_s, c_s = float(np.min(t_nc)), float(np.min(t_c))
+    cp_s = float(np.min(t_cp))
+
+    return dict(
+        n_scenarios=len(scs), budget_min=min(budgets),
+        budget_max=max(budgets), archs=archs,
+        wholerun_s=round(nc_s, 4),
+        wholerun_compacted_s=round(c_s, 4),
+        wholerun_packed_s=round(cp_s, 4),
+        compaction_speedup=round(nc_s / c_s, 2),
+        packed_speedup=round(nc_s / cp_s, 2),
+        live_occupancy_uncompacted=round(
+            eng_nc.lane_stats()["occupancy_mean"], 3),
+        live_occupancy_compacted=round(
+            eng_c.lane_stats()["occupancy_mean"], 3),
+        compaction_dispatches=eng_c.lane_stats()["n_dispatches"],
+        compaction_lane_log=eng_c.lane_stats()["lane_log"],
+        padding_waste_ratio=round(_padding_waste([scs]), 4),
+        padding_waste_ratio_packed=round(
+            _padding_waste(pack_scenarios(scs, 2)[0]), 4),
+        cold_bitwise_match=bool(cold_bitwise),
+        warm_within_tol=bool(warm_ok),
+        packing_bitwise_match=bool(pack_bitwise),
+        compacted_matches_uncompacted=bool(cold_bitwise and warm_ok),
+    )
+
+
 def run_mixed(budget: int = 12, seeds=(0, 1), repeats: int = 1) -> dict:
     """Mixed-architecture batch (VGG19 + ResNet101, max-L padded layout):
     times one heterogeneous batch through both engines and checks it
@@ -191,7 +298,8 @@ def run_mixed(budget: int = 12, seeds=(0, 1), repeats: int = 1) -> dict:
 
 def run(n_scenarios: int = 16, budget: int = 20, repeats: int = 1,
         n_legacy: int | None = None, save: bool = True,
-        mixed: bool = True) -> dict:
+        mixed: bool = True, compaction: bool = True,
+        hetero: bool = True) -> dict:
     mon = CompileMonitor()
 
     # -- seed baseline: per-iteration recompiling sequential loop ------------
@@ -252,18 +360,23 @@ def run(n_scenarios: int = 16, budget: int = 20, repeats: int = 1,
 
     seq_s, bat_s = float(np.min(t_seq)), float(np.min(t_bat))
 
-    # -- whole-run single-dispatch engine ------------------------------------
-    WholeRunBayesSplitEdge(_scenario_grid(n_scenarios, budget)).run()
+    # -- whole-run single-dispatch engine (lane compaction unless
+    #    --no-compaction; the A/B on the canonical hetero batch is the
+    #    `hetero` section below) --------------------------------------------
+    WholeRunBayesSplitEdge(_scenario_grid(n_scenarios, budget),
+                           compact=compaction).run()
     c0 = mon.count
     t_wr = []
     for _ in range(repeats):
-        eng = WholeRunBayesSplitEdge(_scenario_grid(n_scenarios, budget))
+        eng = WholeRunBayesSplitEdge(_scenario_grid(n_scenarios, budget),
+                                     compact=compaction)
         t0 = time.time()
         wr_results = eng.run()
         t_wr.append(time.time() - t0)
     wholerun_compiles = mon.count - c0         # must be 0 after warmup
     wholerun_s = float(np.min(t_wr))
     fit_stats = eng.fit_cost_stats()
+    lane_stats = eng.lane_stats()
 
     # -- scenario-sharded whole run (needs >1 device, e.g. CI under
     #    XLA_FLAGS=--xla_force_host_platform_device_count=8) ----------------
@@ -296,6 +409,8 @@ def run(n_scenarios: int = 16, budget: int = 20, repeats: int = 1,
     # -- mixed-architecture batch (max-L padded layout) ----------------------
     mixed_report = run_mixed(budget=min(budget, 12),
                              repeats=repeats) if mixed else None
+    # -- heterogeneous-budget batch: the lane-compaction A/B -----------------
+    hetero_report = run_hetero(repeats=repeats) if hetero else None
 
     n_cand = 64 * 64 + scs[0].problem.L + 45
     evals = sum(r.n_evals for r in bat_results)
@@ -339,6 +454,13 @@ def run(n_scenarios: int = 16, budget: int = 20, repeats: int = 1,
         warmstart_fit_steps_mean=round(fit_stats["warm_steps_mean"], 2),
         wholerun_fit_calls=fit_stats["fit_calls"],
         wholerun_extra_compiles=wholerun_compiles,
+        # lane compaction (between-phase live-lane gather; --no-compaction
+        # restores the PR 2/3 one-dispatch program for A/B)
+        compaction_enabled=compaction,
+        wholerun_dispatches=lane_stats.get("n_dispatches"),
+        wholerun_live_occupancy=(
+            None if "occupancy_mean" not in lane_stats
+            else round(lane_stats["occupancy_mean"], 3)),
         # scenario sharding (None on single-device hosts)
         sharded_s=None if sharded_s is None else round(sharded_s, 4),
         n_devices=n_devices,
@@ -371,6 +493,14 @@ def run(n_scenarios: int = 16, budget: int = 20, repeats: int = 1,
         mixed_arch=mixed_report,
         mixed_matches_per_arch=(None if mixed_report is None
                                 else mixed_report["matches_per_arch"]),
+        # heterogeneous-budget batch (budgets 6..20, VGG19+ResNet101):
+        # lane-compaction speedup, occupancy and padding-waste tracking
+        hetero=hetero_report,
+        compaction_speedup=(None if hetero_report is None
+                            else hetero_report["compaction_speedup"]),
+        compacted_matches_uncompacted=(
+            None if hetero_report is None
+            else hetero_report["compacted_matches_uncompacted"]),
         compile_counters=compile_counters(),
     )
     if save:
@@ -391,9 +521,19 @@ def main():
                     default=True,
                     help="run the mixed VGG19+ResNet101 (max-L padded) "
                          "parity section (--no-mixed-arch disables)")
+    ap.add_argument("--compaction", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="between-phase lane compaction in the whole-run "
+                         "engine (--no-compaction restores the one-dispatch "
+                         "program for A/B)")
+    ap.add_argument("--hetero", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="run the heterogeneous-budget lane-compaction A/B "
+                         "section (--no-hetero disables)")
     args = ap.parse_args()
     r = run(args.scenarios, args.budget, args.repeats, args.legacy,
-            mixed=args.mixed_arch)
+            mixed=args.mixed_arch, compaction=args.compaction,
+            hetero=args.hetero)
     seed_s = r["sequential_seed_s"]
     print(f"seed-sequential {'n/a' if seed_s is None else f'{seed_s:.2f}s'}"
           f"  sequential {r['sequential_s']:.2f}s"
@@ -418,6 +558,16 @@ def main():
               f"scenarios): batched {m['batched_s']:.2f}s, wholerun "
               f"{m['wholerun_s']:.2f}s, matches-per-arch "
               f"{m['matches_per_arch']}")
+    if r["hetero"] is not None:
+        h = r["hetero"]
+        print(f"hetero budgets {h['budget_min']}..{h['budget_max']} "
+              f"({h['n_scenarios']} scenarios): wholerun {h['wholerun_s']:.2f}s"
+              f" -> compacted {h['wholerun_compacted_s']:.2f}s "
+              f"({h['compaction_speedup']}x), occupancy "
+              f"{h['live_occupancy_uncompacted']:.2f} -> "
+              f"{h['live_occupancy_compacted']:.2f}, matches "
+              f"{h['compacted_matches_uncompacted']}, packing-invariant "
+              f"{h['packing_bitwise_match']}")
     print(f"matern-score {r['matern_score_candidates_per_sec']:,} cand/s  "
           f"BO loop {r['bo_candidates_per_sec']:,} cand/s")
     return r

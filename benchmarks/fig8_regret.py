@@ -26,7 +26,10 @@ def run(n_seeds: int = 3, budget: int = 30, batched: bool = False,
              ("Basic-BO",
               lambda pb: BasicBO(pb, budget=budget), BASIC_BO_KW)]
     # --mixed-arch: both pairs' seed sweeps as ONE max-L padded batch per
-    # algorithm (2 dispatches/iteration for ALL pairs x seeds at once)
+    # algorithm (2 dispatches/iteration for ALL pairs x seeds at once),
+    # routed through the architecture-aware lane packing (pack=True sorts
+    # lanes by (n_layers, budget) — the same layout CI's bench gates
+    # measure — and inverse-permutes results back to config order)
     mixed_results = {}
     if mixed_arch:
         for algo_name, _, engine_kw in algos:
@@ -36,7 +39,7 @@ def run(n_seeds: int = 3, budget: int = 30, batched: bool = False,
                     scs.append(Scenario(mk_pb(), seed=seed, budget=budget))
                     tags.append(pair_name)
             for tag, res in zip(tags,
-                                BatchedBayesSplitEdge(scs,
+                                BatchedBayesSplitEdge(scs, pack=True,
                                                       **engine_kw).run()):
                 mixed_results.setdefault((tag, algo_name), []).append(res)
     out = {}

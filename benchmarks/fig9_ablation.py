@@ -23,7 +23,11 @@ def _run_variant(n_seeds: int, batched: bool, gp_feasible_only=None, **kw):
     if batched:
         scs = [Scenario(default_vgg19_problem(), seed=seed, budget=BUDGET)
                for seed in range(n_seeds)]
-        eng = BatchedBayesSplitEdge(scs, n_max_repeat=10 ** 9, **kw)
+        # routed through the architecture-aware packing (identity on this
+        # single-arch equal-budget sweep, but CLI runs now take the same
+        # batch-layout path CI's bench gates measure)
+        eng = BatchedBayesSplitEdge(scs, n_max_repeat=10 ** 9, pack=True,
+                                    **kw)
         if gp_feasible_only is not None:
             eng.gp_feasible_only = gp_feasible_only
         return eng.run()

@@ -2,8 +2,8 @@
 wireless split inference (GP surrogate + hybrid acquisition + Algorithm 1),
 over the analytic cost substrate."""
 from repro.core.batch_bo import (  # noqa: F401
-    BatchedBayesSplitEdge, Scenario, make_mixed_scenarios,
-    make_vgg19_scenarios,
+    BatchedBayesSplitEdge, Scenario, make_hetero_scenarios,
+    make_mixed_scenarios, make_vgg19_scenarios, run_packed_shards,
 )
 from repro.core.wholerun import WholeRunBayesSplitEdge  # noqa: F401
 from repro.core.bo import BasicBO, BayesSplitEdge, BOResult  # noqa: F401

@@ -265,4 +265,9 @@ def compile_counters() -> dict:
     if wr is not None:       # lazy: wholerun imports this module
         out["wholerun"] = wr.whole_run._cache_size()
         out["wholerun_sharded"] = wr.whole_run_sharded._cache_size()
+        # compaction programs: init + per-(bucket, lane-count) phases +
+        # the lane gather (all warmed by the first run of a scenario set)
+        out["wholerun_init"] = wr.init_run._cache_size()
+        out["wholerun_phase"] = wr.run_phase._cache_size()
+        out["wholerun_gather"] = wr.gather_lanes._cache_size()
     return out

@@ -56,9 +56,21 @@ class BatchedBayesSplitEdge:
                  n_max_repeat: int = 5, weights: AcqWeights = AcqWeights(),
                  gp_cfg: gpm.GPConfig = gpm.GPConfig(), grid_n: int = 64,
                  constraint_aware: bool = True, use_grad_term: bool = True,
-                 use_schedules: bool = True, l_pad: Optional[int] = None):
+                 use_schedules: bool = True, l_pad: Optional[int] = None,
+                 pack: bool = False):
         if not scenarios:
             raise ValueError("need at least one scenario")
+        scenarios = list(scenarios)
+        # architecture-aware lane packing: sort by (n_layers, budget) so
+        # like-L / like-budget lanes sit together. Pure internal staging:
+        # `self.scenarios` and the returned results stay in the caller's
+        # order; only `_staged` (the batch layout) sorts
+        self._pack_order = None
+        self._staged = scenarios
+        if pack:
+            from repro.distributed.sharding import pack_order
+            self._pack_order = pack_order(scenarios)
+            self._staged = [scenarios[i] for i in self._pack_order]
         # mixed-architecture batches: pad every per-layer surface to the
         # batch-wide L_max (a single-arch batch pads to its own L, which
         # is the bit-identical unpadded layout)
@@ -66,7 +78,7 @@ class BatchedBayesSplitEdge:
         self.l_pad = l_max if l_pad is None else l_pad
         if self.l_pad < l_max:
             raise ValueError(f"l_pad={l_pad} < batch L_max={l_max}")
-        self.scenarios = list(scenarios)
+        self.scenarios = scenarios
         self.n_init = n_init
         self.n_max_repeat = n_max_repeat
         w = weights
@@ -105,7 +117,7 @@ class BatchedBayesSplitEdge:
         states = [ScenarioState(sc.problem, sc.seed, sc.budget, self.n_init,
                                 self.n_max_repeat, cfg,
                                 self.gp_feasible_only, self.constraint_aware)
-                  for sc in self.scenarios]
+                  for sc in self._staged]
         for st in states:
             st.init_design()
 
@@ -128,8 +140,11 @@ class BatchedBayesSplitEdge:
 
             key = tuple(id(st) for st in batch)
             if key not in params_cache:
+                # per-layer surfaces pad to the batch width at stack time
+                # (bitwise-equal to pre-padding each scenario's params)
                 params_cache = {key: jax_cost.stack_params(
-                    [st.pb.jax_params(self.l_pad) for st in batch])}
+                    [st.pb.jax_params() for st in batch],
+                    l_pad=self.l_pad)}
             params_b = params_cache[key]
 
             # two dispatches for the whole bucket: fit_batch + maximize_batch
@@ -165,7 +180,11 @@ class BatchedBayesSplitEdge:
                 on_iteration(it, compile_counters())
             it += 1
 
-        return [st.result() for st in states]
+        results = [st.result() for st in states]
+        if self._pack_order is not None:
+            from repro.distributed.sharding import unpack_results
+            results = unpack_results(results, self._pack_order)
+        return results
 
 
 def make_vgg19_scenarios(seeds: Sequence[int] = (0, 1, 2, 3),
@@ -205,3 +224,48 @@ def make_mixed_scenarios(seeds: Sequence[int] = (0, 1),
             out.append(Scenario(default_resnet101_problem(), seed=seed,
                                 budget=budget))
     return out
+
+
+def make_hetero_scenarios(seeds: Sequence[int] = (0, 1),
+                          budgets: Sequence[int] = (6, 10, 14, 20)
+                          ) -> List[Scenario]:
+    """Heterogeneous-budget + mixed-architecture batch: VGG19 and
+    ResNet101 interleaved across a 6..20 eval-budget spread — the
+    canonical lane-compaction workload (budget-6 lanes die at the init
+    design, the rest retire in waves), used by bench_engine's hetero
+    section and bench_check's compaction gates."""
+    from repro.core.problem import (default_resnet101_problem,
+                                    default_vgg19_problem)
+
+    out = []
+    for seed in seeds:
+        for budget in budgets:
+            out.append(Scenario(default_vgg19_problem(), seed=seed,
+                                budget=budget))
+            out.append(Scenario(default_resnet101_problem(), seed=seed,
+                                budget=budget))
+    return out
+
+
+def run_packed_shards(scenarios: Sequence[Scenario], n_shards: int = 1,
+                      engine_cls=None, **engine_kw) -> List[BOResult]:
+    """Architecture-aware shard packing over separate engine programs:
+    scenarios sort by ``(n_layers, budget)`` and split into contiguous
+    shards, each run as its own batch padded to the SHARD-local
+    ``L_max`` and ``budget_max`` instead of the global batch maxima —
+    so a CNN shard never pays an LM-decoder profile's padding and an
+    early-budget shard never sizes its ledger for budget 20.
+
+    Results come back in input order: the packing is a pure permutation
+    (gated bitwise in tests/test_compaction.py and bench_check).
+    ``engine_cls`` defaults to ``WholeRunBayesSplitEdge``.
+    """
+    from repro.distributed.sharding import pack_scenarios, unpack_results
+    if engine_cls is None:
+        from repro.core.wholerun import WholeRunBayesSplitEdge
+        engine_cls = WholeRunBayesSplitEdge
+    shards, order = pack_scenarios(scenarios, n_shards)
+    packed_results: List[BOResult] = []
+    for shard in shards:
+        packed_results.extend(engine_cls(shard, **engine_kw).run())
+    return unpack_results(packed_results, order)

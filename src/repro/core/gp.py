@@ -210,6 +210,16 @@ def fit_batch(data, cfg: GPConfig):
     return jax.vmap(lambda d: _fit_core(d, cfg))(data)
 
 
+def take_lanes(tree, idx):
+    """Gather rows of a lane-batched pytree along the leading scenario
+    axis: every leaf ``v -> v[idx]``. The batched-dataset layout
+    (``x (S, m, d)``, ``y (S, m)``, ``mask (S, m)``) is positionless
+    along S — the masked kernel only ever reduces within a row — so
+    bucketed datasets survive a lane compaction/permutation unchanged,
+    as does the fitted posterior-cache pytree and the whole-run state."""
+    return jax.tree.map(lambda v: v[idx], tree)
+
+
 def empty_dataset_batch(cfg: GPConfig, s: int, dim: int = 2):
     """Batched-dataset layout for S scenarios: (S, max_points, ...)."""
     return dict(

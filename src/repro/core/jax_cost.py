@@ -78,7 +78,7 @@ def make_params(problem, l_pad: int | None = None) -> dict:
     )
 
 
-def stack_params(params_list) -> dict:
+def stack_params(params_list, l_pad: int | None = None) -> dict:
     """Stack per-scenario param dicts into one batched pytree (S, ...).
 
     Mixed-architecture batches stack directly: any per-layer array
@@ -86,12 +86,24 @@ def stack_params(params_list) -> dict:
     values for the cost surfaces, False for ``layer_mask``). Each
     scenario's ``n_layers`` stays its true ``L``, which is what keeps the
     padded tail unreachable (:func:`denormalize` clips to it).
+
+    ``l_pad`` forces the padded per-layer width instead of the stack's
+    own maximum — how the engines stage their batches: each engine (and
+    therefore each packed shard, which is its own engine) stacks raw
+    per-scenario params to ITS ``l_pad``, so unlike shards don't
+    inherit the global batch's padding waste. It must cover every
+    scenario's own ``L``.
     """
     out = {}
     for k in params_list[0].keys():
         vals = [jnp.asarray(p[k]) for p in params_list]
         if vals[0].ndim:
             n = max(v.shape[0] for v in vals)
+            if l_pad is not None:
+                if l_pad + 1 < n:
+                    raise ValueError(
+                        f"l_pad={l_pad} below stacked L_max={n - 1}")
+                n = l_pad + 1
             vals = [v if v.shape[0] == n
                     else (jnp.pad(v, (0, n - v.shape[0]))  # False tail
                           if k == "layer_mask"

@@ -34,6 +34,21 @@ the loop uses the scenario's own ``params["n_layers"]``, so one compiled
 whole-run program mixes VGG19 and ResNet101 scenarios while padded tail
 split points stay unreachable. A single-architecture batch pads to its
 own ``L`` — the bit-identical historical layout.
+
+Heterogeneous-*budget* batches add a second waste axis: early-stopped
+scenarios stay as frozen-yet-computed lanes inside the ``while_loop``.
+With ``compact=True`` (the default off-mesh) the run becomes a short
+host-driven sequence of phase dispatches over the same loop body: each
+phase's ``while_loop`` additionally exits once the live-lane count falls
+to half the lane capacity, the driver gathers the surviving lanes into a
+dense prefix (an on-device permutation of the full state pytree — GP
+datasets, ledger, probe queue, warm-start thetas) and re-dispatches the
+next phase at the next power-of-2 lane count; retired lanes' results are
+inverse-scattered back into the original scenario order. Every lane's
+trajectory is a function of its own state only (the established
+sharding-invariance argument), so compaction is a pure re-scheduling:
+cold runs are bitwise identical to the uncompacted program, warm runs
+stay within the studied trace tolerance (``tests/test_compaction.py``).
 """
 from __future__ import annotations
 
@@ -81,6 +96,13 @@ def _sel(pred, new, old):
     """Per-scenario select with broadcasting over trailing dims."""
     p = pred.reshape(pred.shape + (1,) * (new.ndim - pred.ndim))
     return jnp.where(p, new, old)
+
+
+def _next_pow2(n: int) -> int:
+    s = 1
+    while s < n:
+        s *= 2
+    return s
 
 
 def _init_state(s: int, cfg: WholeRunConfig, dim: int = 2):
@@ -191,10 +213,145 @@ def _step(st, a, params, budget, cfg: WholeRunConfig):
     return st
 
 
+def _one_init(st, p1, pts, budget, cfg: WholeRunConfig):
+    """The init design for one scenario (vmapped by the callers)."""
+    for j in range(cfg.n_init):
+        st = _observe(st, pts[j], p1, cfg)
+    st = _push_probes(st, p1, cfg)
+    st["active"] = st["n"] < budget
+    return st
+
+
+def _pen_static(params, grid, boundary):
+    """Eq.-(11) penalties for the grid + boundary candidate slots depend
+    only on the channel — computed once per run, not per iteration."""
+    return jnp.concatenate([
+        jax.vmap(lambda p1: jc.penalty(p1, grid))(params),
+        jax.vmap(jc.penalty)(params, boundary),
+    ], axis=1)                                   # (S, G + L)
+
+
 # -- the whole-run program ---------------------------------------------------
 
 _OUT_KEYS = ("ev_u", "ev_acc", "ev_feas", "ev_trace", "ev_l", "n",
              "best_a", "best_u", "has_best", "fit_steps", "fit_calls")
+
+
+def _make_body(run_data, grid, wvec, cfg: WholeRunConfig, m: int):
+    """One BO iteration over the whole lane batch at dataset bucket ``m``
+    — the loop body shared by the single-dispatch program and the
+    compacted phase dispatches. ``run_data`` carries the lane-aligned
+    inputs: ``params``, ``boundary``, ``budget`` and the precomputed
+    static penalty block ``pen``."""
+    params = run_data["params"]
+    s = run_data["budget"].shape[0]
+    pen_static = run_data["pen"]
+
+    def cold_fit(data, _theta0):
+        gp = jax.vmap(lambda d: gpm._fit_core(d, cfg.gp))(data)
+        return gp, jnp.full((s,), cfg.gp.fit_steps, jnp.int32)
+
+    def warm_fit(data, theta0):
+        return jax.vmap(lambda d, t0: gpm._fit_core_from(
+            d, cfg.gp, t0, cfg.gp.warm_steps,
+            cfg.gp.warm_gtol))(data, theta0)
+
+    def body(carry):
+        st, it = carry
+        data = gpm.slice_data(
+            dict(x=st["x"], y=st["y"], mask=st["mask"]), m)
+        first = it == 0
+        # iterations where every live scenario is draining its probe
+        # queue skip the fit + acquisition entirely (probes bypass the
+        # GP in the host engines too). Iteration 0 always fits: every
+        # lane's warm-start carry is seeded by a cold fit of its init
+        # design, which keeps each scenario's theta trajectory
+        # independent of the batch composition (=> sharding-invariant)
+        need_acq = jnp.any(st["active"] & (st["probe_n"] == 0)) | first
+
+        def fit_and_maximize(theta0):
+            # GP refits: cold on iteration 0 (no previous
+            # hyperparameters), warm-started + adaptive after
+            if cfg.warm_start:
+                gp_b, steps = jax.lax.cond(first, cold_fit, warm_fit,
+                                           data, theta0)
+            else:
+                gp_b, steps = cold_fit(data, theta0)
+
+            cand_b = jax.vmap(
+                lambda p1, b1, a1, h1: assemble_candidates_dev(
+                    p1, grid, b1, a1, h1, cfg.constraint_aware))(
+                    params, run_data["boundary"], st["best_a"],
+                    st["has_best"])
+
+            live_ev = (jnp.arange(cfg.budget_max)[None, :]
+                       < st["n"][:, None])
+            ev_min = jnp.min(jnp.where(live_ev, st["ev_u"], jnp.inf),
+                             axis=1)
+            bf = jnp.where(jnp.isfinite(st["best_u"]), st["best_u"],
+                           ev_min)
+            if cfg.use_schedules:
+                t_norm = ((st["n"] - cfg.n_init).astype(jnp.float32)
+                          / jnp.maximum(run_data["budget"] - 1, 1))
+            else:
+                t_norm = jnp.zeros((s,), jnp.float32)
+            lam_b = _sched(wvec["lam_base0"], wvec["lam_baseT"], t_norm)
+            lam_g = _sched(wvec["lam_g0"], wvec["lam_gT"], t_norm)
+
+            n_stat = pen_static.shape[1]
+            pen_b = jnp.concatenate([
+                pen_static,
+                jax.vmap(jc.penalty)(params, cand_b[:, n_stat:]),
+            ], axis=1)
+
+            def one_max(gp, p1, c, bf1, lb1, lg1, pen1):
+                a, _, _ = _maximize_core(
+                    gp, p1, c, bf1, lb1, lg1, wvec["lam_p"],
+                    wvec["beta"], jnp.float32(REFINE_LR), REFINE_STEPS,
+                    penalties=pen1)
+                return a
+            a_acq = jax.vmap(one_max)(gp_b, params, cand_b, bf,
+                                      lam_b, lam_g, pen_b)
+            return gp_b["theta"], steps, a_acq
+
+        def probe_only(theta0):
+            return (theta0, jnp.zeros((s,), jnp.int32),
+                    jnp.zeros((s, 2), jnp.float32))
+
+        theta, steps, a_acq = jax.lax.cond(
+            need_acq, fit_and_maximize, probe_only, st["theta"])
+
+        # probe-or-acquisition select + FIFO pop (probes bypass the
+        # GP, matching ScenarioState.drain_probes' eval order)
+        use_probe = st["probe_n"] > 0
+        a_next = jnp.where(use_probe[:, None], st["probe_q"][:, 0],
+                           a_acq)
+        st2 = dict(st)
+        st2["probe_q"] = jnp.where(use_probe[:, None, None],
+                                   jnp.roll(st["probe_q"], -1, axis=1),
+                                   st["probe_q"])
+        st2["probe_n"] = st["probe_n"] - use_probe.astype(jnp.int32)
+        # a lane's warm-start carry advances only on ITS acquisition
+        # iterations (plus the aligned iteration-0 cold seed), so the
+        # theta trajectory is a function of the lane's own eval
+        # sequence — independent of batch composition and sharding
+        upd = first | ~use_probe
+        st2["theta"] = jax.tree.map(partial(_sel, upd), theta,
+                                    st["theta"])
+        st2["fit_steps"] = st["fit_steps"] + jnp.where(upd, steps, 0)
+        st2["fit_calls"] = st["fit_calls"] + upd.astype(jnp.int32)
+        st2 = jax.vmap(lambda s1, a, p1, b: _step(s1, a, p1, b, cfg))(
+            st2, a_next, params, run_data["budget"])
+        # freeze finished scenarios (early-stop masking)
+        new = jax.tree.map(partial(_sel, st["active"]), st2, st)
+        return new, it + 1
+
+    return body
+
+
+def _final_bucket(cfg: WholeRunConfig) -> int:
+    return gpm.bucket_size(min(cfg.budget_max, cfg.gp.max_points),
+                           cfg.gp.max_points)
 
 
 def _whole_run(stacked, grid, wvec, cfg: WholeRunConfig):
@@ -207,131 +364,21 @@ def _whole_run(stacked, grid, wvec, cfg: WholeRunConfig):
     dataset — exact w.r.t. the masked kernel — and the loop falls through
     to the next bucket once any scenario outgrows it, so early iterations
     never pay the full ``max_points``^3 Cholesky.
+
+    Returns ``(outputs, n_iters)`` — the total body-step count feeds the
+    live-lane occupancy accounting (every step computes all S lanes).
     """
     params = stacked["params"]
     s = stacked["budget"].shape[0]
 
-    def one_init(st, p1, pts, budget):
-        for j in range(cfg.n_init):
-            st = _observe(st, pts[j], p1, cfg)
-        st = _push_probes(st, p1, cfg)
-        st["active"] = st["n"] < budget
-        return st
+    state = jax.vmap(lambda st1, p1, pts, b: _one_init(st1, p1, pts, b, cfg))(
+        _init_state(s, cfg), params, stacked["init_pts"], stacked["budget"])
 
-    state = jax.vmap(one_init)(_init_state(s, cfg), params,
-                               stacked["init_pts"], stacked["budget"])
+    run_data = dict(params=params, boundary=stacked["boundary"],
+                    budget=stacked["budget"],
+                    pen=_pen_static(params, grid, stacked["boundary"]))
 
-    # Eq.-(11) penalties for the grid + boundary candidate slots depend
-    # only on the channel — computed once per run, not per iteration
-    pen_static = jnp.concatenate([
-        jax.vmap(lambda p1: jc.penalty(p1, grid))(params),
-        jax.vmap(jc.penalty)(params, stacked["boundary"]),
-    ], axis=1)                                   # (S, G + L)
-
-    def body_for(m: int):
-        def cold_fit(data, _theta0):
-            gp = jax.vmap(lambda d: gpm._fit_core(d, cfg.gp))(data)
-            return gp, jnp.full((s,), cfg.gp.fit_steps, jnp.int32)
-
-        def warm_fit(data, theta0):
-            return jax.vmap(lambda d, t0: gpm._fit_core_from(
-                d, cfg.gp, t0, cfg.gp.warm_steps,
-                cfg.gp.warm_gtol))(data, theta0)
-
-        def body(carry):
-            st, it = carry
-            data = gpm.slice_data(
-                dict(x=st["x"], y=st["y"], mask=st["mask"]), m)
-            first = it == 0
-            # iterations where every live scenario is draining its probe
-            # queue skip the fit + acquisition entirely (probes bypass the
-            # GP in the host engines too). Iteration 0 always fits: every
-            # lane's warm-start carry is seeded by a cold fit of its init
-            # design, which keeps each scenario's theta trajectory
-            # independent of the batch composition (=> sharding-invariant)
-            need_acq = jnp.any(st["active"] & (st["probe_n"] == 0)) | first
-
-            def fit_and_maximize(theta0):
-                # GP refits: cold on iteration 0 (no previous
-                # hyperparameters), warm-started + adaptive after
-                if cfg.warm_start:
-                    gp_b, steps = jax.lax.cond(first, cold_fit, warm_fit,
-                                               data, theta0)
-                else:
-                    gp_b, steps = cold_fit(data, theta0)
-
-                cand_b = jax.vmap(
-                    lambda p1, b1, a1, h1: assemble_candidates_dev(
-                        p1, grid, b1, a1, h1, cfg.constraint_aware))(
-                        params, stacked["boundary"], st["best_a"],
-                        st["has_best"])
-
-                live_ev = (jnp.arange(cfg.budget_max)[None, :]
-                           < st["n"][:, None])
-                ev_min = jnp.min(jnp.where(live_ev, st["ev_u"], jnp.inf),
-                                 axis=1)
-                bf = jnp.where(jnp.isfinite(st["best_u"]), st["best_u"],
-                               ev_min)
-                if cfg.use_schedules:
-                    t_norm = ((st["n"] - cfg.n_init).astype(jnp.float32)
-                              / jnp.maximum(stacked["budget"] - 1, 1))
-                else:
-                    t_norm = jnp.zeros((s,), jnp.float32)
-                lam_b = _sched(wvec["lam_base0"], wvec["lam_baseT"], t_norm)
-                lam_g = _sched(wvec["lam_g0"], wvec["lam_gT"], t_norm)
-
-                n_stat = pen_static.shape[1]
-                pen_b = jnp.concatenate([
-                    pen_static,
-                    jax.vmap(jc.penalty)(params, cand_b[:, n_stat:]),
-                ], axis=1)
-
-                def one_max(gp, p1, c, bf1, lb1, lg1, pen1):
-                    a, _, _ = _maximize_core(
-                        gp, p1, c, bf1, lb1, lg1, wvec["lam_p"],
-                        wvec["beta"], jnp.float32(REFINE_LR), REFINE_STEPS,
-                        penalties=pen1)
-                    return a
-                a_acq = jax.vmap(one_max)(gp_b, params, cand_b, bf,
-                                          lam_b, lam_g, pen_b)
-                return gp_b["theta"], steps, a_acq
-
-            def probe_only(theta0):
-                return (theta0, jnp.zeros((s,), jnp.int32),
-                        jnp.zeros((s, 2), jnp.float32))
-
-            theta, steps, a_acq = jax.lax.cond(
-                need_acq, fit_and_maximize, probe_only, st["theta"])
-
-            # probe-or-acquisition select + FIFO pop (probes bypass the
-            # GP, matching ScenarioState.drain_probes' eval order)
-            use_probe = st["probe_n"] > 0
-            a_next = jnp.where(use_probe[:, None], st["probe_q"][:, 0],
-                               a_acq)
-            st2 = dict(st)
-            st2["probe_q"] = jnp.where(use_probe[:, None, None],
-                                       jnp.roll(st["probe_q"], -1, axis=1),
-                                       st["probe_q"])
-            st2["probe_n"] = st["probe_n"] - use_probe.astype(jnp.int32)
-            # a lane's warm-start carry advances only on ITS acquisition
-            # iterations (plus the aligned iteration-0 cold seed), so the
-            # theta trajectory is a function of the lane's own eval
-            # sequence — independent of batch composition and sharding
-            upd = first | ~use_probe
-            st2["theta"] = jax.tree.map(partial(_sel, upd), theta,
-                                        st["theta"])
-            st2["fit_steps"] = st["fit_steps"] + jnp.where(upd, steps, 0)
-            st2["fit_calls"] = st["fit_calls"] + upd.astype(jnp.int32)
-            st2 = jax.vmap(lambda s1, a, p1, b: _step(s1, a, p1, b, cfg))(
-                st2, a_next, params, stacked["budget"])
-            # freeze finished scenarios (early-stop masking)
-            new = jax.tree.map(partial(_sel, st["active"]), st2, st)
-            return new, it + 1
-
-        return body
-
-    m_final = gpm.bucket_size(min(cfg.budget_max, cfg.gp.max_points),
-                              cfg.gp.max_points)
+    m_final = _final_bucket(cfg)
     phases = [b for b in gpm.DATASET_BUCKETS if b < m_final] + [m_final]
 
     carry = (state, jnp.int32(0))
@@ -345,12 +392,62 @@ def _whole_run(stacked, grid, wvec, cfg: WholeRunConfig):
                 ok = ok & (jnp.max(st["n_pts"]) <= m)
             return ok
 
-        carry = jax.lax.while_loop(cond, body_for(m), carry)
-    state = carry[0]
-    return {k: state[k] for k in _OUT_KEYS}
+        carry = jax.lax.while_loop(cond, _make_body(run_data, grid, wvec,
+                                                    cfg, m), carry)
+    state, n_iters = carry
+    return {k: state[k] for k in _OUT_KEYS}, n_iters
 
 
 whole_run = jax.jit(_whole_run, static_argnames=("cfg",))
+
+
+# -- lane-compaction phase programs (host-driven dispatch sequence) ----------
+
+@partial(jax.jit, static_argnames=("cfg",))
+def init_run(stacked, grid, cfg: WholeRunConfig):
+    """The init design as its own dispatch: returns the full-lane state
+    plus the static penalty block (both lane-aligned, so the compaction
+    gather permutes them together with ``params``/``boundary``)."""
+    params = stacked["params"]
+    s = stacked["budget"].shape[0]
+    state = jax.vmap(lambda st1, p1, pts, b: _one_init(st1, p1, pts, b, cfg))(
+        _init_state(s, cfg), params, stacked["init_pts"], stacked["budget"])
+    return state, _pen_static(params, grid, stacked["boundary"])
+
+
+@partial(jax.jit, static_argnames=("cfg", "m", "last"))
+def run_phase(run_data, state, it, grid, wvec, cfg: WholeRunConfig,
+              m: int, last: bool):
+    """One compaction phase: the shared loop body at dataset bucket ``m``,
+    iterated until (a) every lane is done, (b) a dataset outgrows the
+    bucket, or (c) the live-lane count falls to half the lane capacity —
+    at which point the host driver compacts and re-dispatches the next
+    phase as a smaller program. ``it`` is the global iteration counter
+    carried across dispatches (iteration 0 seeds the warm-start carry)."""
+    s = run_data["budget"].shape[0]
+
+    def cond(carry):
+        st, it_ = carry
+        live = jnp.sum(st["active"])
+        ok = (live > 0) & (it_ < cfg.budget_max)
+        if not last:
+            # fall through once a LIVE dataset outgrows m. Retired lanes
+            # are masked out: the driver sizes m from live lanes only, so
+            # a dead lane whose dataset already outgrew the bucket (while
+            # the live count hasn't halved yet) must not flip this exit —
+            # it would make the dispatch run zero iterations and wedge
+            # the host loop. Exact either way: frozen lanes never fit.
+            live_pts = jnp.where(st["active"], st["n_pts"], 0)
+            ok = ok & (jnp.max(live_pts) <= m)
+        if s > 1:                  # exit to compact once occupancy halves
+            ok = ok & (2 * live > s)
+        return ok
+
+    return jax.lax.while_loop(cond, _make_body(run_data, grid, wvec, cfg, m),
+                              (state, it))
+
+
+gather_lanes = jax.jit(gpm.take_lanes)
 
 
 @partial(jax.jit, static_argnames=("cfg", "mesh"))
@@ -358,7 +455,9 @@ def whole_run_sharded(stacked, grid, wvec, cfg: WholeRunConfig, mesh: Mesh):
     """Scenario-sharded whole run: the leading S axis splits across the
     1-D ``("scen",)`` mesh; each device steps its own ``while_loop`` over
     its shard (the per-scenario programs are embarrassingly parallel, so
-    there are no collectives).
+    there are no collectives). Shards exit their loops independently, so
+    packing like-budget lanes onto the same shard (``pack=True``) lets a
+    shard full of early finishers retire its device early.
 
     The per-lane warm-start gating makes each scenario's trajectory
     independent of batch *composition*, but XLA may reassociate f32
@@ -366,7 +465,7 @@ def whole_run_sharded(stacked, grid, wvec, cfg: WholeRunConfig, mesh: Mesh):
     guaranteed equivalent to the unsharded program only within the
     studied trace tolerance (empirically bitwise on multi-lane shards).
     """
-    f = shard_map(lambda st, g, w: _whole_run(st, g, w, cfg), mesh=mesh,
+    f = shard_map(lambda st, g, w: _whole_run(st, g, w, cfg)[0], mesh=mesh,
                   in_specs=(PS("scen"), PS(), PS()), out_specs=PS("scen"),
                   check_vma=False)
     return f(stacked, grid, wvec)
@@ -391,6 +490,18 @@ class WholeRunBayesSplitEdge:
     * ``mesh`` — a 1-D ``("scen",)`` mesh to shard the scenario axis
       across devices (see :func:`repro.distributed.sharding
       .scenario_mesh`).
+    * ``compact`` — between-phase lane compaction (default on; ignored
+      under ``mesh``, where shards already exit independently): the run
+      becomes a short sequence of phase dispatches, each sized to the
+      next power-of-2 over the surviving lanes, so heterogeneous-budget
+      batches stop paying for early-stopped lanes. A pure re-scheduling
+      of the same per-lane programs (``compact=False`` restores the
+      one-dispatch whole-run program).
+    * ``pack`` — architecture-aware lane packing: lanes sort by
+      ``(n_layers, budget)`` so lanes that die together live together
+      (and like-``L`` lanes share shards under ``mesh``). Purely an
+      internal staging layout: ``self.scenarios``, the returned results
+      and the raw ledger all stay aligned with the caller's order.
     """
 
     name = "WholeRun-Bayes-Split-Edge"
@@ -400,9 +511,20 @@ class WholeRunBayesSplitEdge:
                  gp_cfg: gpm.GPConfig = gpm.GPConfig(), grid_n: int = 64,
                  constraint_aware: bool = True, use_grad_term: bool = True,
                  use_schedules: bool = True, warm_start: bool = True,
-                 mesh: Optional[Mesh] = None, l_pad: Optional[int] = None):
+                 mesh: Optional[Mesh] = None, l_pad: Optional[int] = None,
+                 compact: bool = True, pack: bool = False):
         if not scenarios:
             raise ValueError("need at least one scenario")
+        scenarios = list(scenarios)
+        # architecture-aware lane packing is pure internal staging:
+        # `self.scenarios`, results and the raw ledger all stay in the
+        # caller's order; only `_staged` (the device lane layout) sorts
+        self._pack_order = None
+        self._staged = scenarios
+        if pack:
+            from repro.distributed.sharding import pack_order
+            self._pack_order = pack_order(scenarios)
+            self._staged = [scenarios[i] for i in self._pack_order]
         # mixed-architecture batches: pad every per-layer surface to the
         # batch-wide L_max (a single-arch batch pads to its own L, which
         # is the bit-identical unpadded layout)
@@ -410,7 +532,7 @@ class WholeRunBayesSplitEdge:
         self.l_pad = l_max if l_pad is None else l_pad
         if self.l_pad < l_max:
             raise ValueError(f"l_pad={l_pad} < batch L_max={l_max}")
-        self.scenarios = list(scenarios)
+        self.scenarios = scenarios
         self.n_init = n_init
         self.n_max_repeat = n_max_repeat
         w = weights
@@ -425,15 +547,14 @@ class WholeRunBayesSplitEdge:
         self.use_schedules = use_schedules
         self.warm_start = warm_start
         self.mesh = mesh
+        self.compact = compact
         self.gp_feasible_only = constraint_aware
 
     # -- input staging -------------------------------------------------------
     def _pad_to(self) -> int:
         """Scenario count padded to a power of 2 (bounded trace count), and
         to a multiple of the mesh size when sharding."""
-        s = 1
-        while s < len(self.scenarios):
-            s *= 2
+        s = _next_pow2(len(self.scenarios))
         if self.mesh is not None:
             d = self.mesh.size
             s = max(s, d)
@@ -444,7 +565,7 @@ class WholeRunBayesSplitEdge:
     def _stacked(self) -> dict:
         fill = self.grid[:1]
         params, budgets, init_pts, boundary = [], [], [], []
-        for sc in self.scenarios:
+        for sc in self._staged:
             pb = sc.problem
             rng = np.random.default_rng(sc.seed)
             pts = _init_grid(self.n_init, rng)
@@ -456,7 +577,7 @@ class WholeRunBayesSplitEdge:
                 if len(b):
                     bpad = bpad.copy()
                     bpad[:len(b)] = b[:pb.L]
-            params.append(pb.jax_params(self.l_pad))
+            params.append(pb.jax_params())
             budgets.append(sc.budget)
             init_pts.append(pts)
             boundary.append(bpad)
@@ -464,11 +585,96 @@ class WholeRunBayesSplitEdge:
         for lst in (params, budgets, init_pts, boundary):
             lst.extend([lst[0]] * pad)
         return dict(
-            params=jc.stack_params(params),
+            # per-layer surfaces pad to the batch width at stack time
+            # (bitwise-equal to pre-padding each scenario's params)
+            params=jc.stack_params(params, l_pad=self.l_pad),
             budget=jnp.asarray(np.asarray(budgets), jnp.int32),
             init_pts=jnp.asarray(np.stack(init_pts), jnp.float32),
             boundary=jnp.asarray(np.stack(boundary), jnp.float32),
         )
+
+    # -- compaction driver ---------------------------------------------------
+    def _run_compacted(self, stacked, grid, wvec, cfg: WholeRunConfig):
+        """Phase-dispatch sequence with between-phase lane compaction.
+
+        After every phase dispatch the driver reads back the (tiny)
+        ``active``/``n_pts`` vectors, gathers surviving lanes into a
+        dense prefix at the next power-of-2 lane count (an on-device
+        permutation of the whole state pytree + lane-aligned inputs),
+        and snapshots retiring lanes' outputs into their original
+        scenario rows — the inverse scatter that makes the whole thing a
+        pure permutation of the uncompacted program's results.
+        """
+        n_real = len(self.scenarios)
+        s0 = stacked["budget"].shape[0]
+        state, pen = init_run(stacked, grid, cfg)
+        run_data = dict(params=stacked["params"],
+                        boundary=stacked["boundary"],
+                        budget=stacked["budget"], pen=pen)
+        if s0 > n_real:
+            # power-of-2 padding lanes duplicate scenario 0 and never
+            # contribute results — deactivate them so the first
+            # compaction drops them instead of stepping them
+            state = dict(state, active=state["active"]
+                         & (jnp.arange(s0) < n_real))
+        order = np.arange(s0)       # lane row -> original scenario index
+        order[n_real:] = -1
+        final: dict = {}
+
+        def flush(st, rows):
+            """Inverse scatter for retiring lanes: device-gather just the
+            given rows and write them into their original scenario slots
+            (lanes still running are flushed once, at exit)."""
+            rows = [r for r in rows if order[r] >= 0]
+            if not rows:
+                return
+            idx = jnp.asarray(np.asarray(rows))
+            sub = {k: np.asarray(st[k][idx]) for k in _OUT_KEYS}
+            for k, v in sub.items():
+                if k not in final:
+                    final[k] = np.zeros((n_real,) + v.shape[1:], v.dtype)
+            for j, r in enumerate(rows):
+                for k in final:
+                    final[k][order[r]] = sub[k][j]
+
+        m_final = _final_bucket(cfg)
+        it = jnp.int32(0)
+        it_host = 0
+        lane_log: list = []
+        while True:
+            active = np.asarray(state["active"])
+            n_pts = np.asarray(state["n_pts"])
+            live = np.flatnonzero(active)
+            if live.size == 0:
+                break
+            m = gpm.bucket_size(int(n_pts[live].max()), cfg.gp.max_points)
+            s_next = _next_pow2(live.size)
+            if s_next < active.shape[0]:
+                # retire exactly the lanes about to drop
+                flush(state, np.setdiff1d(np.arange(active.shape[0]), live))
+                keep = np.concatenate(
+                    [live, np.repeat(live[:1], s_next - live.size)])
+                idx = jnp.asarray(keep)
+                state = gather_lanes(state, idx)
+                run_data = gather_lanes(run_data, idx)
+                if live.size < s_next:   # pad duplicates stay frozen
+                    state = dict(state, active=state["active"]
+                                 & (jnp.arange(s_next) < live.size))
+                order = np.where(np.arange(s_next) < live.size,
+                                 order[keep], -1)
+            state, it = run_phase(run_data, state, it, grid, wvec, cfg,
+                                  m, m >= m_final)
+            it_new = int(it)
+            lane_log.append(dict(lanes=int(run_data["budget"].shape[0]),
+                                 live=int(live.size), bucket=m,
+                                 iters=it_new - it_host))
+            it_host = it_new
+        flush(state, np.arange(state["n"].shape[0]))
+        slots = sum(log["lanes"] * log["iters"] for log in lane_log)
+        self._lane_stats = dict(
+            n_dispatches=len(lane_log), lane_slots=slots,
+            lane_log=lane_log)
+        return final
 
     def run(self) -> List[BOResult]:
         cfg = WholeRunConfig(
@@ -491,18 +697,41 @@ class WholeRunBayesSplitEdge:
                     lam_p=jnp.float32(w.lam_p), beta=jnp.float32(w.beta))
         stacked = self._stacked()
         grid = jnp.asarray(self.grid, jnp.float32)
+        self._lane_stats = {}
         if self.mesh is not None:
             sh = scenario_sharding(self.mesh)
             stacked = jax.device_put(stacked, sh)
             out = whole_run_sharded(stacked, grid, wvec, cfg, self.mesh)
+            out = jax.tree.map(np.asarray, out)  # host-side gather
+        elif self.compact:
+            out = self._run_compacted(stacked, grid, wvec, cfg)
         else:
-            out = whole_run(stacked, grid, wvec, cfg)
-        out = jax.tree.map(np.asarray, out)      # host-side gather
+            out, n_iters = whole_run(stacked, grid, wvec, cfg)
+            out = jax.tree.map(np.asarray, out)
+            self._lane_stats = dict(
+                n_dispatches=1,
+                lane_slots=int(n_iters) * stacked["budget"].shape[0],
+                lane_log=[dict(lanes=stacked["budget"].shape[0],
+                               live=len(self.scenarios),
+                               iters=int(n_iters))])
         # raw device ledger (incl. per-eval split layers) — lets tests and
-        # gates audit that padded tail splits never entered the ledger
-        self._last_raw = out
+        # gates audit that padded tail splits never entered the ledger.
+        # Row i aligns with self.scenarios[i] (the caller's order): packed
+        # staging is inverted here, like the results below
+        if self._pack_order is not None:
+            rowmap = np.empty(len(self._pack_order), np.int64)
+            rowmap[self._pack_order] = np.arange(len(self._pack_order))
+            self._last_raw = {k: v[rowmap] for k, v in out.items()}
+        else:
+            self._last_raw = out
 
         live = len(self.scenarios)
+        if self._lane_stats:
+            evals = int(np.sum(out["n"][:live])) - live * self.n_init
+            slots = self._lane_stats["lane_slots"]
+            self._lane_stats["loop_evals"] = evals
+            self._lane_stats["occupancy_mean"] = (
+                evals / slots if slots else 1.0)
         fc = out["fit_calls"][:live].astype(np.int64)
         fs = out["fit_steps"][:live].astype(np.int64)
         calls, total = int(fc.sum()), int(fs.sum())
@@ -523,7 +752,7 @@ class WholeRunBayesSplitEdge:
                              if warm_calls else 0.0))
 
         results = []
-        for i, sc in enumerate(self.scenarios):
+        for i, sc in enumerate(self._staged):
             n = int(out["n"][i])
             has_best = bool(out["has_best"][i])
             best_a = (np.asarray(out["best_a"][i], np.float64) if has_best
@@ -538,9 +767,20 @@ class WholeRunBayesSplitEdge:
                 [float(v) for v in out["ev_acc"][i][:n]],
                 [bool(v) for v in out["ev_feas"][i][:n]],
                 [float(v) for v in out["ev_trace"][i][:n]]))
+        if self._pack_order is not None:
+            # inverse permutation: results return in the caller's order
+            from repro.distributed.sharding import unpack_results
+            results = unpack_results(results, self._pack_order)
         return results
 
     def fit_cost_stats(self) -> dict:
         """Adam-step accounting of the last ``run``: total refit calls and
         mean Adam steps per refit (cold fits count ``fit_steps`` each)."""
         return dict(getattr(self, "_fit_stats", {}))
+
+    def lane_stats(self) -> dict:
+        """Lane-occupancy accounting of the last ``run`` (empty under
+        ``mesh``): computed lane-slots vs live-lane evals in the BO loop
+        (``occupancy_mean == 1.0`` means no dead-lane waste), plus the
+        per-dispatch lane log of the compaction driver."""
+        return dict(getattr(self, "_lane_stats", {}))

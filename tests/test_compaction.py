@@ -1,0 +1,259 @@
+"""Whole-run lane compaction + architecture-aware shard packing.
+
+The contract (gated here and by bench_check's
+``compacted_matches_uncompacted`` / ``compaction_not_slower`` /
+``packing_result_invariant``):
+
+* compaction is a pure re-scheduling: cold compacted runs are bitwise
+  identical to the one-dispatch whole-run program, warm runs stay within
+  the studied warm-start trace tolerance;
+* packing (in-batch lane sort, and per-shard packed programs padded to
+  the shard-local ``L_max``/``budget_max``) is a pure permutation of
+  results — bitwise after the inverse scatter;
+* edge cases: every lane dead after the init design, a single-lane
+  batch, and compaction composed with mixed-architecture batches.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (BatchedBayesSplitEdge, Scenario,
+                        WholeRunBayesSplitEdge, default_resnet101_problem,
+                        default_vgg19_problem, make_hetero_scenarios,
+                        make_mixed_scenarios, run_packed_shards)
+from repro.core import jax_cost as jc
+from repro.distributed.sharding import pack_order, pack_scenarios
+
+# same studied bounds as tests/test_wholerun.py
+COLD_TRACE_TOL = 1e-4
+WARM_TRACE_TOL = 0.5
+
+
+def _hetero(seeds=(0, 1), budgets=(6, 10, 20)):
+    """VGG19-only heterogeneous-budget sweep: budget-6 lanes die at the
+    init design (n_init=9), budget-10 lanes one iteration later."""
+    return [Scenario(default_vgg19_problem(), seed=s, budget=b)
+            for s in seeds for b in budgets]
+
+
+def _assert_bitwise(res_a, res_b):
+    for a, b in zip(res_a, res_b):
+        assert a.n_evals == b.n_evals
+        assert a.utilities == b.utilities
+        assert a.incumbent_trace == b.incumbent_trace
+        assert a.feasible == b.feasible
+        assert a.best_accuracy == b.best_accuracy
+
+
+def _trace_div(r1, r2):
+    m = min(r1.n_evals, r2.n_evals)
+    return float(np.max(np.abs(np.asarray(r1.incumbent_trace[:m])
+                               - np.asarray(r2.incumbent_trace[:m]))))
+
+
+# ---------------------------------------------------------------------------
+# compaction == uncompacted, scenario for scenario
+# ---------------------------------------------------------------------------
+
+
+def test_hetero_budgets_cold_compacted_is_bitwise():
+    """6/10/20 mixed budgets: the compacted phase-dispatch sequence is a
+    pure re-scheduling of the one-dispatch program — bitwise on the
+    cold-fit path."""
+    r_nc = WholeRunBayesSplitEdge(_hetero(), warm_start=False,
+                                  compact=False).run()
+    r_c = WholeRunBayesSplitEdge(_hetero(), warm_start=False,
+                                 compact=True).run()
+    _assert_bitwise(r_c, r_nc)
+
+
+def test_hetero_budgets_warm_compacted_within_tolerance():
+    """Warm-start default: per-lane theta carries are gated on each
+    lane's own acquisition iterations, so compaction keeps every
+    scenario inside the studied warm trace tolerance."""
+    eng_nc = WholeRunBayesSplitEdge(_hetero(), compact=False)
+    eng_c = WholeRunBayesSplitEdge(_hetero(), compact=True)
+    r_nc, r_c = eng_nc.run(), eng_c.run()
+    for a, b in zip(r_c, r_nc):
+        assert a.n_evals == b.n_evals
+        assert a.best_accuracy == b.best_accuracy
+        assert _trace_div(a, b) < WARM_TRACE_TOL
+    # the compaction driver actually compacted (multiple dispatches) and
+    # recovered dead-lane waste: occupancy strictly above the frozen-lane
+    # baseline of the one-dispatch program
+    st_c, st_nc = eng_c.lane_stats(), eng_nc.lane_stats()
+    assert st_c["n_dispatches"] > 1
+    assert st_c["lane_slots"] < st_nc["lane_slots"]
+    assert st_c["occupancy_mean"] > st_nc["occupancy_mean"]
+    assert st_c["loop_evals"] == st_nc["loop_evals"]
+
+
+def test_phase_progress_with_stale_dead_lane_dataset():
+    """A retired lane whose GP dataset already outgrew the live lanes'
+    bucket must not wedge the phase loop (regression: the phase cond
+    used the all-lane n_pts max while the driver sizes the bucket from
+    live lanes only, so the dispatch ran zero iterations forever)."""
+    import jax.numpy as jnp
+
+    from repro.core import wholerun as wr
+
+    scs = [Scenario(default_vgg19_problem(), seed=s, budget=12)
+           for s in range(4)]
+    eng = WholeRunBayesSplitEdge(scs, compact=True)
+    cfg = wr.WholeRunConfig(
+        n_init=eng.n_init, n_max_repeat=eng.n_max_repeat, budget_max=30,
+        l_pad=eng.l_pad, constraint_aware=True, gp_feasible_only=True,
+        use_schedules=True, warm_start=True, gp=eng.gp_cfg)
+    stacked = eng._stacked()
+    grid = jnp.asarray(eng.grid, jnp.float32)
+    state, pen = wr.init_run(stacked, grid, cfg)
+    run_data = dict(params=stacked["params"], boundary=stacked["boundary"],
+                    budget=stacked["budget"], pen=pen)
+    # lane 0: retired with a 32-bucket dataset; lanes 1..3 live at <=16
+    # (live count 3 of 4 — above half capacity, so no gather happens)
+    state = dict(state)
+    state["active"] = jnp.asarray([False, True, True, True])
+    state["n_pts"] = state["n_pts"].at[0].set(20)
+    w = eng.weights
+    wvec = dict(lam_base0=jnp.float32(w.lam_base0),
+                lam_baseT=jnp.float32(w.lam_baseT),
+                lam_g0=jnp.float32(w.lam_g0), lam_gT=jnp.float32(w.lam_gT),
+                lam_p=jnp.float32(w.lam_p), beta=jnp.float32(w.beta))
+    _, it = wr.run_phase(run_data, state, jnp.int32(1), grid, wvec, cfg,
+                         16, False)
+    assert int(it) > 1            # the phase made progress
+
+
+def test_all_lanes_die_in_phase_one():
+    """Every budget <= n_init: all lanes retire at the init design, the
+    driver dispatches zero phase programs, and the ledger still holds
+    the full init design per lane."""
+    scs = [Scenario(default_vgg19_problem(), seed=s, budget=5)
+           for s in (0, 1, 2)]
+    eng = WholeRunBayesSplitEdge(scs, compact=True)
+    res = eng.run()
+    ref = BatchedBayesSplitEdge(
+        [Scenario(default_vgg19_problem(), seed=s, budget=5)
+         for s in (0, 1, 2)]).run()
+    assert eng.lane_stats()["n_dispatches"] == 0
+    assert eng.lane_stats()["occupancy_mean"] == 1.0
+    for a, b in zip(res, ref):
+        assert a.n_evals == b.n_evals == 9
+        assert a.best_accuracy == b.best_accuracy
+        assert _trace_div(a, b) < COLD_TRACE_TOL
+
+
+def test_single_lane_batch():
+    scs = [Scenario(default_vgg19_problem(), seed=0, budget=12)]
+    r_nc = WholeRunBayesSplitEdge(scs, warm_start=False,
+                                  compact=False).run()
+    r_c = WholeRunBayesSplitEdge(
+        [Scenario(default_vgg19_problem(), seed=0, budget=12)],
+        warm_start=False, compact=True).run()
+    _assert_bitwise(r_c, r_nc)
+
+
+def test_mixed_arch_composes_with_compaction():
+    """Mixed VGG19+ResNet101 batches (max-L padded) keep the host-driven
+    engine as their trace-equivalence oracle under compaction, and the
+    raw ledger still never holds a padded tail split."""
+    eng = WholeRunBayesSplitEdge(make_mixed_scenarios(), warm_start=False,
+                                 compact=True)
+    res_w = eng.run()
+    res_b = BatchedBayesSplitEdge(make_mixed_scenarios()).run()
+    for a, b in zip(res_w, res_b):
+        assert a.n_evals == b.n_evals
+        assert a.best_accuracy == b.best_accuracy
+        assert _trace_div(a, b) < COLD_TRACE_TOL
+    raw = eng._last_raw
+    for i, sc in enumerate(eng.scenarios):
+        ls = raw["ev_l"][i][:int(raw["n"][i])]
+        assert ls.min() >= 1 and ls.max() <= sc.problem.L
+
+
+# ---------------------------------------------------------------------------
+# architecture-aware packing: a pure permutation of results
+# ---------------------------------------------------------------------------
+
+
+def test_pack_order_sorts_by_layers_then_budget():
+    scs = make_hetero_scenarios(seeds=(0,))     # VGG(37)/ResNet(36) x 6..20
+    order = pack_order(scs)
+    keys = [(scs[i].problem.L, scs[i].budget) for i in order]
+    assert keys == sorted(keys)
+    # stable: equal keys keep input order
+    same = [Scenario(default_vgg19_problem(), seed=s, budget=10)
+            for s in range(4)]
+    np.testing.assert_array_equal(pack_order(same), np.arange(4))
+
+
+def test_pack_scenarios_shards_are_contiguous_and_complete():
+    scs = make_hetero_scenarios()
+    shards, order = pack_scenarios(scs, n_shards=3)
+    flat = [sc for sh in shards for sc in sh]
+    assert len(flat) == len(scs)
+    assert [id(sc) for sc in flat] == [id(scs[i]) for i in order]
+    # like-L lanes are contiguous: each shard's local L_max <= global
+    assert max(max(sc.problem.L for sc in sh) for sh in shards) == 37
+    assert min(max(sc.problem.L for sc in sh) for sh in shards) == 36
+
+
+def test_pack_engine_results_in_input_order():
+    """pack=True must be invisible to the caller: results line up with
+    the input scenario list, bitwise, on both engines."""
+    mk = make_hetero_scenarios
+    r_ref = WholeRunBayesSplitEdge(mk(), warm_start=False,
+                                   compact=False).run()
+    r_pack = WholeRunBayesSplitEdge(mk(), warm_start=False, compact=True,
+                                    pack=True).run()
+    _assert_bitwise(r_pack, r_ref)
+    b_ref = BatchedBayesSplitEdge(make_mixed_scenarios()).run()
+    b_pack = BatchedBayesSplitEdge(make_mixed_scenarios(), pack=True).run()
+    _assert_bitwise(b_pack, b_ref)
+
+
+def test_pack_keeps_scenarios_and_raw_ledger_caller_aligned():
+    """Packing is internal staging only: `engine.scenarios` and the raw
+    audit ledger stay aligned with the caller's scenario list, so the
+    established `zip(engine.scenarios, results)` audit pattern keeps
+    pairing each result with its own scenario."""
+    scs = make_hetero_scenarios()
+    eng = WholeRunBayesSplitEdge(scs, warm_start=False, compact=True,
+                                 pack=True)
+    results = eng.run()
+    assert [id(sc) for sc in eng.scenarios] == [id(sc) for sc in scs]
+    raw = eng._last_raw
+    for i, (sc, res) in enumerate(zip(eng.scenarios, results)):
+        assert int(raw["n"][i]) == res.n_evals
+        ls = raw["ev_l"][i][:res.n_evals]
+        assert ls.min() >= 1 and ls.max() <= sc.problem.L
+
+
+def test_packed_shards_bitwise_after_inverse_scatter():
+    """Per-shard programs pad to the SHARD-local L_max and budget_max;
+    after the inverse scatter the results are bitwise equal to one
+    unpacked whole-batch program."""
+    mk = make_hetero_scenarios
+    r_ref = WholeRunBayesSplitEdge(mk(), warm_start=False,
+                                   compact=False).run()
+    for n_shards in (2, 3):
+        r_sh = run_packed_shards(mk(), n_shards=n_shards, warm_start=False)
+        _assert_bitwise(r_sh, r_ref)
+
+
+# ---------------------------------------------------------------------------
+# stack_params per-shard l_pad path
+# ---------------------------------------------------------------------------
+
+
+def test_stack_params_forced_l_pad():
+    pbv, pbr = default_vgg19_problem(), default_resnet101_problem()
+    st = jc.stack_params([pbv.jax_params(), pbr.jax_params()], l_pad=40)
+    assert st["tx_bits"].shape == (2, 41)
+    assert not bool(st["layer_mask"][0, 38])    # forced tail is padding
+    assert float(st["n_layers"][0]) == 37.0     # true L survives
+    # equivalent to pre-padding each scenario to the same width
+    st2 = jc.stack_params([pbv.jax_params(40), pbr.jax_params(40)])
+    for k in st:
+        np.testing.assert_array_equal(np.asarray(st[k]), np.asarray(st2[k]))
+    with pytest.raises(ValueError):
+        jc.stack_params([pbv.jax_params(), pbr.jax_params()], l_pad=20)

@@ -20,17 +20,30 @@ gate breaks:
     across shard sizes);
   * mixed_matches_per_arch — a mixed VGG19+ResNet101 (max-L padded)
     batch through both engines matches per-architecture runs
-    scenario-for-scenario.
+    scenario-for-scenario;
+  * compacted_matches_uncompacted — on the heterogeneous-budget batch
+    (budgets 6..20, VGG19+ResNet101), wholerun-with-lane-compaction
+    matches the one-dispatch wholerun scenario-for-scenario (bitwise
+    for cold fits, within the studied trace tolerance warm);
+  * compaction_not_slower — wholerun-with-compaction is not slower than
+    the uncompacted wholerun on that batch (<= 1.05x);
+  * packing_result_invariant — architecture-aware lane packing
+    (in-batch sort and per-shard packed programs) is a pure permutation
+    of results (bitwise on cold runs).
 
 The gate outcome is also emitted as ONE machine-readable line::
 
     BENCH_CHECK_SUMMARY {"<gate>": {"ok": true, ...values...}, ...}
 
-so the CI log shows *which* gate broke and with what numbers. The exit
-status is the number of failed gates (0 == all green).
+so the CI log shows *which* gate broke and with what numbers, and the
+same record is appended to benchmarks/artifacts/bench_history.jsonl
+(uploaded as a CI workflow artifact) so the perf trajectory stays
+visible across PRs. The exit status is the number of failed gates
+(0 == all green).
 
 Usage: PYTHONPATH=src python tools/bench_check.py [--scenarios 4]
-       (--devices 0 disables the forced host-device override)
+       (--devices 0 disables the forced host-device override,
+        --no-history skips the bench_history.jsonl append)
 """
 from __future__ import annotations
 
@@ -38,6 +51,7 @@ import argparse
 import json
 import os
 import sys
+import time
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
@@ -50,6 +64,10 @@ def main() -> int:
     ap.add_argument("--devices", type=int, default=8,
                     help="forced host-platform device count for the "
                          "sharded path (0 disables)")
+    ap.add_argument("--history", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="append the gate record to benchmarks/artifacts/"
+                         "bench_history.jsonl (--no-history disables)")
     args = ap.parse_args()
 
     # must run before jax initializes (the first jax import below)
@@ -96,6 +114,24 @@ def main() -> int:
              sharded_s=r["sharded_s"], n_devices=r["n_devices"])
     gate("mixed_matches_per_arch", r["mixed_matches_per_arch"],
          **(r["mixed_arch"] or {}))
+    # lane compaction + arch-aware packing (heterogeneous-budget batch)
+    h = r["hetero"]
+    gate("compacted_matches_uncompacted",
+         h["compacted_matches_uncompacted"],
+         cold_bitwise_match=h["cold_bitwise_match"],
+         warm_within_tol=h["warm_within_tol"],
+         n_scenarios=h["n_scenarios"],
+         budgets=[h["budget_min"], h["budget_max"]])
+    gate("compaction_not_slower",
+         h["wholerun_compacted_s"] <= 1.05 * h["wholerun_s"],
+         wholerun_s=h["wholerun_s"],
+         wholerun_compacted_s=h["wholerun_compacted_s"],
+         compaction_speedup=h["compaction_speedup"],
+         live_occupancy_uncompacted=h["live_occupancy_uncompacted"],
+         live_occupancy_compacted=h["live_occupancy_compacted"])
+    gate("packing_result_invariant", h["packing_bitwise_match"],
+         padding_waste_ratio=h["padding_waste_ratio"],
+         padding_waste_ratio_packed=h["padding_waste_ratio_packed"])
 
     sharded = ("n/a" if r["sharded_s"] is None
                else f"{r['sharded_s']:.2f}s/{r['n_devices']}dev")
@@ -107,8 +143,29 @@ def main() -> int:
           f"sharded {sharded}, "
           f"mixed-arch {mixed['batched_s']:.2f}s/"
           f"{mixed['n_scenarios']}scen, "
+          f"compaction {h['compaction_speedup']}x "
+          f"(occupancy {h['live_occupancy_uncompacted']:.2f}->"
+          f"{h['live_occupancy_compacted']:.2f}), "
           f"zero-rejits={r['zero_rejits_after_warmup']}")
     print("BENCH_CHECK_SUMMARY " + json.dumps(gates, sort_keys=True))
+
+    if args.history:
+        # one JSONL record per CI run — the cross-PR perf trajectory
+        # (uploaded as a workflow artifact by .github/workflows/ci.yml)
+        hist = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            os.pardir, "benchmarks", "artifacts",
+                            "bench_history.jsonl")
+        os.makedirs(os.path.dirname(hist), exist_ok=True)
+        record = dict(
+            ts=int(time.time()),
+            scenarios=args.scenarios, budget=args.budget,
+            sequential_s=r["sequential_s"], batched_s=r["batched_s"],
+            wholerun_s=r["wholerun_s"], sharded_s=r["sharded_s"],
+            compaction_speedup=h["compaction_speedup"],
+            live_occupancy_compacted=h["live_occupancy_compacted"],
+            gates=gates)
+        with open(hist, "a") as f:
+            f.write(json.dumps(record, sort_keys=True) + "\n")
 
     failed = [name for name, g in gates.items() if not g["ok"]]
     for name in failed:
