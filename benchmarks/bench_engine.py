@@ -3,9 +3,11 @@ device-resident ``BatchedBayesSplitEdge`` (2 dispatches/iteration) vs the
 whole-run ``WholeRunBayesSplitEdge`` (1 dispatch/run with lane
 compaction, warm-started GP refits, optional scenario sharding) over a
 seed x gain x budget scenario sweep, plus a mixed-architecture
-(VGG19 + ResNet101, max-L padded) parity-and-throughput section and a
+(VGG19 + ResNet101, max-L padded) parity-and-throughput section, a
 heterogeneous-budget (6..20) lane-compaction A/B (``--no-compaction``
-restores the one-dispatch program). Emits the canonical artifact
+restores the one-dispatch program) and a streaming admission-queue
+serving section (``run_streaming``: replay parity, arrival throughput,
+queue depth and lane occupancy over time). Emits the canonical artifact
 ``benchmarks/artifacts/BENCH_bo_engine.json`` with wall-clock, speedups,
 per-iteration compile counts (must be flat after warmup => zero re-jits
 in the BO loop), warm-start fit-step accounting, candidates/sec,
@@ -253,6 +255,92 @@ def run_hetero(repeats: int = 1) -> dict:
     )
 
 
+def run_streaming(repeats: int = 1, n_lanes: int = 8) -> dict:
+    """Streaming admission-queue engine on the canonical heterogeneous
+    batch (16 requests, budgets 6..20, VGG19+ResNet101) served through
+    ``n_lanes`` lanes.
+
+    Verifies the replay contract — a replayed request feed is bitwise
+    equal (cold fits) / within the studied tolerance (warm) to the same
+    scenarios as one offline batch — then times the server against the
+    offline engines. The gate baseline is the batched engine
+    (``streaming_throughput``: arrivals/s within 1.15x of offline
+    batched scenarios/s); the ratio against the stronger
+    wholerun-compacted path is reported for tracking. A bursty
+    wall-clock-paced trace drives the queue-depth study.
+    """
+    from repro.runtime.stream import StreamingBayesSplitEdge, \
+        requests_from_trace
+    from repro.wireless.traces import arrival_trace
+
+    mk = make_hetero_scenarios
+    # replay parity: cold = bitwise contract, warm = studied tolerance
+    r_s_cold = StreamingBayesSplitEdge(mk(), n_lanes=n_lanes,
+                                       warm_start=False).run()
+    r_o_cold = WholeRunBayesSplitEdge(mk(), warm_start=False,
+                                      compact=False).run()
+    cold_bitwise = _bitwise_results(r_s_cold, r_o_cold)
+    eng_w = StreamingBayesSplitEdge(mk(), n_lanes=n_lanes)
+    r_s_warm = eng_w.run()
+    r_o_warm = WholeRunBayesSplitEdge(mk(), compact=True).run()
+    warm_ok = _same_results(r_s_warm, r_o_warm)
+
+    # timings (everything above warmed the compiled programs). The
+    # throughput gate compares min-over-repeats, so floor the repeat
+    # count: one noisy sample on a loaded CI box must not flip it
+    BatchedBayesSplitEdge(mk()).run()
+    t_s, t_b, t_w = [], [], []
+    for _ in range(max(repeats, 2)):
+        t0 = time.time()
+        eng_w = StreamingBayesSplitEdge(mk(), n_lanes=n_lanes)
+        eng_w.run()
+        t_s.append(time.time() - t0)
+        t0 = time.time()
+        BatchedBayesSplitEdge(mk()).run()
+        t_b.append(time.time() - t0)
+        t0 = time.time()
+        WholeRunBayesSplitEdge(mk(), compact=True).run()
+        t_w.append(time.time() - t0)
+    stream_s = float(np.min(t_s))
+    bat_s = float(np.min(t_b))
+    wr_s = float(np.min(t_w))
+    st = eng_w.stream_stats()
+
+    # queue-depth study: bursty arrivals paced against the wall clock
+    tr = arrival_trace("bursty", n=16, seed=0, budgets=(6, 10, 14, 20))
+    eng_q = StreamingBayesSplitEdge(
+        requests_from_trace(tr), n_lanes=n_lanes, budget_max=20,
+        arrivals=tr["t"], time_scale=0.1)
+    eng_q.run()
+    st_q = eng_q.stream_stats()
+
+    n = len(mk())
+    return dict(
+        n_requests=n, n_lanes=n_lanes,
+        streaming_s=round(stream_s, 4),
+        batched_s=round(bat_s, 4),
+        wholerun_compacted_s=round(wr_s, 4),
+        arrivals_per_s=round(n / stream_s, 2),
+        offline_batched_scenarios_per_s=round(n / bat_s, 2),
+        # wall-clock slowdown ratios (>1 == streaming is slower): named
+        # so a streaming regression moves them UP, not up-is-good
+        slowdown_vs_batched=round(stream_s / bat_s, 3),
+        slowdown_vs_wholerun=round(stream_s / wr_s, 3),
+        n_dispatches=st["n_dispatches"],
+        occupancy_mean=round(st["occupancy_mean"], 3),
+        # lane occupancy over time: live/lanes per serving dispatch
+        lane_occupancy_trace=[round(e["live"] / e["lanes"], 3)
+                              for e in st["lane_log"]],
+        lane_log=st["lane_log"],
+        queue_depth_mean=round(st_q["queue_depth_mean"], 3),
+        queue_depth_max=st_q["queue_depth_max"],
+        queue_depth_trace=st_q["queue_depth"],
+        cold_bitwise_match=bool(cold_bitwise),
+        warm_within_tol=bool(warm_ok),
+        matches_offline=bool(cold_bitwise and warm_ok),
+    )
+
+
 def run_mixed(budget: int = 12, seeds=(0, 1), repeats: int = 1) -> dict:
     """Mixed-architecture batch (VGG19 + ResNet101, max-L padded layout):
     times one heterogeneous batch through both engines and checks it
@@ -299,7 +387,7 @@ def run_mixed(budget: int = 12, seeds=(0, 1), repeats: int = 1) -> dict:
 def run(n_scenarios: int = 16, budget: int = 20, repeats: int = 1,
         n_legacy: int | None = None, save: bool = True,
         mixed: bool = True, compaction: bool = True,
-        hetero: bool = True) -> dict:
+        hetero: bool = True, streaming: bool = True) -> dict:
     mon = CompileMonitor()
 
     # -- seed baseline: per-iteration recompiling sequential loop ------------
@@ -411,6 +499,8 @@ def run(n_scenarios: int = 16, budget: int = 20, repeats: int = 1,
                              repeats=repeats) if mixed else None
     # -- heterogeneous-budget batch: the lane-compaction A/B -----------------
     hetero_report = run_hetero(repeats=repeats) if hetero else None
+    # -- streaming admission-queue serving engine ----------------------------
+    streaming_report = run_streaming(repeats=repeats) if streaming else None
 
     n_cand = 64 * 64 + scs[0].problem.L + 45
     evals = sum(r.n_evals for r in bat_results)
@@ -501,6 +591,12 @@ def run(n_scenarios: int = 16, budget: int = 20, repeats: int = 1,
         compacted_matches_uncompacted=(
             None if hetero_report is None
             else hetero_report["compacted_matches_uncompacted"]),
+        # streaming admission-queue serving engine: replay parity +
+        # arrival throughput, queue depth and lane occupancy over time
+        streaming=streaming_report,
+        streaming_matches_offline=(
+            None if streaming_report is None
+            else streaming_report["matches_offline"]),
         compile_counters=compile_counters(),
     )
     if save:
@@ -530,10 +626,14 @@ def main():
                     default=True,
                     help="run the heterogeneous-budget lane-compaction A/B "
                          "section (--no-hetero disables)")
+    ap.add_argument("--streaming", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="run the streaming admission-queue serving "
+                         "section (--no-streaming disables)")
     args = ap.parse_args()
     r = run(args.scenarios, args.budget, args.repeats, args.legacy,
             mixed=args.mixed_arch, compaction=args.compaction,
-            hetero=args.hetero)
+            hetero=args.hetero, streaming=args.streaming)
     seed_s = r["sequential_seed_s"]
     print(f"seed-sequential {'n/a' if seed_s is None else f'{seed_s:.2f}s'}"
           f"  sequential {r['sequential_s']:.2f}s"
@@ -568,6 +668,15 @@ def main():
               f"{h['live_occupancy_compacted']:.2f}, matches "
               f"{h['compacted_matches_uncompacted']}, packing-invariant "
               f"{h['packing_bitwise_match']}")
+    if r["streaming"] is not None:
+        s = r["streaming"]
+        print(f"streaming {s['n_requests']} requests / {s['n_lanes']} lanes:"
+              f" {s['streaming_s']:.2f}s ({s['arrivals_per_s']:.1f} arr/s,"
+              f" {s['slowdown_vs_batched']}x batched,"
+              f" {s['slowdown_vs_wholerun']}x wholerun), occupancy "
+              f"{s['occupancy_mean']:.2f}, queue depth mean "
+              f"{s['queue_depth_mean']:.1f}/max {s['queue_depth_max']}, "
+              f"matches-offline {s['matches_offline']}")
     print(f"matern-score {r['matern_score_candidates_per_sec']:,} cand/s  "
           f"BO loop {r['bo_candidates_per_sec']:,} cand/s")
     return r

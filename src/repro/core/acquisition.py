@@ -270,4 +270,9 @@ def compile_counters() -> dict:
         out["wholerun_init"] = wr.init_run._cache_size()
         out["wholerun_phase"] = wr.run_phase._cache_size()
         out["wholerun_gather"] = wr.gather_lanes._cache_size()
+        # streaming admission programs: per-(pool-width, bucket) phases,
+        # per-admission-size init/seed batches, per-size lane scatters
+        out["wholerun_stream_phase"] = wr.stream_phase._cache_size()
+        out["wholerun_admit_init"] = wr.admit_init._cache_size()
+        out["wholerun_admit"] = wr.admit_lanes._cache_size()
     return out

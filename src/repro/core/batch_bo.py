@@ -247,6 +247,29 @@ def make_hetero_scenarios(seeds: Sequence[int] = (0, 1),
     return out
 
 
+def scenario_from_request(arch: str, gain_offset_db: float = 0.0,
+                          budget: int = 20, seed: int = 0) -> Scenario:
+    """Decode one raw stream request — (channel state, budget,
+    architecture) — into a ``Scenario`` on the calibrated default
+    problem for that backbone, with the request's channel expressed as
+    a dB offset from the calibrated operating point (e.g. a fading
+    frame of the mMobile replay trace). The request decoder of the
+    streaming admission queue (``repro.runtime.stream``)."""
+    from repro.core.problem import (SplitInferenceProblem,
+                                    default_resnet101_problem,
+                                    default_vgg19_problem)
+
+    if arch == "vgg19":
+        base = default_vgg19_problem()
+    elif arch == "resnet101":
+        base = default_resnet101_problem()
+    else:
+        raise ValueError(f"unknown request architecture {arch!r}")
+    pb = SplitInferenceProblem(base.cm, base.gain_db + gain_offset_db,
+                               util=base.util)
+    return Scenario(pb, seed=seed, budget=budget)
+
+
 def run_packed_shards(scenarios: Sequence[Scenario], n_shards: int = 1,
                       engine_cls=None, **engine_kw) -> List[BOResult]:
     """Architecture-aware shard packing over separate engine programs:

@@ -78,6 +78,17 @@ def make_params(problem, l_pad: int | None = None) -> dict:
     )
 
 
+def pad_params(params: dict, l_pad: int) -> dict:
+    """Pad ONE scenario's param dict to a ``(l_pad+1,)`` per-layer
+    layout (edge values, False ``layer_mask`` tail): by definition a
+    one-row :func:`stack_params`, and identical to
+    ``make_params(problem, l_pad)``. A convenience/equivalence helper —
+    the engines' actual staging path is ``stack_params(raw, l_pad=...)``
+    over whole batches (``wholerun.stack_staged``); the property suite
+    pins all three layouts equal (tests/test_properties.py)."""
+    return {k: v[0] for k, v in stack_params([params], l_pad=l_pad).items()}
+
+
 def stack_params(params_list, l_pad: int | None = None) -> dict:
     """Stack per-scenario param dicts into one batched pytree (S, ...).
 

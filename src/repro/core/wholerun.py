@@ -129,6 +129,13 @@ def _init_state(s: int, cfg: WholeRunConfig, dim: int = 2):
         probe_n=jnp.zeros((s,), i32),
         # early-stop masking
         n_c=jnp.zeros((s,), i32), active=jnp.ones((s,), bool),
+        # streaming admission bookkeeping: `seeded` is the per-lane
+        # cold-seed flag for the warm-start carry (False until the lane's
+        # first post-init body iteration — the per-lane generalization of
+        # the old global iteration-0 flag), `gen` the lane generation
+        # counter bumped by every admission scatter so a re-admitted
+        # lane's rows are auditable against its previous occupant's
+        seeded=jnp.zeros((s,), bool), gen=jnp.zeros((s,), i32),
         # warm-start carry + fit-cost accounting
         theta=jax.tree.map(lambda v: jnp.broadcast_to(v, (s,)).astype(f32),
                            th0),
@@ -234,7 +241,8 @@ def _pen_static(params, grid, boundary):
 # -- the whole-run program ---------------------------------------------------
 
 _OUT_KEYS = ("ev_u", "ev_acc", "ev_feas", "ev_trace", "ev_l", "n",
-             "best_a", "best_u", "has_best", "fit_steps", "fit_calls")
+             "best_a", "best_u", "has_best", "fit_steps", "fit_calls",
+             "gen")
 
 
 def _make_body(run_data, grid, wvec, cfg: WholeRunConfig, m: int):
@@ -260,21 +268,44 @@ def _make_body(run_data, grid, wvec, cfg: WholeRunConfig, m: int):
         st, it = carry
         data = gpm.slice_data(
             dict(x=st["x"], y=st["y"], mask=st["mask"]), m)
-        first = it == 0
+        # a lane is cold-seeded on its FIRST post-init body iteration —
+        # the per-lane generalization of the old global iteration-0
+        # flag (for a static batch every lane is unseeded exactly at
+        # iteration 0, so the offline programs are bitwise unchanged);
+        # a lane admitted mid-stream gets its cold seed the moment it
+        # first steps, keeping its theta trajectory identical to the
+        # one it would have had in an offline batch
+        unseeded = st["active"] & ~st["seeded"]
+        any_unseeded = jnp.any(unseeded)
         # iterations where every live scenario is draining its probe
         # queue skip the fit + acquisition entirely (probes bypass the
-        # GP in the host engines too). Iteration 0 always fits: every
+        # GP in the host engines too). Unseeded lanes always fit: every
         # lane's warm-start carry is seeded by a cold fit of its init
         # design, which keeps each scenario's theta trajectory
         # independent of the batch composition (=> sharding-invariant)
-        need_acq = jnp.any(st["active"] & (st["probe_n"] == 0)) | first
+        need_acq = jnp.any(st["active"] & (st["probe_n"] == 0)) | any_unseeded
 
         def fit_and_maximize(theta0):
-            # GP refits: cold on iteration 0 (no previous
-            # hyperparameters), warm-started + adaptive after
+            # GP refits: cold on a lane's first fit (no previous
+            # hyperparameters), warm-started + adaptive after. A batch
+            # mixing unseeded (just-admitted) and seeded lanes pays
+            # both fits once and selects per lane — only admission
+            # boundaries in the streaming engine hit that branch
             if cfg.warm_start:
-                gp_b, steps = jax.lax.cond(first, cold_fit, warm_fit,
-                                           data, theta0)
+                all_cold = ~jnp.any(st["active"] & st["seeded"])
+
+                def mixed_fit(data_, theta0_):
+                    gp_c, steps_c = cold_fit(data_, theta0_)
+                    gp_w, steps_w = warm_fit(data_, theta0_)
+                    gp = jax.tree.map(partial(_sel, st["seeded"]),
+                                      gp_w, gp_c)
+                    return gp, jnp.where(st["seeded"], steps_w, steps_c)
+
+                gp_b, steps = jax.lax.cond(
+                    all_cold, cold_fit,
+                    lambda d, t0: jax.lax.cond(any_unseeded, mixed_fit,
+                                               warm_fit, d, t0),
+                    data, theta0)
             else:
                 gp_b, steps = cold_fit(data, theta0)
 
@@ -332,14 +363,17 @@ def _make_body(run_data, grid, wvec, cfg: WholeRunConfig, m: int):
                                    st["probe_q"])
         st2["probe_n"] = st["probe_n"] - use_probe.astype(jnp.int32)
         # a lane's warm-start carry advances only on ITS acquisition
-        # iterations (plus the aligned iteration-0 cold seed), so the
+        # iterations (plus its own first-iteration cold seed), so the
         # theta trajectory is a function of the lane's own eval
         # sequence — independent of batch composition and sharding
-        upd = first | ~use_probe
+        upd = ~st["seeded"] | ~use_probe
         st2["theta"] = jax.tree.map(partial(_sel, upd), theta,
                                     st["theta"])
         st2["fit_steps"] = st["fit_steps"] + jnp.where(upd, steps, 0)
         st2["fit_calls"] = st["fit_calls"] + upd.astype(jnp.int32)
+        # every lane stepped this iteration is seeded from now on
+        # (frozen lanes keep their flag via the freeze select below)
+        st2["seeded"] = jnp.ones_like(st["seeded"])
         st2 = jax.vmap(lambda s1, a, p1, b: _step(s1, a, p1, b, cfg))(
             st2, a_next, params, run_data["budget"])
         # freeze finished scenarios (early-stop masking)
@@ -403,16 +437,47 @@ whole_run = jax.jit(_whole_run, static_argnames=("cfg",))
 
 # -- lane-compaction phase programs (host-driven dispatch sequence) ----------
 
-@partial(jax.jit, static_argnames=("cfg",))
-def init_run(stacked, grid, cfg: WholeRunConfig):
-    """The init design as its own dispatch: returns the full-lane state
-    plus the static penalty block (both lane-aligned, so the compaction
-    gather permutes them together with ``params``/``boundary``)."""
+def _init_run_core(stacked, grid, cfg: WholeRunConfig):
     params = stacked["params"]
     s = stacked["budget"].shape[0]
     state = jax.vmap(lambda st1, p1, pts, b: _one_init(st1, p1, pts, b, cfg))(
         _init_state(s, cfg), params, stacked["init_pts"], stacked["budget"])
     return state, _pen_static(params, grid, stacked["boundary"])
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def init_run(stacked, grid, cfg: WholeRunConfig):
+    """The init design as its own dispatch: returns the full-lane state
+    plus the static penalty block (both lane-aligned, so the compaction
+    gather permutes them together with ``params``/``boundary``)."""
+    return _init_run_core(stacked, grid, cfg)
+
+
+@partial(jax.jit, static_argnames=("cfg", "seed_theta"))
+def admit_init(stacked, grid, cfg: WholeRunConfig, seed_theta: bool):
+    """Admission staging dispatch: the init design plus (on the
+    warm-start path) the cold seed of each admitted lane's GP carry —
+    the same cold fit of the init-design dataset (at the init bucket)
+    that iteration 0 of the offline program performs, pulled forward to
+    admission time so a long-lived server's body only ever pays warm
+    refits. Seeded lanes enter the pool with ``seeded=True``; the body
+    then warm-fits from a (typically converged) cold theta on the
+    lane's first acquisition — the streaming warm path's only
+    divergence from the offline program, inside the studied warm
+    tolerance by the same argument as warm refits themselves."""
+    state, pen = _init_run_core(stacked, grid, cfg)
+    if seed_theta:
+        m = gpm.bucket_size(min(cfg.n_init, cfg.gp.max_points),
+                            cfg.gp.max_points)
+        data = gpm.slice_data(
+            dict(x=state["x"], y=state["y"], mask=state["mask"]), m)
+        gp = jax.vmap(lambda d: gpm._fit_core(d, cfg.gp))(data)
+        state = dict(
+            state, theta=gp["theta"],
+            fit_steps=state["fit_steps"] + cfg.gp.fit_steps,
+            fit_calls=state["fit_calls"] + 1,
+            seeded=jnp.ones_like(state["seeded"]))
+    return state, pen
 
 
 @partial(jax.jit, static_argnames=("cfg", "m", "last"))
@@ -448,6 +513,152 @@ def run_phase(run_data, state, it, grid, wvec, cfg: WholeRunConfig,
 
 
 gather_lanes = jax.jit(gpm.take_lanes)
+
+
+def gather_live_lanes(state, run_data, live: np.ndarray, s_next: int):
+    """The compaction gather shared by the offline compaction driver and
+    the streaming pool shrink: permute the surviving lanes (``live``,
+    original row indices) into a dense prefix of a ``s_next``-lane
+    layout — state pytree AND lane-aligned inputs — padding with
+    duplicates of the first survivor, which stay deactivated. Returns
+    ``(state, run_data, keep)`` where ``keep`` is the row permutation
+    the caller applies to its own host-side lane bookkeeping."""
+    keep = np.concatenate([live, np.repeat(live[:1], s_next - live.size)])
+    idx = jnp.asarray(keep)
+    state = gather_lanes(state, idx)
+    run_data = gather_lanes(run_data, idx)
+    if live.size < s_next:       # pad duplicates stay frozen
+        state = dict(state, active=state["active"]
+                     & (jnp.arange(s_next) < live.size))
+    return state, run_data, keep
+
+
+# -- streaming admission programs (runtime/stream.py drives these) -----------
+
+@partial(jax.jit, static_argnames=("cfg", "m", "last"))
+def stream_phase(run_data, state, it, live0, grid, wvec, cfg: WholeRunConfig,
+                 m: int, last: bool):
+    """One serving-loop phase: the shared loop body at dataset bucket
+    ``m``, iterated until (a) every lane is done, (b) a live dataset
+    outgrows the bucket, or (c) ANY lane retires (``live`` falls below
+    the entry count ``live0``) — the lane-free event the admission queue
+    waits on. Unlike :func:`run_phase` the iteration cap is
+    per-dispatch (``it`` grows without bound across a stream's life, so
+    the offline ``it < budget_max`` safety cap would wrongly halt a
+    long-lived server; an active lane must retire within ``budget_max``
+    steps, which bounds each dispatch instead)."""
+    it0 = it
+
+    def cond(carry):
+        st, it_ = carry
+        live = jnp.sum(st["active"])
+        ok = (live > 0) & (it_ - it0 < cfg.budget_max) & (live >= live0)
+        if not last:
+            # live datasets only (see run_phase: a retired lane's stale
+            # dataset must not wedge the dispatch at zero iterations)
+            live_pts = jnp.where(st["active"], st["n_pts"], 0)
+            ok = ok & (jnp.max(live_pts) <= m)
+        return ok
+
+    return jax.lax.while_loop(cond, _make_body(run_data, grid, wvec, cfg, m),
+                              (state, it))
+
+
+@jax.jit
+def admit_lanes(state, run_data, new_state, new_run_data, lanes):
+    """Admission scatter — the inverse of the compaction gather: write
+    the first ``k = len(lanes)`` rows of a freshly initialized
+    mini-batch (state pytree AND lane-aligned inputs: ``params``,
+    ``boundary``, ``budget``, the static penalty block) into the given
+    freed lanes of a running pool, in place. The lane generation
+    counter increments instead of being overwritten, so ledger
+    snapshots remain attributable to one (lane, generation) occupant."""
+    k = lanes.shape[0]
+
+    def put(big, new):
+        return big.at[lanes].set(new[:k])
+
+    gen = state["gen"].at[lanes].add(1)
+    state = dict(jax.tree.map(put, state, new_state), gen=gen)
+    return state, jax.tree.map(put, run_data, new_run_data)
+
+
+# -- host-side input staging (shared by the offline and streaming engines) ---
+
+def stage_scenario(sc: Scenario, l_pad: int, n_init: int,
+                   constraint_aware: bool, fill: np.ndarray) -> dict:
+    """Host staging of ONE scenario into the padded-lane layout: device
+    constraint params (at the scenario's own ``L`` — :func:`jax_cost
+    .stack_params` pads to the batch ``l_pad``), the seeded init design,
+    and the boundary candidate block padded to ``l_pad`` rows with
+    ``fill``. The single staging path for offline batches and streaming
+    admissions, so an admitted lane is bitwise the lane an offline
+    batch would have staged."""
+    pb = sc.problem
+    if pb.L > l_pad:
+        raise ValueError(f"scenario L={pb.L} exceeds the engine l_pad="
+                         f"{l_pad}")
+    rng = np.random.default_rng(sc.seed)
+    pts = _init_grid(n_init, rng)
+    if constraint_aware:
+        pts = np.stack([pb.project_feasible(a) for a in pts])
+    bpad = np.repeat(fill, l_pad, axis=0)
+    if constraint_aware:
+        b = pb.boundary_candidates()
+        if len(b):
+            bpad = bpad.copy()
+            bpad[:len(b)] = b[:pb.L]
+    return dict(params=pb.jax_params(), budget=sc.budget, init_pts=pts,
+                boundary=bpad)
+
+
+def stack_staged(staged: Sequence[dict], l_pad: int, pad_to: int) -> dict:
+    """Stack per-scenario staging dicts (:func:`stage_scenario`) into the
+    stacked input pytree of the whole-run programs, repeating row 0 out
+    to ``pad_to`` lanes (padding rows are deactivated by the callers)."""
+    staged = list(staged) + [staged[0]] * (pad_to - len(staged))
+    return dict(
+        # per-layer surfaces pad to the batch width at stack time
+        # (bitwise-equal to pre-padding each scenario's params)
+        params=jc.stack_params([st["params"] for st in staged],
+                               l_pad=l_pad),
+        budget=jnp.asarray(np.asarray([st["budget"] for st in staged]),
+                           jnp.int32),
+        init_pts=jnp.asarray(np.stack([st["init_pts"] for st in staged]),
+                             jnp.float32),
+        boundary=jnp.asarray(np.stack([st["boundary"] for st in staged]),
+                             jnp.float32),
+    )
+
+
+def acq_wvec(w: AcqWeights) -> dict:
+    """Acquisition weights as the traced-scalar dict the device programs
+    take (shared by the offline engine and the streaming server)."""
+    return dict(lam_base0=jnp.float32(w.lam_base0),
+                lam_baseT=jnp.float32(w.lam_baseT),
+                lam_g0=jnp.float32(w.lam_g0),
+                lam_gT=jnp.float32(w.lam_gT),
+                lam_p=jnp.float32(w.lam_p), beta=jnp.float32(w.beta))
+
+
+def result_from_row(out: dict, i: int, sc: Scenario) -> BOResult:
+    """Build one scenario's ``BOResult`` from row ``i`` of an
+    ``_OUT_KEYS`` snapshot (host numpy) — shared by the offline result
+    unpacking and the streaming per-lane retirement flush."""
+    n = int(out["n"][i])
+    has_best = bool(out["has_best"][i])
+    best_a = (np.asarray(out["best_a"][i], np.float64) if has_best
+              else None)
+    best_acc = 0.0
+    if has_best:
+        best_acc = float(sc.problem._accuracy(
+            *sc.problem.denormalize(best_a))[1])
+    return BOResult(
+        best_a, float(out["best_u"][i]), best_acc, n,
+        [float(v) for v in out["ev_u"][i][:n]],
+        [float(v) for v in out["ev_acc"][i][:n]],
+        [bool(v) for v in out["ev_feas"][i][:n]],
+        [float(v) for v in out["ev_trace"][i][:n]])
 
 
 @partial(jax.jit, static_argnames=("cfg", "mesh"))
@@ -563,35 +774,10 @@ class WholeRunBayesSplitEdge:
         return s
 
     def _stacked(self) -> dict:
-        fill = self.grid[:1]
-        params, budgets, init_pts, boundary = [], [], [], []
-        for sc in self._staged:
-            pb = sc.problem
-            rng = np.random.default_rng(sc.seed)
-            pts = _init_grid(self.n_init, rng)
-            if self.constraint_aware:
-                pts = np.stack([pb.project_feasible(a) for a in pts])
-            bpad = np.repeat(fill, self.l_pad, axis=0)
-            if self.constraint_aware:
-                b = pb.boundary_candidates()
-                if len(b):
-                    bpad = bpad.copy()
-                    bpad[:len(b)] = b[:pb.L]
-            params.append(pb.jax_params())
-            budgets.append(sc.budget)
-            init_pts.append(pts)
-            boundary.append(bpad)
-        pad = self._pad_to() - len(self.scenarios)
-        for lst in (params, budgets, init_pts, boundary):
-            lst.extend([lst[0]] * pad)
-        return dict(
-            # per-layer surfaces pad to the batch width at stack time
-            # (bitwise-equal to pre-padding each scenario's params)
-            params=jc.stack_params(params, l_pad=self.l_pad),
-            budget=jnp.asarray(np.asarray(budgets), jnp.int32),
-            init_pts=jnp.asarray(np.stack(init_pts), jnp.float32),
-            boundary=jnp.asarray(np.stack(boundary), jnp.float32),
-        )
+        staged = [stage_scenario(sc, self.l_pad, self.n_init,
+                                 self.constraint_aware, self.grid[:1])
+                  for sc in self._staged]
+        return stack_staged(staged, self.l_pad, self._pad_to())
 
     # -- compaction driver ---------------------------------------------------
     def _run_compacted(self, stacked, grid, wvec, cfg: WholeRunConfig):
@@ -652,14 +838,8 @@ class WholeRunBayesSplitEdge:
             if s_next < active.shape[0]:
                 # retire exactly the lanes about to drop
                 flush(state, np.setdiff1d(np.arange(active.shape[0]), live))
-                keep = np.concatenate(
-                    [live, np.repeat(live[:1], s_next - live.size)])
-                idx = jnp.asarray(keep)
-                state = gather_lanes(state, idx)
-                run_data = gather_lanes(run_data, idx)
-                if live.size < s_next:   # pad duplicates stay frozen
-                    state = dict(state, active=state["active"]
-                                 & (jnp.arange(s_next) < live.size))
+                state, run_data, keep = gather_live_lanes(
+                    state, run_data, live, s_next)
                 order = np.where(np.arange(s_next) < live.size,
                                  order[keep], -1)
             state, it = run_phase(run_data, state, it, grid, wvec, cfg,
@@ -689,12 +869,7 @@ class WholeRunBayesSplitEdge:
             gp_feasible_only=self.gp_feasible_only,
             use_schedules=self.use_schedules, warm_start=self.warm_start,
             gp=self.gp_cfg)
-        w = self.weights
-        wvec = dict(lam_base0=jnp.float32(w.lam_base0),
-                    lam_baseT=jnp.float32(w.lam_baseT),
-                    lam_g0=jnp.float32(w.lam_g0),
-                    lam_gT=jnp.float32(w.lam_gT),
-                    lam_p=jnp.float32(w.lam_p), beta=jnp.float32(w.beta))
+        wvec = acq_wvec(self.weights)
         stacked = self._stacked()
         grid = jnp.asarray(self.grid, jnp.float32)
         self._lane_stats = {}
@@ -751,22 +926,8 @@ class WholeRunBayesSplitEdge:
             warm_steps_mean=(float(warm_total / warm_calls)
                              if warm_calls else 0.0))
 
-        results = []
-        for i, sc in enumerate(self._staged):
-            n = int(out["n"][i])
-            has_best = bool(out["has_best"][i])
-            best_a = (np.asarray(out["best_a"][i], np.float64) if has_best
-                      else None)
-            best_acc = 0.0
-            if has_best:
-                best_acc = float(sc.problem._accuracy(
-                    *sc.problem.denormalize(best_a))[1])
-            results.append(BOResult(
-                best_a, float(out["best_u"][i]), best_acc, n,
-                [float(v) for v in out["ev_u"][i][:n]],
-                [float(v) for v in out["ev_acc"][i][:n]],
-                [bool(v) for v in out["ev_feas"][i][:n]],
-                [float(v) for v in out["ev_trace"][i][:n]]))
+        results = [result_from_row(out, i, sc)
+                   for i, sc in enumerate(self._staged)]
         if self._pack_order is not None:
             # inverse permutation: results return in the caller's order
             from repro.distributed.sharding import unpack_results

@@ -192,6 +192,28 @@ def unpack_results(results, order):
     return out
 
 
+def next_admission_shard(free_lanes, rr: int = 0):
+    """Admission placement for the streaming engine's per-shard lane
+    pools (``repro.runtime.stream``): pick the shard with the most free
+    lanes, ties broken round-robin starting from ``rr``. Returns the
+    shard index, or ``None`` when no shard has a free lane.
+
+    Per-shard admission is what keeps the multi-pool/mesh streaming
+    path collective-free: a request is bound to exactly one shard's
+    lane pool at admission, each pool dispatches its own whole-run
+    phase programs independently (the established zero-collective
+    scenario-sharding argument), and results gather host-side — no
+    cross-shard rebalancing of a live lane ever happens.
+    """
+    n = len(free_lanes)
+    best, best_free = None, 0
+    for j in range(n):
+        i = (rr + j) % n
+        if free_lanes[i] > best_free:
+            best, best_free = i, free_lanes[i]
+    return best
+
+
 def local_ctx(cfg=None) -> ShardCtx:
     """Trivial 1-device mesh context for tests/CPU smoke paths."""
     import numpy as np

@@ -1,0 +1,524 @@
+"""Streaming scenario ingestion: an admission-queue serving engine over
+the whole-run engine's compacted padded lanes.
+
+The offline engines consume a static scenario list; production serving
+(the ROADMAP north star, and the online-arrival framing of the related
+hierarchical-scheduling / online-splitting work) is a *stream* of
+(channel state, budget, architecture) requests. The PR 4 compaction
+machinery already frees lanes mid-run — exactly the slots an admission
+queue needs — so this engine turns the whole-run state machine from
+run-to-completion into a long-lived server loop:
+
+* a fixed pool of padded lanes (power-of-2 ``n_lanes``, padded to the
+  engine-wide ``l_pad`` / ``budget_max`` so every dispatch reuses the
+  same compiled programs for the life of the server);
+* ``wholerun.stream_phase`` steps the pool until ANY lane retires (the
+  lane-free event — ``run_phase``'s half-capacity compaction exit,
+  sharpened to per-lane granularity) or a live dataset outgrows its
+  bucket;
+* retiring lanes are flushed to per-request results immediately (the
+  completion queue/callback), and freed lanes are re-initialized IN
+  PLACE with the next queued requests via ``wholerun.admit_lanes`` —
+  the PR 4 compaction gather run in reverse as an *admission scatter*:
+  a freshly staged mini-batch (same ``wholerun.stage_scenario`` path
+  the offline engines use, at the batch ``l_pad``) is written into the
+  freed rows of the full state pytree with zero recompilation;
+* per-lane ``seeded`` flags make a late admit cold-seed its GP carry on
+  its own first iteration (the per-lane generalization of the offline
+  iteration-0 seed), and per-lane ``gen`` counters make ledger
+  snapshots attributable to exactly one occupant — a re-admitted lane
+  never inherits its predecessor's rows.
+
+Every lane's trajectory is a function of its own state only (the
+established sharding/compaction-invariance argument), so streaming is a
+pure re-scheduling: a replayed arrival trace yields results bitwise
+equal (cold fits) / within the studied warm tolerance to running the
+same scenarios as one offline batch, in ANY admission order
+(``tests/test_streaming.py``, bench_check's ``streaming_matches_offline``).
+
+Sharding: ``n_shards`` splits the pool into independent per-shard lane
+pools (optionally pinned to distinct devices). Admission binds each
+request to one shard (``sharding.next_admission_shard``), each shard
+dispatches its own phase programs, and results gather host-side — the
+mesh path keeps zero collectives by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import (Callable, Iterable, Iterator, List, Optional, Sequence,
+                    Tuple)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gp as gpm
+from repro.core import wholerun as wr
+from repro.core.acquisition import AcqWeights, candidate_grid
+from repro.core.batch_bo import Scenario, scenario_from_request
+from repro.core.bo import BOResult
+from repro.distributed.sharding import next_admission_shard
+
+
+@dataclasses.dataclass
+class StreamResult:
+    """One converged request, emitted in completion order."""
+    index: int                 # arrival index in the feed
+    scenario: Scenario
+    result: BOResult
+    pool: int                  # shard/pool the run was served on
+    lane: int                  # lane it finished in
+    gen: int                   # that lane's generation while it ran
+    raw: dict                  # audit-ledger row snapshot (_OUT_KEYS)
+
+
+def requests_from_trace(trace: dict) -> List[Scenario]:
+    """Decode an arrival trace (``wireless.traces.arrival_trace``) into
+    the Scenario feed, one per arrival, in arrival order."""
+    return [scenario_from_request(arch, off, budget, seed)
+            for arch, off, budget, seed in zip(
+                trace["arch"], trace["gain_offset_db"], trace["budget"],
+                trace["init_seed"])]
+
+
+class _LanePool:
+    """One shard's padded-lane pool: the device state pytree plus the
+    host lane map (lane -> request index, lane generation)."""
+
+    def __init__(self, pool_id: int, width: int, engine, device=None):
+        self.pool_id = pool_id
+        self.width = width
+        self.eng = engine
+        self.device = device
+        self.state = None          # no lanes admitted yet
+        self.run_data = None
+        self.it = jnp.int32(0)
+        self.it_host = 0
+        self.order = np.full(width, -1, np.int64)   # lane -> request idx
+        self.gen = np.zeros(width, np.int64)        # host mirror of gen
+        # stable lane identity: shrink gathers permute rows, but a
+        # result's (pool, lane, gen) triple must keep naming the lane
+        # the run actually occupied
+        self.lane_ids = np.arange(width, dtype=np.int64)
+
+    # -- admission -----------------------------------------------------------
+    def free_count(self) -> int:
+        return int(np.sum(self.order < 0))
+
+    def live_count(self) -> int:
+        if self.state is None:
+            return 0
+        return int(np.asarray(self.state["active"]).sum())
+
+    def admit(self, reqs: Sequence) -> None:
+        """Admit (index, Scenario) pairs into freed lanes, in place.
+
+        Staging is the offline engines' own path (``stage_scenario`` +
+        ``stack_staged`` at the engine ``l_pad``), so an admitted lane
+        is bitwise the lane an offline batch would have staged; the
+        mini-batch is always padded to the pool width so ``init_run``
+        compiles exactly once per pool shape.
+        """
+        eng, k = self.eng, len(reqs)
+        free = np.flatnonzero(self.order < 0)[:k]
+        assert len(free) == k, "admission exceeds free lanes"
+        staged = [eng._stage_request(idx, sc) for idx, sc in reqs]
+        # mini-batch sized to the admission (power of 2, capped by the
+        # pool width) — late small admissions don't pay a full-width
+        # init/seed; cold starts ARE the pool, so they stage at width
+        kpad = self.width if self.state is None else wr._next_pow2(k)
+        stacked = wr.stack_staged(staged, eng.l_pad, kpad)
+        if self.device is not None:
+            stacked = jax.device_put(stacked, self.device)
+        # warm path: cold-seed the admitted lanes' GP carries here, so
+        # the serving body only ever pays warm refits
+        new_state, pen = wr.admit_init(stacked, eng.grid, eng.cfg,
+                                       eng.cfg.warm_start)
+        new_rd = dict(params=stacked["params"],
+                      boundary=stacked["boundary"],
+                      budget=stacked["budget"], pen=pen)
+        if self.state is None:
+            # pool cold start: the mini batch IS the pool
+            if k < self.width:      # padding duplicates stay frozen
+                new_state = dict(new_state, active=new_state["active"]
+                                 & (jnp.arange(self.width) < k))
+            self.state, self.run_data = new_state, new_rd
+        else:
+            lanes = jnp.asarray(free)
+            self.state, self.run_data = wr.admit_lanes(
+                self.state, self.run_data, new_state, new_rd, lanes)
+            self.gen[free] += 1
+        for lane, (idx, _) in zip(free, reqs):
+            self.order[lane] = idx
+
+    # -- serving -------------------------------------------------------------
+    def dispatch(self, draining: bool = False) -> Optional[dict]:
+        """One ``stream_phase`` launch over the pool; returns the lane
+        log entry (lanes/live/bucket) or None when nothing is live.
+
+        With requests queued the phase exits on the FIRST retirement
+        (the admission queue wants every freed lane immediately); once
+        the queue is empty (``draining``) it falls back to the offline
+        compaction exit — run until live lanes halve — so the tail of
+        the stream doesn't pay a host round-trip per retirement."""
+        eng = self.eng
+        active = np.asarray(self.state["active"])
+        live = int(active.sum())
+        if live == 0:
+            return None
+        n_pts = np.asarray(self.state["n_pts"])
+        m = gpm.bucket_size(int(n_pts[active].max()),
+                            eng.cfg.gp.max_points)
+        last = m >= wr._final_bucket(eng.cfg)
+        live0 = (live // 2 + 1) if draining else live
+        self.state, self.it = wr.stream_phase(
+            self.run_data, self.state, self.it, jnp.int32(live0),
+            eng.grid, eng.wvec, eng.cfg, m, last)
+        return dict(pool=self.pool_id, lanes=self.width, live=live,
+                    bucket=m)
+
+    def collect(self) -> Tuple[List[StreamResult], int]:
+        """Flush lanes that retired since the last collect — snapshot
+        their ledger rows BEFORE any admission scatter reuses them.
+        Returns ``(results, loop-iterations since the last collect)``."""
+        if self.state is None:
+            return [], 0
+        active = np.asarray(self.state["active"])
+        rows = [r for r in range(self.width)
+                if self.order[r] >= 0 and not active[r]]
+        out = []
+        if rows:
+            idx = jnp.asarray(np.asarray(rows))
+            sub = {k: np.asarray(self.state[k][idx])
+                   for k in wr._OUT_KEYS}
+            for j, r in enumerate(rows):
+                req_idx = int(self.order[r])
+                # evict: a long-lived server must not accumulate every
+                # request it ever served (StreamResult carries it on)
+                sc = self.eng._requests.pop(req_idx)
+                raw = {k: sub[k][j] for k in wr._OUT_KEYS}
+                out.append(StreamResult(
+                    index=req_idx, scenario=sc,
+                    result=wr.result_from_row(sub, j, sc),
+                    pool=self.pool_id, lane=int(self.lane_ids[r]),
+                    gen=int(self.gen[r]), raw=raw))
+                self.order[r] = -1
+        it_new = int(self.it)
+        iters, self.it_host = it_new - self.it_host, it_new
+        return out, iters
+
+    def shrink(self) -> None:
+        """Drain-mode compaction: once the feed is exhausted, gather the
+        surviving lanes into the next power-of-2 pool (the PR 4
+        between-phase gather, applied to a shrinking server)."""
+        if self.state is None:     # shard never received an admission
+            return
+        active = np.asarray(self.state["active"])
+        live = np.flatnonzero(active)
+        if live.size == 0 or 2 * live.size > self.width:
+            return
+        s_next = wr._next_pow2(live.size)
+        self.state, self.run_data, keep = wr.gather_live_lanes(
+            self.state, self.run_data, live, s_next)
+        self.order = np.where(np.arange(s_next) < live.size,
+                              self.order[keep], -1)
+        self.gen = self.gen[keep]
+        self.lane_ids = self.lane_ids[keep]
+        self.width = s_next
+
+
+class StreamingBayesSplitEdge:
+    """Admission-queue Bayes-Split-Edge server over compacted lanes.
+
+    ``requests`` is the arrival feed — any iterable of ``Scenario``
+    (materialized lists replay a trace; generators are consumed lazily,
+    one pull per freed lane). ``serve()`` yields a ``StreamResult`` per
+    request as it converges (completion order); ``run()`` drains the
+    feed and returns plain ``BOResult``s in arrival order — the
+    offline-equivalence surface.
+
+    Static server shapes (fixed for the life of the server, so every
+    dispatch reuses the warm compiled programs):
+
+    * ``n_lanes`` — total lane capacity (a power of 2), split evenly
+      over ``n_shards`` independent pools;
+    * ``l_pad`` — max supported layer count (requests with a deeper
+      backbone are rejected with ``ValueError``);
+    * ``budget_max`` — max supported evaluation budget (ledger length;
+      larger requests are rejected).
+
+    ``arrivals`` (optional, aligned with the feed, in seconds scaled by
+    ``time_scale``) paces admission against the wall clock for
+    queue-depth/soak studies; without it the feed is purely
+    order-driven and fully deterministic.
+    """
+
+    name = "Streaming-Bayes-Split-Edge"
+    # per-dispatch stat traces (lane_log / queue_depth) keep at most
+    # this many recent entries — a long-lived server's aggregate stats
+    # accumulate in O(1) regardless of stream length
+    STATS_TRACE_CAP = 4096
+
+    def __init__(self, requests: Iterable[Scenario], n_lanes: int = 8,
+                 l_pad: Optional[int] = None,
+                 budget_max: Optional[int] = None, n_shards: int = 1,
+                 devices: Optional[Sequence] = None,
+                 arrivals: Optional[Sequence[float]] = None,
+                 time_scale: float = 1.0,
+                 on_result: Optional[Callable[[StreamResult], None]] = None,
+                 n_init: int = 9, n_max_repeat: int = 5,
+                 weights: AcqWeights = AcqWeights(),
+                 gp_cfg: gpm.GPConfig = gpm.GPConfig(), grid_n: int = 64,
+                 constraint_aware: bool = True, use_grad_term: bool = True,
+                 use_schedules: bool = True, warm_start: bool = True):
+        if n_lanes < 1 or n_shards < 1 or n_lanes % n_shards:
+            raise ValueError("n_lanes must split evenly over n_shards")
+        width = n_lanes // n_shards
+        if wr._next_pow2(width) != width:
+            raise ValueError(f"per-shard lane count {width} must be a "
+                             f"power of 2")
+        if l_pad is None or budget_max is None:
+            if not hasattr(requests, "__len__"):
+                raise ValueError(
+                    "an iterator feed needs explicit l_pad/budget_max "
+                    "(the server's static shapes can't be derived from "
+                    "requests that haven't arrived yet)")
+            reqs = list(requests)
+            if not reqs:
+                l_pad = l_pad or 1
+                budget_max = budget_max or 1
+            else:
+                l_pad = (max(sc.problem.L for sc in reqs)
+                         if l_pad is None else l_pad)
+                budget_max = (max(sc.budget for sc in reqs)
+                              if budget_max is None else budget_max)
+            requests = reqs
+        self._feed = iter(requests)
+        self._feed_len = (len(requests)
+                          if hasattr(requests, "__len__") else None)
+        self.n_lanes = n_lanes
+        self.n_shards = n_shards
+        self.l_pad = l_pad
+        self.budget_max = budget_max
+        self.devices = list(devices) if devices is not None else None
+        self.arrivals = (None if arrivals is None
+                         else [float(t) for t in arrivals])
+        self.time_scale = float(time_scale)
+        self.on_result = on_result
+        self.n_init = n_init
+        w = weights
+        if not use_grad_term:
+            w = dataclasses.replace(w, lam_g0=0.0, lam_gT=1e-9)
+        if not constraint_aware:
+            w = dataclasses.replace(w, lam_p=0.0)
+        self.weights = w
+        self.wvec = wr.acq_wvec(w)
+        self.constraint_aware = constraint_aware
+        self.grid_np = candidate_grid(grid_n)
+        self.grid = jnp.asarray(self.grid_np, jnp.float32)
+        self.cfg = wr.WholeRunConfig(
+            n_init=n_init, n_max_repeat=n_max_repeat,
+            # like the offline engine: the ledger must hold the full
+            # init design even for budgets below n_init
+            budget_max=max(budget_max, n_init), l_pad=l_pad,
+            constraint_aware=constraint_aware,
+            gp_feasible_only=constraint_aware,
+            use_schedules=use_schedules, warm_start=warm_start, gp=gp_cfg)
+        self._pools = [
+            _LanePool(i, width, self,
+                      None if self.devices is None
+                      else self.devices[i % len(self.devices)])
+            for i in range(n_shards)]
+        self._requests: dict = {}   # arrival index -> Scenario
+        self._staged: dict = {}     # arrival index -> staging dict
+        self._n_pulled = 0
+        self._feed_done = False
+        self._served = False
+        self._stats: dict = {}
+
+    # -- feed ----------------------------------------------------------------
+    def _validate(self, sc: Scenario) -> Scenario:
+        if sc.budget > self.budget_max:
+            raise ValueError(f"request budget {sc.budget} exceeds the "
+                             f"server budget_max={self.budget_max}")
+        if sc.problem.L > self.l_pad:
+            raise ValueError(f"request L={sc.problem.L} exceeds the "
+                             f"server l_pad={self.l_pad}")
+        return sc
+
+    def _arrived(self, i: int, now: float) -> bool:
+        if self.arrivals is None or i >= len(self.arrivals):
+            return True
+        return self.arrivals[i] * self.time_scale <= now
+
+    def _pull(self, pending: deque, now: float) -> None:
+        """Move arrived requests from the feed into the admission queue.
+
+        Order-driven feeds (no ``arrivals``) are pulled lazily — only
+        enough to refill every currently free lane plus one pool-flush
+        of look-ahead (the staging of look-ahead requests hides under
+        the running device phase) — so generator feeds are consumed on
+        demand; timed feeds pull everything whose arrival time has
+        passed (those requests are queued regardless of capacity, which
+        is what the queue-depth metric measures).
+        """
+        if self._feed_done:
+            return
+        free = sum(p.free_count() for p in self._pools)
+        while True:
+            if (self.arrivals is None
+                    and len(pending) >= free + self.n_lanes):
+                return
+            if not self._arrived(self._n_pulled, now):
+                return
+            try:
+                sc = next(self._feed)
+            except StopIteration:
+                self._feed_done = True
+                return
+            i = self._n_pulled
+            self._n_pulled += 1
+            self._requests[i] = self._validate(sc)
+            pending.append((i, sc))
+
+    def _stage_request(self, idx: int, sc: Scenario) -> dict:
+        """Per-request host staging, cached so the pre-staging pass that
+        runs while a device phase is in flight does the work once."""
+        st = self._staged.pop(idx, None)
+        if st is None:
+            st = wr.stage_scenario(sc, self.l_pad, self.n_init,
+                                   self.constraint_aware, self.grid_np[:1])
+        return st
+
+    def _prestage(self, pending: deque) -> None:
+        """Stage every queued request now (called right after dispatch,
+        so the host staging work overlaps the running device phase)."""
+        for idx, sc in pending:
+            if idx not in self._staged:
+                self._staged[idx] = wr.stage_scenario(
+                    sc, self.l_pad, self.n_init, self.constraint_aware,
+                    self.grid_np[:1])
+
+    # -- the server loop -----------------------------------------------------
+    def serve(self) -> Iterator[StreamResult]:
+        if self._served:
+            raise RuntimeError("serve() already consumed this engine's "
+                               "feed — build a new engine to replay")
+        self._served = True
+        pending: deque = deque()
+        # per-dispatch traces are bounded so an unbounded feed doesn't
+        # grow host memory; the aggregate stats accumulate separately
+        lane_log: deque = deque(maxlen=self.STATS_TRACE_CAP)
+        queue_depth: deque = deque(maxlen=self.STATS_TRACE_CAP)
+        n_results = n_dispatches = slots_total = 0
+        qd_sum = qd_n = qd_max = 0
+        rr = 0
+        t0 = time.monotonic()
+
+        self._n_evals_total = 0
+
+        def flush(pool, entry=None):
+            nonlocal n_results, n_dispatches, slots_total
+            flushed, iters = pool.collect()
+            if entry is not None:
+                entry["iters"] = iters
+                lane_log.append(entry)
+                n_dispatches += 1
+                slots_total += entry["lanes"] * iters
+            for res in flushed:
+                n_results += 1
+                self._n_evals_total += res.result.n_evals
+                if self.on_result is not None:
+                    self.on_result(res)
+                yield res
+
+        while True:
+            now = time.monotonic() - t0
+            self._pull(pending, now)
+            # head-of-line admission into the emptiest shard (ties
+            # round-robin) — requests bind to exactly one pool, so the
+            # multi-pool path stays collective-free
+            fills: dict = {i: [] for i in range(self.n_shards)}
+            while pending:
+                free = [p.free_count() - len(fills[p.pool_id])
+                        for p in self._pools]
+                shard = next_admission_shard(free, rr)
+                if shard is None:
+                    break
+                rr = (shard + 1) % self.n_shards
+                fills[shard].append(pending.popleft())
+            for i, reqs in fills.items():
+                if reqs:
+                    self._pools[i].admit(reqs)
+            queue_depth.append(len(pending))
+            qd_sum += len(pending)
+            qd_n += 1
+            qd_max = max(qd_max, len(pending))
+            # lanes whose budget <= n_init retire at the init design —
+            # flush them before (possibly instead of) any dispatch
+            for p in self._pools:
+                yield from flush(p)
+            draining = self._feed_done and not pending
+            dispatched = []
+            for p in self._pools:
+                if p.live_count() > 0:
+                    entry = p.dispatch(draining=draining)
+                    if entry is not None:
+                        entry["queue_depth"] = len(pending)
+                        dispatched.append((p, entry))
+            # the device phases are in flight: overlap the host-side
+            # pull + staging of the queue with them
+            self._pull(pending, time.monotonic() - t0)
+            self._prestage(pending)
+            for p, entry in dispatched:
+                yield from flush(p, entry)
+            if not dispatched:
+                if self._feed_done and not pending:
+                    break
+                if not pending and self.arrivals is not None:
+                    # idle server: sleep until the next arrival
+                    t_next = (self.arrivals[self._n_pulled]
+                              * self.time_scale
+                              if self._n_pulled < len(self.arrivals)
+                              else 0.0)
+                    dt = t_next - (time.monotonic() - t0)
+                    if dt > 0:
+                        time.sleep(dt)
+            elif self._feed_done and not pending:
+                # drain mode: no admissions left — shrink pools so the
+                # tail doesn't pay for freed lanes
+                for p in self._pools:
+                    p.shrink()
+
+        wall = time.monotonic() - t0
+        # loop evals from the flushed results themselves (every retired
+        # request's post-init evaluations): lane_log's per-dispatch
+        # `live` is the ENTRY count, which overcounts draining
+        # dispatches where lanes retire mid-phase
+        evals = self._n_evals_total - self.n_init * n_results
+        self._stats = dict(
+            n_results=n_results, n_dispatches=n_dispatches,
+            lane_slots=slots_total, loop_evals=evals,
+            occupancy_mean=(evals / slots_total if slots_total else 1.0),
+            queue_depth_mean=(qd_sum / qd_n if qd_n else 0.0),
+            queue_depth_max=qd_max,
+            wall_s=wall,
+            arrivals_per_s=(n_results / wall if wall > 0 else 0.0),
+            # bounded traces (the STATS_TRACE_CAP most recent entries)
+            lane_log=list(lane_log), queue_depth=list(queue_depth))
+
+    def run(self) -> List[BOResult]:
+        """Drain the whole feed; results in arrival order."""
+        out = {}
+        for r in self.serve():
+            out[r.index] = r.result
+        return [out[i] for i in range(len(out))]
+
+    def stream_stats(self) -> dict:
+        """Serving-loop accounting of the last ``serve``/``run``:
+        dispatch count, lane-slot occupancy (live-lane evals over
+        computed lane slots), queue-depth trajectory and arrival
+        throughput, plus the per-dispatch lane log."""
+        return dict(self._stats)

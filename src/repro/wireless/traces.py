@@ -46,3 +46,95 @@ def frame_stats(trace_db: np.ndarray) -> dict:
                 min_db=float(trace_db.min()),
                 max_db=float(trace_db.max()),
                 p10_db=float(np.percentile(trace_db, 10)))
+
+
+# -- synthetic arrival traces (streaming scenario ingestion) -----------------
+#
+# An arrival trace is the replayable input of the streaming serving
+# engine (repro/runtime/stream.py): per-arrival time, channel state
+# (a dB offset from the calibrated operating point, drawn from the
+# mMobile-like gain trace above), evaluation budget, backbone and init
+# seed. Generators are seeded and deterministic so a failing soak run
+# can dump its trace and be replayed exactly.
+
+ARRIVAL_KINDS = ("poisson", "bursty", "replay")
+
+
+def poisson_arrivals(n: int, rate_hz: float = 50.0,
+                     seed: int = 0) -> np.ndarray:
+    """Homogeneous Poisson process: n arrival times (s), exponential
+    inter-arrivals at ``rate_hz``."""
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_hz, size=n))
+
+
+def bursty_arrivals(n: int, burst_len: int = 8, burst_rate_hz: float = 200.0,
+                    idle_s: float = 0.25, seed: int = 0) -> np.ndarray:
+    """On/off bursts: ``burst_len`` back-to-back arrivals at
+    ``burst_rate_hz``, separated by ~``idle_s`` idle gaps (jittered) —
+    the flash-crowd pattern that stresses the admission queue depth."""
+    rng = np.random.default_rng(seed)
+    t, out = 0.0, []
+    while len(out) < n:
+        for _ in range(min(burst_len, n - len(out))):
+            t += rng.exponential(1.0 / burst_rate_hz)
+            out.append(t)
+        t += idle_s * (0.5 + rng.random())
+    return np.asarray(out)
+
+
+def replay_arrivals(n: int, frame_period_s: float = 0.02) -> np.ndarray:
+    """mMobile-replay pacing: one arrival per channel frame at the
+    trace's fixed frame period (45 points x 10 fast-fading samples)."""
+    return frame_period_s * (1.0 + np.arange(n))
+
+
+def arrival_trace(kind: str = "poisson", n: int = 100, seed: int = 0,
+                  budgets=(6, 10, 14, 20), archs=("vgg19", "resnet101"),
+                  fading_std_db: float = 2.5, **kw) -> dict:
+    """One replayable arrival trace: ``kind`` picks the arrival process
+    (``poisson``/``bursty``/``replay``), every arrival draws its channel
+    state from the seeded mMobile-like gain trace (``gain_offset_db`` =
+    frame gain minus the trace mean, i.e. the fading excursion around
+    the calibrated operating point), its budget and backbone from the
+    given mixes, and its init seed from the arrival index."""
+    if kind == "poisson":
+        t = poisson_arrivals(n, seed=seed, **kw)
+    elif kind == "bursty":
+        t = bursty_arrivals(n, seed=seed, **kw)
+    elif kind == "replay":
+        t = replay_arrivals(n, **kw)
+    else:
+        raise ValueError(f"unknown arrival kind {kind!r} "
+                         f"(one of {ARRIVAL_KINDS})")
+    gains = synth_mmobile_trace(seed=seed, n_frames=max(n, 450),
+                                fading_std_db=fading_std_db)
+    rng = np.random.default_rng(seed + 1)
+    return dict(
+        kind=kind, seed=seed, n=n,
+        t=[float(v) for v in t],
+        gain_offset_db=[float(gains[i % len(gains)] - gains.mean())
+                        for i in range(n)],
+        budget=[int(budgets[i]) for i in
+                rng.integers(0, len(budgets), size=n)],
+        arch=[str(archs[i]) for i in rng.integers(0, len(archs), size=n)],
+        init_seed=list(range(n)),
+    )
+
+
+def save_trace(trace: dict, path: str) -> None:
+    """Dump an arrival trace as JSON — the replay artifact a failing
+    soak run uploads so the exact arrival sequence is reproducible."""
+    import json
+    import os
+    d = os.path.dirname(os.path.abspath(path))
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(trace, f, sort_keys=True)
+
+
+def load_trace(path: str) -> dict:
+    import json
+    with open(path) as f:
+        return json.load(f)

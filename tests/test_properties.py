@@ -1,0 +1,242 @@
+"""Property-based laws for the batch-staging substrate, via hypothesis
+(or the bundled deterministic shim when hypothesis isn't installed —
+see tests/conftest.py).
+
+The streaming engine leans on three algebraic contracts that were
+previously only spot-checked: packing is a pure permutation
+(``pack_order``/``unpack_results`` round-trip), padded staging is
+idempotent and its tail unreachable (``stack_params(l_pad=...)`` /
+``pad_params`` / ``denormalize``), and the probe-dedupe key is
+injective on the discrete (split, power) grid (``seen_key``).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import jax_cost as jc
+from repro.core.bo import _init_grid
+from repro.core.gp import DATASET_BUCKETS, bucket_size
+from repro.core.problem import (default_resnet101_problem,
+                                default_vgg19_problem)
+from repro.distributed.sharding import (pack_order, pack_scenarios,
+                                        unpack_results)
+from repro.wireless.traces import (arrival_trace, bursty_arrivals,
+                                   poisson_arrivals)
+
+VGG = default_vgg19_problem()          # L = 37
+RESNET = default_resnet101_problem()   # L = 36
+
+
+@dataclasses.dataclass
+class _FakeScenario:
+    """pack_order only reads .problem.L and .budget — synthesize the
+    key mix without building real problems per example."""
+    problem: object
+    budget: int
+
+
+class _FakeProblem:
+    def __init__(self, L):
+        self.L = L
+
+
+def _mix(n_layers_list, budgets):
+    return [_FakeScenario(_FakeProblem(l_), b)
+            for l_, b in zip(n_layers_list, budgets)]
+
+
+# ---------------------------------------------------------------------------
+# pack_order / unpack_results round-trip laws
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(min_value=1, max_value=24), st.integers(0, 2 ** 16))
+@settings(max_examples=25, deadline=None)
+def test_pack_order_is_a_permutation(n, seed):
+    rng = np.random.default_rng(seed)
+    scs = _mix(rng.integers(8, 64, n), rng.integers(4, 32, n))
+    order = pack_order(scs)
+    assert sorted(order) == list(range(n))
+
+
+@given(st.integers(min_value=1, max_value=24), st.integers(0, 2 ** 16))
+@settings(max_examples=25, deadline=None)
+def test_pack_order_sorts_by_layers_then_budget_stably(n, seed):
+    rng = np.random.default_rng(seed)
+    scs = _mix(rng.integers(8, 12, n), rng.integers(4, 8, n))
+    order = pack_order(scs)
+    keys = [(scs[i].problem.L, scs[i].budget) for i in order]
+    assert keys == sorted(keys)
+    # stability: equal keys keep input order
+    for j in range(1, n):
+        if keys[j] == keys[j - 1]:
+            assert order[j] > order[j - 1]
+
+
+@given(st.integers(min_value=1, max_value=24), st.integers(0, 2 ** 16))
+@settings(max_examples=25, deadline=None)
+def test_unpack_results_inverts_pack_order(n, seed):
+    rng = np.random.default_rng(seed)
+    scs = _mix(rng.integers(8, 64, n), rng.integers(4, 32, n))
+    order = pack_order(scs)
+    packed = [f"result-{i}" for i in order]     # results in packed order
+    assert unpack_results(packed, order) == [f"result-{i}"
+                                             for i in range(n)]
+
+
+@given(st.integers(min_value=1, max_value=16),
+       st.integers(min_value=1, max_value=5), st.integers(0, 2 ** 16))
+@settings(max_examples=25, deadline=None)
+def test_pack_scenarios_concat_is_the_packed_sequence(n, n_shards, seed):
+    rng = np.random.default_rng(seed)
+    scs = _mix(rng.integers(8, 64, n), rng.integers(4, 32, n))
+    shards, order = pack_scenarios(scs, n_shards)
+    flat = [sc for sh in shards for sc in sh]
+    assert [id(sc) for sc in flat] == [id(scs[i]) for i in order]
+    assert sum(len(sh) for sh in shards) == n
+
+
+# ---------------------------------------------------------------------------
+# stack_params(l_pad=...) idempotence + tail-mask unreachability
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(min_value=37, max_value=64))
+@settings(max_examples=8, deadline=None)
+def test_stack_params_forced_l_pad_idempotent(l_pad):
+    """Stacking raw params at l_pad == pre-padding each scenario to
+    l_pad first == re-stacking the already-padded dicts: one fixpoint."""
+    raw = [VGG.jax_params(), RESNET.jax_params()]
+    st1 = jc.stack_params(raw, l_pad=l_pad)
+    st2 = jc.stack_params([VGG.jax_params(l_pad),
+                           RESNET.jax_params(l_pad)])
+    st3 = jc.stack_params([jc.pad_params(p, l_pad) for p in raw])
+    for k in st1:
+        np.testing.assert_array_equal(np.asarray(st1[k]),
+                                      np.asarray(st2[k]))
+        np.testing.assert_array_equal(np.asarray(st1[k]),
+                                      np.asarray(st3[k]))
+
+
+@given(st.integers(min_value=36, max_value=60))
+@settings(max_examples=8, deadline=None)
+def test_pad_params_matches_make_params(l_pad):
+    padded = jc.pad_params(RESNET.jax_params(), l_pad)
+    direct = RESNET.jax_params(l_pad)
+    assert padded.keys() == direct.keys()
+    for k in padded:
+        np.testing.assert_array_equal(np.asarray(padded[k]),
+                                      np.asarray(direct[k]))
+
+
+def test_stack_params_rejects_l_pad_below_batch_lmax():
+    with pytest.raises(ValueError):
+        jc.stack_params([VGG.jax_params()], l_pad=20)
+
+
+@given(st.floats(min_value=0.0, max_value=1.0),
+       st.floats(min_value=0.0, max_value=1.0),
+       st.integers(min_value=37, max_value=64))
+@settings(max_examples=40, deadline=None)
+def test_padded_tail_is_unreachable(a_p, a_l, l_pad):
+    """For ANY normalized input, denormalize on padded params emits a
+    real split (1 <= l <= n_layers): the padded tail can never be
+    proposed, and the tail's layer_mask is False."""
+    params = jc.pad_params(VGG.jax_params(), l_pad)
+    li, p = jc.denormalize(params, np.asarray([a_p, a_l], np.float32))
+    li = int(li)
+    assert 1 <= li <= VGG.L
+    assert bool(jc.valid_split(params, li))
+    mask = np.asarray(params["layer_mask"])
+    assert not mask[VGG.L + 1:].any()
+    assert mask[1:VGG.L + 1].all()
+
+
+@given(st.floats(min_value=0.0, max_value=1.0))
+@settings(max_examples=20, deadline=None)
+def test_normalize_denormalize_roundtrip(a_l):
+    params = VGG.jax_params()
+    li, p = jc.denormalize(params, np.asarray([0.5, a_l], np.float32))
+    a = jc.normalize(params, li, p)
+    li2, p2 = jc.denormalize(params, a)
+    assert int(li2) == int(li)
+    assert abs(float(p2) - float(p)) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# seen_key injectivity on the discrete probe grid
+# ---------------------------------------------------------------------------
+
+
+def test_seen_key_injective_over_power_grid():
+    """The probe-dedupe key must distinguish every representable
+    rounded-milliwatt power over the valid [p_min, p_max] range — the
+    grid the (split, power) seen-set actually lives on."""
+    grid = np.round(np.arange(0.0, 0.5001, 0.001), 3).astype(np.float32)
+    keys = np.asarray(jc.seen_key(grid))
+    assert len(np.unique(keys)) == len(grid)
+
+
+@given(st.floats(min_value=0.0, max_value=0.5),
+       st.floats(min_value=0.0, max_value=0.5))
+@settings(max_examples=40, deadline=None)
+def test_seen_key_equality_matches_host_round(p1, p2):
+    """Two powers collide in the device seen-set iff the host ledger's
+    round(p, 3) dedupe (bo.ScenarioState.observe) collides too."""
+    k1 = float(jc.seen_key(np.float32(p1)))
+    k2 = float(jc.seen_key(np.float32(p2)))
+    same_host = round(float(np.float32(p1)), 3) == round(
+        float(np.float32(p2)), 3)
+    assert (k1 == k2) == same_host
+
+
+# ---------------------------------------------------------------------------
+# supporting laws: init grid, dataset buckets, arrival processes
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(min_value=1, max_value=16), st.integers(0, 2 ** 16))
+@settings(max_examples=20, deadline=None)
+def test_init_grid_count_and_bounds(n0, seed):
+    pts = _init_grid(n0, np.random.default_rng(seed))
+    assert pts.shape == (n0, 2)
+    assert (pts >= 0.0).all() and (pts <= 1.0).all()
+
+
+@given(st.integers(min_value=0, max_value=80))
+@settings(max_examples=30, deadline=None)
+def test_bucket_size_covers_and_is_minimal(n_pts):
+    m = bucket_size(n_pts, 64)
+    assert m in DATASET_BUCKETS
+    assert m >= min(n_pts, 64)
+    smaller = [b for b in DATASET_BUCKETS if b < m]
+    if smaller:
+        assert smaller[-1] < min(n_pts, 64)
+
+
+@given(st.sampled_from(["poisson", "bursty", "replay"]),
+       st.integers(min_value=1, max_value=64))
+@settings(max_examples=12, deadline=None)
+def test_arrival_traces_are_sorted_deterministic_and_decodable(kind, n):
+    tr1 = arrival_trace(kind, n=n, seed=5)
+    tr2 = arrival_trace(kind, n=n, seed=5)
+    assert tr1 == tr2                       # replayable
+    t = np.asarray(tr1["t"])
+    assert t.shape == (n,)
+    assert (np.diff(t) >= 0).all() and (t > 0).all()
+    assert len(tr1["gain_offset_db"]) == n
+    assert all(b in (6, 10, 14, 20) for b in tr1["budget"])
+    assert all(a in ("vgg19", "resnet101") for a in tr1["arch"])
+
+
+def test_poisson_and_bursty_rates_differ():
+    tp = poisson_arrivals(64, rate_hz=50.0, seed=0)
+    tb = bursty_arrivals(64, burst_len=8, burst_rate_hz=200.0,
+                         idle_s=0.25, seed=0)
+    # bursts: large gaps between bursts, tight gaps inside
+    gaps = np.diff(tb)
+    assert gaps.max() > 10 * np.median(gaps)
+    assert abs(np.mean(np.diff(tp)) - 0.02) < 0.02

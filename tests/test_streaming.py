@@ -1,0 +1,414 @@
+"""Streaming admission-queue serving engine: determinism/equivalence
+suite plus the arrival-trace soak test.
+
+The contract (gated here and by bench_check's ``streaming_matches_offline``
+/ ``streaming_throughput``):
+
+* a replayed arrival trace yields results bitwise-equal (cold fits) /
+  within the studied warm tolerance to running the same scenarios as
+  ONE offline batch — streaming is a pure re-scheduling of the same
+  per-lane programs;
+* admission order is irrelevant: permutations of the same request set
+  produce identical per-scenario results;
+* lane re-use is generation-clean: a re-admitted lane's audit ledger
+  never mixes entries from its previous occupant (the lane-generation
+  regression fixed in this PR);
+* the soak suite (``-m soak``, excluded from tier-1 by pytest.ini)
+  drives >=100 trace arrivals through an 8-lane engine and dumps its
+  arrival trace for replay on failure.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (BatchedBayesSplitEdge, Scenario,
+                        WholeRunBayesSplitEdge, default_vgg19_problem,
+                        make_hetero_scenarios, make_mixed_scenarios)
+from repro.core.batch_bo import scenario_from_request
+from repro.runtime.stream import (StreamingBayesSplitEdge, StreamResult,
+                                  requests_from_trace)
+from repro.wireless.traces import arrival_trace, load_trace, save_trace
+
+# same studied bounds as tests/test_wholerun.py / test_compaction.py
+COLD_TRACE_TOL = 1e-4
+WARM_TRACE_TOL = 0.5
+
+
+def _vgg(seeds=(0, 1), budgets=(6, 10, 12)):
+    return [Scenario(default_vgg19_problem(), seed=s, budget=b)
+            for s in seeds for b in budgets]
+
+
+def _assert_bitwise(res_a, res_b):
+    for a, b in zip(res_a, res_b):
+        assert a.n_evals == b.n_evals
+        assert a.utilities == b.utilities
+        assert a.incumbent_trace == b.incumbent_trace
+        assert a.feasible == b.feasible
+        assert a.best_accuracy == b.best_accuracy
+
+
+def _trace_div(r1, r2):
+    m = min(r1.n_evals, r2.n_evals)
+    return float(np.max(np.abs(np.asarray(r1.incumbent_trace[:m])
+                               - np.asarray(r2.incumbent_trace[:m]))))
+
+
+# ---------------------------------------------------------------------------
+# replay equivalence: streaming == one offline batch
+# ---------------------------------------------------------------------------
+
+
+def test_stream_cold_bitwise_matches_offline_batch():
+    """The headline replay contract: 16 heterogeneous requests through
+    an 8-lane server, cold fits — bitwise equal to the one-dispatch
+    offline program over the same scenarios."""
+    r_s = StreamingBayesSplitEdge(make_hetero_scenarios(), n_lanes=8,
+                                  warm_start=False).run()
+    r_o = WholeRunBayesSplitEdge(make_hetero_scenarios(), warm_start=False,
+                                 compact=False).run()
+    _assert_bitwise(r_s, r_o)
+
+
+def test_stream_warm_within_tolerance_of_offline():
+    """Warm-start default: admission-time cold seeds keep every request
+    inside the studied warm trace tolerance of the offline compacted
+    run, with identical eval counts and accuracies."""
+    r_s = StreamingBayesSplitEdge(make_hetero_scenarios(), n_lanes=8).run()
+    r_o = WholeRunBayesSplitEdge(make_hetero_scenarios(),
+                                 compact=True).run()
+    for a, b in zip(r_s, r_o):
+        assert a.n_evals == b.n_evals
+        assert a.best_accuracy == b.best_accuracy
+        assert _trace_div(a, b) < WARM_TRACE_TOL
+
+
+def test_admission_order_permutation_invariant():
+    """Per-lane trajectories are functions of their own state only, so
+    ANY admission order of the same request set produces identical
+    per-scenario results."""
+    scs = _vgg()
+    perm = [3, 0, 5, 2, 4, 1]
+    r_a = StreamingBayesSplitEdge(_vgg(), n_lanes=2, warm_start=False,
+                                  budget_max=12).run()
+    r_b = StreamingBayesSplitEdge([_vgg()[i] for i in perm], n_lanes=2,
+                                  warm_start=False, budget_max=12).run()
+    # r_b is in ITS feed order; invert the permutation to compare
+    r_b_orig = [None] * len(scs)
+    for j, i in enumerate(perm):
+        r_b_orig[i] = r_b[j]
+    _assert_bitwise(r_a, r_b_orig)
+
+
+def test_stream_budget_max_padding_is_invisible():
+    """A server sized for larger budgets than any request serves
+    (longer ledger arrays) still reproduces the offline batch bitwise —
+    ledger length is pure padding."""
+    r_s = StreamingBayesSplitEdge(_vgg(), n_lanes=2, warm_start=False,
+                                  budget_max=20).run()
+    r_o = WholeRunBayesSplitEdge(_vgg(), warm_start=False,
+                                 compact=False).run()
+    _assert_bitwise(r_s, r_o)
+
+
+def test_stream_single_lane_serves_sequentially():
+    r_s = StreamingBayesSplitEdge(_vgg(seeds=(0,)), n_lanes=1,
+                                  warm_start=False, budget_max=12).run()
+    r_o = WholeRunBayesSplitEdge(_vgg(seeds=(0,)), warm_start=False,
+                                 compact=False).run()
+    _assert_bitwise(r_s, r_o)
+
+
+def test_stream_lanes_exceed_requests():
+    """More lanes than requests: unfilled lanes stay frozen and the
+    batch matches offline."""
+    scs = _vgg(seeds=(0,), budgets=(6, 10))
+    r_s = StreamingBayesSplitEdge(_vgg(seeds=(0,), budgets=(6, 10)),
+                                  n_lanes=8, warm_start=False,
+                                  l_pad=37, budget_max=12).run()
+    r_o = WholeRunBayesSplitEdge(scs, warm_start=False,
+                                 compact=False).run()
+    for a, b in zip(r_s, r_o):
+        assert a.n_evals == b.n_evals
+        assert a.utilities == b.utilities
+
+
+def test_stream_mixed_arch_composes():
+    """VGG19+ResNet101 request mix (max-L padded lanes) keeps the
+    host-driven engine as its trace-equivalence oracle."""
+    eng = StreamingBayesSplitEdge(make_mixed_scenarios(), n_lanes=2,
+                                  warm_start=False, budget_max=16)
+    res_s = eng.run()
+    res_b = BatchedBayesSplitEdge(make_mixed_scenarios()).run()
+    for a, b in zip(res_s, res_b):
+        assert a.n_evals == b.n_evals
+        assert a.best_accuracy == b.best_accuracy
+        assert _trace_div(a, b) < COLD_TRACE_TOL
+
+
+def test_stream_empty_feed():
+    eng = StreamingBayesSplitEdge([], n_lanes=2)
+    assert eng.run() == []
+
+
+# ---------------------------------------------------------------------------
+# lane generations: re-admitted lanes never inherit stale ledger rows
+# ---------------------------------------------------------------------------
+
+
+def test_readmitted_lane_ledger_never_mixes_generations():
+    """Regression (this PR): a retired lane's final ``ev_l`` rows
+    belong to exactly one (lane, generation) occupant — after
+    re-admission the snapshot of the NEW occupant starts from a fresh
+    ledger (-1 tail), and the previous occupant's flushed snapshot is
+    untouched by the admission scatter."""
+    results = []
+    eng = StreamingBayesSplitEdge(_vgg(), n_lanes=2, warm_start=False,
+                                  budget_max=12, on_result=results.append)
+    eng.run()
+    assert len(results) == 6
+    by_lane: dict = {}
+    for r in results:
+        assert isinstance(r, StreamResult)
+        n = r.result.n_evals
+        ls = r.raw["ev_l"]
+        # rows beyond the occupant's own evals are virgin (-1): nothing
+        # leaked from the lane's previous generation
+        assert int(r.raw["n"]) == n
+        assert np.all(ls[:n] >= 1)
+        assert np.all(ls[n:] == -1)
+        assert int(r.raw["gen"]) == r.gen
+        by_lane.setdefault((r.pool, r.lane), []).append(r)
+    # 6 requests over 2 lanes: lanes were re-used, generations distinct
+    assert any(len(v) > 1 for v in by_lane.values())
+    for v in by_lane.values():
+        gens = [r.gen for r in v]
+        assert len(set(gens)) == len(gens)
+        assert gens == sorted(gens)
+
+
+def test_stream_ledger_rows_match_offline_per_scenario():
+    """Each flushed audit snapshot equals the corresponding offline
+    lane's raw ledger row — the flush happens before any admission
+    scatter can touch the lane."""
+    results = []
+    StreamingBayesSplitEdge(_vgg(), n_lanes=2, warm_start=False,
+                            budget_max=12,
+                            on_result=results.append).run()
+    eng_o = WholeRunBayesSplitEdge(_vgg(), warm_start=False, compact=False)
+    eng_o.run()
+    raw_o = eng_o._last_raw
+    for r in results:
+        i = r.index
+        n = int(raw_o["n"][i])
+        assert r.result.n_evals == n
+        np.testing.assert_array_equal(r.raw["ev_l"][:n],
+                                      raw_o["ev_l"][i][:n])
+        np.testing.assert_array_equal(r.raw["ev_u"][:n],
+                                      raw_o["ev_u"][i][:n])
+
+
+# ---------------------------------------------------------------------------
+# serving surface: admission control, callbacks, laziness, stats
+# ---------------------------------------------------------------------------
+
+
+def test_request_over_budget_max_rejected():
+    eng = StreamingBayesSplitEdge(
+        [Scenario(default_vgg19_problem(), budget=30)], n_lanes=1,
+        budget_max=20, l_pad=37)
+    with pytest.raises(ValueError):
+        eng.run()
+
+
+def test_request_arch_exceeding_l_pad_rejected():
+    eng = StreamingBayesSplitEdge(
+        [Scenario(default_vgg19_problem(), budget=10)], n_lanes=1,
+        budget_max=12, l_pad=20)
+    with pytest.raises(ValueError):
+        eng.run()
+
+
+def test_iterator_feed_requires_static_shapes():
+    with pytest.raises(ValueError):
+        StreamingBayesSplitEdge(iter(_vgg()), n_lanes=2)
+
+
+def test_lane_counts_must_split_over_shards():
+    with pytest.raises(ValueError):
+        StreamingBayesSplitEdge(_vgg(), n_lanes=4, n_shards=3)
+
+
+def test_results_in_arrival_order_and_completion_callback():
+    seen = []
+    scs = _vgg(seeds=(0,), budgets=(6, 12, 10))
+    eng = StreamingBayesSplitEdge(_vgg(seeds=(0,), budgets=(6, 12, 10)),
+                                  n_lanes=2, warm_start=False,
+                                  budget_max=12, on_result=seen.append)
+    res = eng.run()
+    assert len(res) == len(scs)
+    # run() returns arrival order; the callback saw each exactly once
+    assert sorted(r.index for r in seen) == list(range(len(scs)))
+    for r in seen:
+        assert res[r.index] is r.result
+    # the budget-6 request retires at the init design — it completes
+    # before the budget-12 request that arrived ahead of it in lane 1
+    assert seen[0].index == 0
+
+
+def test_generator_feed_consumed_lazily():
+    pulled = []
+
+    def feed():
+        for sc in _vgg():
+            pulled.append(len(pulled))
+            yield sc
+
+    gen = feed()
+    eng = StreamingBayesSplitEdge(gen, n_lanes=2, l_pad=37, budget_max=12,
+                                  warm_start=False)
+    it = eng.serve()
+    first = next(it)
+    # bounded look-ahead: free lanes + one pool-flush, never the whole
+    # (potentially unbounded) feed
+    assert len(pulled) <= 2 + eng.n_lanes + 1
+    assert first.result.n_evals >= 1
+    rest = list(it)
+    assert len(rest) == 5
+
+
+def test_serve_is_single_shot():
+    eng = StreamingBayesSplitEdge(_vgg(seeds=(0,), budgets=(6,)),
+                                  n_lanes=1, budget_max=6)
+    eng.run()
+    with pytest.raises(RuntimeError):
+        next(eng.serve())
+
+
+def test_stream_stats_accounting():
+    eng = StreamingBayesSplitEdge(_vgg(), n_lanes=2, warm_start=False,
+                                  budget_max=12)
+    res = eng.run()
+    st = eng.stream_stats()
+    assert st["n_results"] == len(res) == 6
+    assert st["n_dispatches"] >= 1
+    assert 0.0 < st["occupancy_mean"] <= 1.0
+    assert st["lane_slots"] >= st["loop_evals"]
+    # every loop eval the lanes computed is accounted for
+    assert st["loop_evals"] == sum(r.n_evals for r in res) - 9 * len(res)
+    assert st["queue_depth_max"] >= 0
+    assert st["arrivals_per_s"] > 0
+    for e in st["lane_log"]:
+        assert set(e) >= {"pool", "lanes", "live", "bucket", "iters",
+                          "queue_depth"}
+
+
+# ---------------------------------------------------------------------------
+# sharded pools: per-shard admission, zero collectives
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_pools_cold_bitwise_matches_single_pool():
+    """Two independent per-shard pools (the collective-free mesh path)
+    are a pure re-scheduling too: same results, bitwise, as one pool."""
+    r_1 = StreamingBayesSplitEdge(_vgg(), n_lanes=4, n_shards=1,
+                                  warm_start=False, budget_max=12).run()
+    r_2 = StreamingBayesSplitEdge(_vgg(), n_lanes=4, n_shards=2,
+                                  warm_start=False, budget_max=12).run()
+    _assert_bitwise(r_2, r_1)
+
+
+def test_sharded_pool_with_no_admissions_survives_drain():
+    """Regression: a shard that never received a request (fewer
+    requests than shards' worth of lanes) has no device state — the
+    drain loop's pool shrink must skip it instead of crashing."""
+    res = StreamingBayesSplitEdge(
+        [Scenario(default_vgg19_problem(), budget=12)], n_lanes=4,
+        n_shards=2, warm_start=False, budget_max=12).run()
+    assert len(res) == 1
+    assert res[0].n_evals == 12
+
+
+def test_sharded_pools_spread_admissions():
+    results = []
+    eng = StreamingBayesSplitEdge(_vgg(), n_lanes=4, n_shards=2,
+                                  warm_start=False, budget_max=12,
+                                  on_result=results.append)
+    eng.run()
+    assert sorted({r.pool for r in results}) == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# arrival traces: replay determinism + soak
+# ---------------------------------------------------------------------------
+
+
+def test_trace_replay_is_deterministic():
+    """The same arrival trace served twice yields bitwise-identical
+    results — the whole point of dumping the trace on soak failure."""
+    tr = arrival_trace("poisson", n=6, seed=3, budgets=(6, 10),
+                       archs=("vgg19",))
+    r_1 = StreamingBayesSplitEdge(requests_from_trace(tr), n_lanes=2,
+                                  warm_start=False, budget_max=10).run()
+    r_2 = StreamingBayesSplitEdge(requests_from_trace(tr), n_lanes=2,
+                                  warm_start=False, budget_max=10).run()
+    _assert_bitwise(r_1, r_2)
+
+
+def test_trace_roundtrips_through_json(tmp_path):
+    tr = arrival_trace("bursty", n=12, seed=1)
+    p = str(tmp_path / "trace.json")
+    save_trace(tr, p)
+    assert load_trace(p) == tr
+
+
+def test_requests_from_trace_decodes_fields():
+    tr = arrival_trace("replay", n=8, seed=0, budgets=(6, 10),
+                       archs=("vgg19", "resnet101"))
+    reqs = requests_from_trace(tr)
+    assert len(reqs) == 8
+    for sc, arch, budget in zip(reqs, tr["arch"], tr["budget"]):
+        assert sc.budget == budget
+        assert sc.problem.L == (37 if arch == "vgg19" else 36)
+    # the channel offset moved the gain off the calibrated point
+    base = scenario_from_request("vgg19").problem.gain_db
+    assert any(abs(sc.problem.gain_db - base) > 1e-6
+               for sc in reqs if sc.problem.L == 37)
+
+
+@pytest.mark.slow
+@pytest.mark.soak
+def test_soak_100_arrivals_through_8_lanes(tmp_path):
+    """Soak: >=100 Poisson arrivals (mixed arch, mixed budgets) through
+    an 8-lane engine with wall-clock arrival pacing. The trace is
+    written BEFORE serving so a failure leaves the exact arrival
+    sequence on disk for replay (CI uploads it as an artifact)."""
+    import os
+    tr = arrival_trace("poisson", n=100, seed=7, budgets=(6, 8, 10, 12),
+                       archs=("vgg19", "resnet101"))
+    art_dir = os.environ.get("SOAK_ARTIFACT_DIR", str(tmp_path))
+    save_trace(tr, os.path.join(art_dir, "soak_trace.json"))
+    reqs = requests_from_trace(tr)
+    results = []
+    eng = StreamingBayesSplitEdge(
+        reqs, n_lanes=8, budget_max=12,
+        arrivals=tr["t"], time_scale=0.05,   # compressed wall clock
+        on_result=results.append)
+    out = eng.run()
+    assert len(out) == 100
+    st = eng.stream_stats()
+    assert st["n_results"] == 100
+    assert 0.0 < st["occupancy_mean"] <= 1.0
+    seen_lanes = {(r.pool, r.lane) for r in results}
+    assert len(seen_lanes) <= 8
+    for r in results:
+        res = r.result
+        sc = r.scenario
+        assert 1 <= res.n_evals <= sc.budget or res.n_evals == 9
+        ls = r.raw["ev_l"][:res.n_evals]
+        # the audit ledger never holds a padded tail split, and never
+        # mixes generations (virgin tail)
+        assert ls.min() >= 1 and ls.max() <= sc.problem.L
+        assert np.all(r.raw["ev_l"][res.n_evals:] == -1)
+    # lanes were recycled heavily: every request beyond each lane's
+    # first occupant rode a re-admission (generation > 0)
+    assert sum(1 for r in results if r.gen > 0) >= 100 - 8

@@ -29,7 +29,15 @@ gate breaks:
     the uncompacted wholerun on that batch (<= 1.05x);
   * packing_result_invariant — architecture-aware lane packing
     (in-batch sort and per-shard packed programs) is a pure permutation
-    of results (bitwise on cold runs).
+    of results (bitwise on cold runs);
+  * streaming_matches_offline — a replayed request feed through the
+    streaming admission-queue engine (16 heterogeneous requests over 8
+    lanes) is bitwise equal (cold fits) / within the studied tolerance
+    (warm) to the same scenarios run as one offline batch;
+  * streaming_throughput — the server's arrivals/s stays within 1.15x
+    of the offline batched engine's scenarios/s on that workload (the
+    ratio against the stronger wholerun-compacted path is recorded for
+    tracking).
 
 The gate outcome is also emitted as ONE machine-readable line::
 
@@ -132,6 +140,20 @@ def main() -> int:
     gate("packing_result_invariant", h["packing_bitwise_match"],
          padding_waste_ratio=h["padding_waste_ratio"],
          padding_waste_ratio_packed=h["padding_waste_ratio_packed"])
+    # streaming admission-queue serving engine
+    s = r["streaming"]
+    gate("streaming_matches_offline", s["matches_offline"],
+         cold_bitwise_match=s["cold_bitwise_match"],
+         warm_within_tol=s["warm_within_tol"],
+         n_requests=s["n_requests"], n_lanes=s["n_lanes"])
+    gate("streaming_throughput",
+         s["streaming_s"] <= 1.15 * s["batched_s"],
+         streaming_s=s["streaming_s"], batched_s=s["batched_s"],
+         arrivals_per_s=s["arrivals_per_s"],
+         slowdown_vs_batched=s["slowdown_vs_batched"],
+         slowdown_vs_wholerun=s["slowdown_vs_wholerun"],
+         occupancy_mean=s["occupancy_mean"],
+         queue_depth_max=s["queue_depth_max"])
 
     sharded = ("n/a" if r["sharded_s"] is None
                else f"{r['sharded_s']:.2f}s/{r['n_devices']}dev")
@@ -146,6 +168,9 @@ def main() -> int:
           f"compaction {h['compaction_speedup']}x "
           f"(occupancy {h['live_occupancy_uncompacted']:.2f}->"
           f"{h['live_occupancy_compacted']:.2f}), "
+          f"streaming {s['streaming_s']:.2f}s/"
+          f"{s['n_requests']}req@{s['n_lanes']}lanes "
+          f"({s['arrivals_per_s']:.0f} arr/s), "
           f"zero-rejits={r['zero_rejits_after_warmup']}")
     print("BENCH_CHECK_SUMMARY " + json.dumps(gates, sort_keys=True))
 
@@ -163,6 +188,9 @@ def main() -> int:
             wholerun_s=r["wholerun_s"], sharded_s=r["sharded_s"],
             compaction_speedup=h["compaction_speedup"],
             live_occupancy_compacted=h["live_occupancy_compacted"],
+            streaming_s=s["streaming_s"],
+            streaming_arrivals_per_s=s["arrivals_per_s"],
+            streaming_slowdown_vs_wholerun=s["slowdown_vs_wholerun"],
             gates=gates)
         with open(hist, "a") as f:
             f.write(json.dumps(record, sort_keys=True) + "\n")
