@@ -1,3 +1,4 @@
 from repro.checkpoint.ckpt import (  # noqa: F401
-    CheckpointManager, latest_step, restore, save,
+    CheckpointManager, latest_step, load_flat, load_manifest, restore,
+    save, unflatten,
 )

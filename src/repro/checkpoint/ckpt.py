@@ -91,6 +91,44 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def load_manifest(ckpt_dir: str, step: int) -> dict:
+    """The committed checkpoint's manifest (tree structure, shapes,
+    dtypes, user metadata) — lets a consumer validate compatibility
+    (e.g. the streaming engine's static shapes) BEFORE paying for the
+    array load, and reject mismatches with a clear error."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if not os.path.exists(os.path.join(path, "COMMITTED")):
+        raise FileNotFoundError(f"no committed checkpoint at {path}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)
+
+
+def load_flat(ckpt_dir: str, step: int) -> dict:
+    """The committed checkpoint's leaves as a flat ``{path: ndarray}``
+    dict (paths are the manifest keys, ``/``-joined). The template-free
+    restore path: consumers whose tree structure is not available as a
+    live template (the streaming engine resuming pools of
+    checkpoint-recorded width) rebuild their state from the keys."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if not os.path.exists(os.path.join(path, "COMMITTED")):
+        raise FileNotFoundError(f"no committed checkpoint at {path}")
+    npz = np.load(os.path.join(path, "arrays.npz"))
+    return {k: npz[k] for k in npz.files}
+
+
+def unflatten(flat: dict) -> dict:
+    """Rebuild the nested-dict tree from a flat ``{a/b/c: leaf}`` dict
+    (inverse of the dict part of the save-time flatten)."""
+    out: dict = {}
+    for k, v in flat.items():
+        parts = k.split(_SEP)
+        d = out
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = v
+    return out
+
+
 def restore(ckpt_dir: str, step: int, template: Any,
             shardings: Any = None) -> Any:
     """Restore into `template`'s structure. With `shardings` (a matching

@@ -36,10 +36,15 @@ from repro.core.problem import SplitInferenceProblem
 @dataclasses.dataclass
 class Scenario:
     """One BO run: a problem instance (channel state + budgets baked in),
-    an init seed and an evaluation budget."""
+    an init seed and an evaluation budget. ``deadline_s`` is an optional
+    absolute completion deadline in trace-time seconds (the arrival
+    clock of the streaming engine): deadline-aware admission orders the
+    queue by slack against it and sheds requests that cannot make it —
+    offline engines ignore it."""
     problem: SplitInferenceProblem
     seed: int = 0
     budget: int = 20
+    deadline_s: Optional[float] = None
 
 
 class BatchedBayesSplitEdge:
@@ -248,7 +253,8 @@ def make_hetero_scenarios(seeds: Sequence[int] = (0, 1),
 
 
 def scenario_from_request(arch: str, gain_offset_db: float = 0.0,
-                          budget: int = 20, seed: int = 0) -> Scenario:
+                          budget: int = 20, seed: int = 0,
+                          deadline_s: Optional[float] = None) -> Scenario:
     """Decode one raw stream request — (channel state, budget,
     architecture) — into a ``Scenario`` on the calibrated default
     problem for that backbone, with the request's channel expressed as
@@ -267,7 +273,7 @@ def scenario_from_request(arch: str, gain_offset_db: float = 0.0,
         raise ValueError(f"unknown request architecture {arch!r}")
     pb = SplitInferenceProblem(base.cm, base.gain_db + gain_offset_db,
                                util=base.util)
-    return Scenario(pb, seed=seed, budget=budget)
+    return Scenario(pb, seed=seed, budget=budget, deadline_s=deadline_s)
 
 
 def run_packed_shards(scenarios: Sequence[Scenario], n_shards: int = 1,

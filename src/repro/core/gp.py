@@ -195,6 +195,34 @@ def _fit_core_from(data, cfg: GPConfig, theta0, max_steps: int, gtol: float):
     return _posterior_cache(theta, data, cfg, y_mu, y_sigma), steps
 
 
+def theta_finite(theta) -> jax.Array:
+    """Per-lane health predicate of a (batched) hyperparameter pytree:
+    True where every leaf is finite. A diverged MLL fit (NaN gradients
+    from a poisoned dataset, an overflowed Adam step, a Cholesky of an
+    indefinite kernel) surfaces as a non-finite theta or posterior —
+    the whole-run loop body uses this to raise a lane's ``fault`` flag
+    instead of letting the NaN poison the batch."""
+    leaves = jax.tree.leaves(theta)
+    ok = jnp.isfinite(leaves[0])
+    for l_ in leaves[1:]:
+        ok = ok & jnp.isfinite(l_)
+    return ok
+
+
+def scrub_dataset(data):
+    """Drop non-finite observations from a (batched) padded dataset:
+    poisoned rows are masked out (y zeroed so downstream masked reduces
+    stay NaN-free) while append positions (``n_pts``) are untouched —
+    a scrubbed row becomes an inert identity row of the masked kernel.
+    The cold-refit rung of the divergence-quarantine ladder."""
+    bad = ~(jnp.isfinite(data["y"])
+            & jnp.all(jnp.isfinite(data["x"]), axis=-1))
+    return dict(data,
+                x=jnp.where(bad[..., None], 0.0, data["x"]),
+                y=jnp.where(bad, 0.0, data["y"]),
+                mask=data["mask"] & ~bad)
+
+
 fit = jax.jit(_fit_core, static_argnames=("cfg",))
 
 

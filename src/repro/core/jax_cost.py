@@ -222,3 +222,19 @@ def project_feasible(params, a, margin: float = 1.02):
     cand_ok = ((slack > 0.0) & (p_req <= params["p_max"])
                & (ec <= params["e_max"]) & (tc <= params["tau_max"]))
     return jnp.where(~feas & cand_ok, cand, a)
+
+
+def fallback_answer(params, best_a, has_best):
+    """Best-effort answer for a lane retired before convergence (deadline
+    preemption, exhausted divergence quarantine): the incumbent if one
+    exists, else the feasible projection of the search-space center —
+    the degraded-result semantics of the serving engine. Returns
+    ``(a, u, feas)``: the answer point, its oracle utility and whether
+    it is feasible (an infeasible fallback keeps ``has_best`` False
+    downstream, mirroring the no-feasible-point ``BOResult``)."""
+    center = jnp.full_like(best_a, 0.5)
+    proj = project_feasible(params, center)
+    a = jnp.where(has_best, best_a, proj)
+    li, p = denormalize(params, a)
+    u, _, feas = utility(params, li, p)
+    return a, u, feas

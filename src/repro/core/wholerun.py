@@ -84,6 +84,15 @@ class WholeRunConfig:
     use_schedules: bool
     warm_start: bool
     gp: gpm.GPConfig
+    # divergence quarantine (streaming fault tolerance): lanes with
+    # non-finite GP *data* always fault (impossible in healthy runs —
+    # evals are finite — so the default detector keeps every healthy
+    # program bitwise-identical); with fault_on_divergence the detector
+    # additionally faults lanes whose refit carry / chosen point went
+    # non-finite. Strict mode changes behavior on workloads where a
+    # warm refit diverges organically (historically survivable
+    # deterministic garbage), so it is opt-in.
+    fault_on_divergence: bool = False
 
 
 def _sched(w0, wT, t):
@@ -136,6 +145,12 @@ def _init_state(s: int, cfg: WholeRunConfig, dim: int = 2):
         # counter bumped by every admission scatter so a re-admitted
         # lane's rows are auditable against its previous occupant's
         seeded=jnp.zeros((s,), bool), gen=jnp.zeros((s,), i32),
+        # divergence quarantine: raised by the loop body when a lane's
+        # refit or acquisition goes non-finite — the lane freezes (so the
+        # phase exits on the retirement event) instead of poisoning the
+        # batch; the streaming driver then escalates (re-seed -> scrub ->
+        # degraded retirement) host-side
+        fault=jnp.zeros((s,), bool),
         # warm-start carry + fit-cost accounting
         theta=jax.tree.map(lambda v: jnp.broadcast_to(v, (s,)).astype(f32),
                            th0),
@@ -242,7 +257,7 @@ def _pen_static(params, grid, boundary):
 
 _OUT_KEYS = ("ev_u", "ev_acc", "ev_feas", "ev_trace", "ev_l", "n",
              "best_a", "best_u", "has_best", "fit_steps", "fit_calls",
-             "gen")
+             "gen", "fault")
 
 
 def _make_body(run_data, grid, wvec, cfg: WholeRunConfig, m: int):
@@ -376,8 +391,28 @@ def _make_body(run_data, grid, wvec, cfg: WholeRunConfig, m: int):
         st2["seeded"] = jnp.ones_like(st["seeded"])
         st2 = jax.vmap(lambda s1, a, p1, b: _step(s1, a, p1, b, cfg))(
             st2, a_next, params, run_data["budget"])
-        # freeze finished scenarios (early-stop masking)
-        new = jax.tree.map(partial(_sel, st["active"]), st2, st)
+        # divergence quarantine: a lane whose GP dataset went non-finite
+        # (a poisoned observation) must not fit on it — the lane's step
+        # is suppressed via the freeze select below, its `fault` flag
+        # raises and it deactivates: a retirement event the phase-loop
+        # exits surface to the host driver, which escalates (requeue /
+        # re-seed -> scrub -> degraded retirement). Healthy data is
+        # always finite, so `bad` is all False and the select keeps the
+        # historical bitwise behavior; the strict detector additionally
+        # flags diverged refit carries / chosen points (opt-in — organic
+        # warm-fit divergence was historically survivable).
+        bad = st["active"] & (
+            jnp.any(st["mask"] & ~jnp.isfinite(st["y"]), axis=1)
+            | jnp.any(st["mask"]
+                      & ~jnp.all(jnp.isfinite(st["x"]), axis=-1), axis=1))
+        if cfg.fault_on_divergence:
+            bad = bad | (st["active"] & (
+                (~gpm.theta_finite(theta) & upd)
+                | ~jnp.all(jnp.isfinite(a_next), axis=1)))
+        # freeze finished scenarios (early-stop masking) + faulted lanes
+        new = jax.tree.map(partial(_sel, st["active"] & ~bad), st2, st)
+        new["fault"] = st["fault"] | bad
+        new["active"] = new["active"] & ~bad
         return new, it + 1
 
     return body
@@ -581,6 +616,63 @@ def admit_lanes(state, run_data, new_state, new_run_data, lanes):
     gen = state["gen"].at[lanes].add(1)
     state = dict(jax.tree.map(put, state, new_state), gen=gen)
     return state, jax.tree.map(put, run_data, new_run_data)
+
+
+@jax.jit
+def retire_lanes(state, run_data, lanes):
+    """Force-retire the given lanes through the existing retirement
+    machinery (deactivate; the next phase exit / collect flushes them),
+    installing the best-effort degraded answer for lanes that never
+    found a feasible incumbent: the feasible projection of the
+    search-space center (``jax_cost.fallback_answer``). Used for
+    deadline preemption of hopeless lanes and for the terminal rung of
+    the divergence-quarantine ladder — ``fault`` clears so the flush
+    path treats the lane as ordinarily retired."""
+    params_rows = jax.tree.map(lambda v: v[lanes], run_data["params"])
+    a, u, feas = jax.vmap(jc.fallback_answer)(
+        params_rows, state["best_a"][lanes], state["has_best"][lanes])
+    hb = state["has_best"][lanes]
+    state = dict(state)
+    state["best_a"] = state["best_a"].at[lanes].set(a)
+    state["best_u"] = state["best_u"].at[lanes].set(
+        jnp.where(hb, state["best_u"][lanes],
+                  jnp.where(feas, u, -jnp.inf)))
+    state["has_best"] = state["has_best"].at[lanes].set(hb | feas)
+    state["active"] = state["active"].at[lanes].set(False)
+    state["fault"] = state["fault"].at[lanes].set(False)
+    return state
+
+
+@partial(jax.jit, static_argnames=("cfg", "scrub"))
+def quarantine_lanes(state, lanes, cfg: WholeRunConfig, scrub: bool):
+    """One repair rung of the divergence-quarantine ladder, applied in
+    place to faulted lanes: reset the lanes' hyperparameter carry to the
+    cold init and clear ``seeded`` so their next body iteration performs
+    a fresh cold fit (the re-seed rung); with ``scrub=True`` additionally
+    drop non-finite observations from their GP datasets
+    (``gp.scrub_dataset`` — the cold-refit rung for a poisoned dataset).
+    The lanes reactivate with ``fault`` cleared and their early-stop
+    counter reset; ledger, incumbent and generation are untouched (the
+    same occupant continues)."""
+    th0 = gpm.init_theta(cfg.gp)
+    k = lanes.shape[0]
+    state = dict(state)
+    state["theta"] = jax.tree.map(
+        lambda v, v0: v.at[lanes].set(
+            jnp.broadcast_to(v0, (k,)).astype(v.dtype)),
+        state["theta"], th0)
+    if scrub:
+        data = gpm.scrub_dataset(
+            dict(x=state["x"][lanes], y=state["y"][lanes],
+                 mask=state["mask"][lanes]))
+        state["x"] = state["x"].at[lanes].set(data["x"])
+        state["y"] = state["y"].at[lanes].set(data["y"])
+        state["mask"] = state["mask"].at[lanes].set(data["mask"])
+    state["seeded"] = state["seeded"].at[lanes].set(False)
+    state["fault"] = state["fault"].at[lanes].set(False)
+    state["active"] = state["active"].at[lanes].set(True)
+    state["n_c"] = state["n_c"].at[lanes].set(0)
+    return state
 
 
 # -- host-side input staging (shared by the offline and streaming engines) ---

@@ -44,8 +44,20 @@ class HeartbeatMonitor:
             ts.pop(0)
         self.last_seen[host] = now if now is not None else time.time()
 
-    def stragglers(self) -> List[int]:
-        meds = {h: np.median(ts) for h, ts in self.step_times.items() if ts}
+    def _silent(self, now: Optional[float]) -> set:
+        now = now if now is not None else time.time()
+        return {h for h, t in self.last_seen.items()
+                if now - t > self.dead_timeout_s}
+
+    def stragglers(self, now: Optional[float] = None) -> List[int]:
+        """Hosts whose trailing-median step time sits k-MAD over the
+        fleet median. Hosts already past the dead timeout are EXCLUDED
+        from both the population and the report: a dead host's stale
+        trailing median would otherwise drag the MAD threshold up and
+        mask true (alive-but-slow) stragglers."""
+        dead = self._silent(now)
+        meds = {h: np.median(ts) for h, ts in self.step_times.items()
+                if ts and h not in dead}
         if len(meds) < 2:
             return []
         vals = np.array(list(meds.values()))
@@ -54,9 +66,14 @@ class HeartbeatMonitor:
         return [h for h, v in meds.items() if v > thresh]
 
     def dead(self, now: Optional[float] = None) -> List[int]:
-        now = now if now is not None else time.time()
-        return [h for h, t in self.last_seen.items()
-                if now - t > self.dead_timeout_s]
+        """Hosts silent past the hard timeout. Flagged hosts have their
+        ``step_times`` pruned: their samples are stale by definition, and
+        a host that later rejoins must rebuild its trailing window from
+        fresh reports instead of resurrecting pre-failure timings."""
+        out = sorted(self._silent(now))
+        for h in out:
+            self.step_times[h] = []
+        return out
 
 
 # ---------------------------------------------------------------------------

@@ -192,6 +192,38 @@ def unpack_results(results, order):
     return out
 
 
+ADMISSION_POLICIES = ("fifo", "edf")
+
+
+def admission_order(pending, now_s: float = 0.0, policy: str = "fifo"):
+    """Admission-queue ordering policy for the streaming engine: given
+    the pending queue as ``(arrival_index, Scenario)`` pairs, return the
+    indices *into pending* in the order requests should claim freed
+    lanes.
+
+    * ``"fifo"`` — arrival order (the historical behavior);
+    * ``"edf"`` — earliest-deadline-first: ascending slack
+      (``deadline_s - now_s``); requests without a deadline sort last,
+      ties (and the deadline-free tail) stay in arrival order, so a
+      deadline-free feed under EDF is bitwise the FIFO schedule.
+
+    A callable ``policy(pending, now_s) -> order`` plugs in custom
+    scheduling (budget-aware slack, priorities) without touching the
+    engine; this hook and :func:`next_admission_shard` together define
+    where a request goes and when."""
+    if callable(policy):
+        return policy(pending, now_s)
+    if policy == "fifo":
+        return list(range(len(pending)))
+    if policy == "edf":
+        def slack(j):
+            d = pending[j][1].deadline_s
+            return float("inf") if d is None else d - now_s
+        return sorted(range(len(pending)), key=lambda j: (slack(j), j))
+    raise ValueError(f"unknown admission policy {policy!r} "
+                     f"(one of {ADMISSION_POLICIES} or a callable)")
+
+
 def next_admission_shard(free_lanes, rr: int = 0):
     """Admission placement for the streaming engine's per-shard lane
     pools (``repro.runtime.stream``): pick the shard with the most free

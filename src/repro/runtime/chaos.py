@@ -1,0 +1,192 @@
+"""Deterministic fault injection for the streaming serving engine.
+
+The fault-tolerance layer (checkpoint/restore, divergence quarantine,
+deadline shedding, pool-loss recovery — ``runtime/stream.py``) is
+validated by *active* fault injection rather than trusted by
+construction: a seeded ``FaultInjector`` attached to a
+``StreamingBayesSplitEdge`` fires a configured fault schedule against
+the live server, and the recovery invariants (post-dedup replay match
+vs the fault-free run, bounded re-execution, no wedges) are gated in
+``tests/test_chaos.py`` and ``tools/bench_check.py``.
+
+Fault classes (all one-shot per configured entry, all logged to an
+``events`` list that dumps to JSON for CI artifacts):
+
+* ``kill_at`` — raise :class:`SimulatedCrash` at the top of the given
+  serving rounds, after the round's checkpoint: the process-death model
+  for the checkpoint/``resume()`` replay-match invariant.
+* ``nan_poison_at`` — overwrite a live lane's GP observations (or its
+  hyperparameter carry, ``poison="theta"``) with NaN: the diverged-fit
+  model driving the quarantine ladder (requeue / re-seed -> scrub ->
+  degraded retirement).
+* ``drop_pool_at`` — kill a lane pool outright (host loss): its
+  in-flight requests must re-enter the admission queue and re-admit
+  onto surviving pools.
+* ``mute_pool_at`` — silence a pool's heartbeat without freeing it (the
+  hung-host model): detection must come from the ``HeartbeatMonitor``
+  timeout, not from the injector.
+* ``delay_at`` — sleep ``delay_s`` before the round's dispatches (the
+  straggler model for heartbeat/overhead studies).
+
+Every random choice (which pool, which lane) comes from one
+``numpy.random.default_rng(seed)`` stream in firing order, so a chaos
+schedule is fully determined by ``(seed, schedule)`` and a failing run
+replays exactly.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SimulatedCrash(RuntimeError):
+    """Injected process death: the serve loop dies between dispatches,
+    exactly like a SIGKILL'd host — no flush, no final checkpoint."""
+
+    def __init__(self, round_: int):
+        super().__init__(f"chaos: simulated crash at serving round "
+                         f"{round_}")
+        self.round = round_
+
+
+@jax.jit
+def poison_dataset(state, lane):
+    """NaN-poison one lane's GP observation row (the whole padded ``y``
+    row — any masked reduce over it goes non-finite, which is the point:
+    the next fit on this lane must diverge, not limp)."""
+    return dict(state, y=state["y"].at[lane].set(jnp.nan))
+
+
+@jax.jit
+def poison_theta(state, lane):
+    """NaN-poison one lane's warm-start hyperparameter carry — the
+    diverged-refit model for warm-path runs (cold fits never read the
+    carry, so ``poison="data"`` is the cold-path fault)."""
+    return dict(state, theta=jax.tree.map(
+        lambda v: v.at[lane].set(jnp.nan), state["theta"]))
+
+
+class FaultInjector:
+    """Seed-deterministic fault schedule against a streaming engine.
+
+    Rounds are 1-based serving-loop iterations (the engine's
+    ``_round``); each configured entry fires at most once. The engine
+    calls :meth:`inject` once per round (after its checkpoint, before
+    pulling/admitting) and :meth:`on_dispatch` before each pool
+    dispatch.
+    """
+
+    def __init__(self, seed: int = 0,
+                 kill_at: Iterable[int] = (),
+                 nan_poison_at: Iterable[int] = (),
+                 drop_pool_at: Iterable[int] = (),
+                 mute_pool_at: Iterable[int] = (),
+                 delay_at: Iterable[int] = (),
+                 poison: str = "data",
+                 delay_s: float = 0.05):
+        if poison not in ("data", "theta"):
+            raise ValueError(f"poison must be 'data' or 'theta', got "
+                             f"{poison!r}")
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)
+        self.kill_at = set(int(r) for r in kill_at)
+        self.nan_poison_at = set(int(r) for r in nan_poison_at)
+        self.drop_pool_at = set(int(r) for r in drop_pool_at)
+        self.mute_pool_at = set(int(r) for r in mute_pool_at)
+        self.delay_at = set(int(r) for r in delay_at)
+        self.poison = poison
+        self.delay_s = float(delay_s)
+        self.events: list = []
+
+    # -- helpers -------------------------------------------------------------
+    def _log(self, kind: str, round_: int, **detail) -> dict:
+        ev = dict(kind=kind, round=round_, **detail)
+        self.events.append(ev)
+        return ev
+
+    def _pick_pool(self, pools, need_inflight: bool) -> Optional[int]:
+        """Deterministically pick a target pool: alive, not muted, and
+        (when the fault needs a victim request) holding in-flight work."""
+        cands = [p.pool_id for p in pools
+                 if not p.dead and not p.muted
+                 and (not need_inflight or np.any(p.order >= 0))]
+        if not cands:
+            return None
+        return int(cands[self.rng.integers(len(cands))])
+
+    def _pick_lane(self, pool) -> Optional[int]:
+        live = np.flatnonzero(
+            (pool.order >= 0) & np.asarray(pool.state["active"]))
+        if live.size == 0:
+            return None
+        return int(live[self.rng.integers(live.size)])
+
+    # -- engine hooks --------------------------------------------------------
+    def inject(self, engine) -> None:
+        """Fire every fault scheduled for the engine's current round.
+        Called once per serving round; raises ``SimulatedCrash`` last so
+        same-round poison/drop faults still land first."""
+        r = engine._round
+        pools = engine._pools
+        if r in self.nan_poison_at:
+            self.nan_poison_at.discard(r)
+            pid = self._pick_pool(pools, need_inflight=True)
+            lane = None if pid is None else self._pick_lane(pools[pid])
+            if lane is None:
+                self._log("nan_poison_skipped", r, pool=pid)
+            else:
+                p = pools[pid]
+                fn = poison_dataset if self.poison == "data" else poison_theta
+                p.state = fn(p.state, jnp.int32(lane))
+                self._log("nan_poison", r, pool=pid, lane=lane,
+                          target=self.poison,
+                          request=int(p.order[lane]))
+        if r in self.drop_pool_at:
+            self.drop_pool_at.discard(r)
+            pid = self._pick_pool(pools, need_inflight=True)
+            if pid is None:
+                self._log("drop_pool_skipped", r)
+            else:
+                self._log("drop_pool", r, pool=pid,
+                          requests=[int(i) for i in pools[pid].order
+                                    if i >= 0])
+                engine._drop_pool(pid, reason="chaos")
+        if r in self.mute_pool_at:
+            self.mute_pool_at.discard(r)
+            pid = self._pick_pool(pools, need_inflight=True)
+            if pid is None:
+                self._log("mute_pool_skipped", r)
+            else:
+                pools[pid].muted = True
+                self._log("mute_pool", r, pool=pid)
+        if r in self.kill_at:
+            self.kill_at.discard(r)
+            self._log("kill", r)
+            raise SimulatedCrash(r)
+
+    def on_dispatch(self, engine, pool) -> None:
+        """Pre-dispatch hook: inject the configured straggler delay."""
+        r = engine._round
+        if r in self.delay_at:
+            self.delay_at.discard(r)
+            self._log("delay", r, pool=pool.pool_id,
+                      delay_s=self.delay_s)
+            time.sleep(self.delay_s)
+
+    # -- artifacts -----------------------------------------------------------
+    def save_events(self, path: str) -> None:
+        """Dump the injected-fault event log as JSON — uploaded next to
+        the arrival trace by the CI chaos job so a failing soak run
+        replays with the exact same fault schedule."""
+        d = os.path.dirname(os.path.abspath(path))
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(dict(seed=self.seed, events=self.events), f,
+                      sort_keys=True)

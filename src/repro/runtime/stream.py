@@ -41,6 +41,39 @@ pools (optionally pinned to distinct devices). Admission binds each
 request to one shard (``sharding.next_admission_shard``), each shard
 dispatches its own phase programs, and results gather host-side — the
 mesh path keeps zero collectives by construction.
+
+Failure model (docs/engine.md "Failure model & recovery"; exercised by
+``runtime.chaos.FaultInjector`` and gated in tests/test_chaos.py +
+bench_check):
+
+* **Crash safety** — ``ckpt_dir``/``ckpt_every`` snapshot the full
+  serving state (pool pytrees, host lane maps, the admission queue and
+  the emitted-result watermark) at the top of every k-th round via
+  ``checkpoint/ckpt.py``'s atomic commits; ``resume()`` rebuilds the
+  server from the latest commit and replays the feed's consumed prefix.
+  Emission is *at-least-once*: results emitted after the last snapshot
+  re-emit after resume — :func:`dedup_results` (first result per
+  arrival index wins) restores exactly-once, and the post-dedup stream
+  replay-matches the uninterrupted run.
+* **Divergence quarantine** — a lane whose GP fit goes non-finite
+  freezes with the per-lane ``fault`` flag instead of poisoning the
+  batch; the host escalates per request: re-admit as a fresh run
+  (``quarantine="requeue"``, bounded by ``max_requeues``, replay-clean
+  because the re-run is an ordinary cold run), then in-place repair
+  rungs (re-seed the carry, scrub the dataset —
+  ``wholerun.quarantine_lanes``), then degraded retirement with the
+  best-effort feasible-projection answer (``wholerun.retire_lanes``).
+* **Deadlines** — requests may carry an absolute ``deadline_s`` (trace
+  time); ``admission_policy="edf"`` orders the queue by slack, and
+  ``shed_hopeless=True`` preempts in-flight lanes that cannot finish in
+  time (EWMA-estimated remaining work) and sheds hopeless queued
+  requests immediately — both emit a ``degraded=True`` result rather
+  than silently rejecting, so every admitted request emits exactly one
+  result (the no-wedge invariant).
+* **Pool loss** — a dead pool (chaos drop, or ``HeartbeatMonitor``
+  timeout with ``heartbeat_timeout_s``) re-enqueues its in-flight
+  requests onto surviving pools; re-execution is bounded (one re-run
+  per drop event) and the server raises only when every pool is lost.
 """
 from __future__ import annotations
 
@@ -54,12 +87,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import ckpt as ckptlib
 from repro.core import gp as gpm
 from repro.core import wholerun as wr
 from repro.core.acquisition import AcqWeights, candidate_grid
 from repro.core.batch_bo import Scenario, scenario_from_request
 from repro.core.bo import BOResult
-from repro.distributed.sharding import next_admission_shard
+from repro.distributed.fault_tolerance import HeartbeatMonitor
+from repro.distributed.sharding import (ADMISSION_POLICIES, admission_order,
+                                        next_admission_shard)
+
+# vocabulary of degraded-result reasons (checkpointed as codes)
+DEGRADED_REASONS = ("quarantine", "preempted", "shed")
+
+QUARANTINE_POLICIES = ("requeue", "repair")
 
 
 @dataclasses.dataclass
@@ -72,15 +113,35 @@ class StreamResult:
     lane: int                  # lane it finished in
     gen: int                   # that lane's generation while it ran
     raw: dict                  # audit-ledger row snapshot (_OUT_KEYS)
+    degraded: bool = False     # best-effort answer (shed/preempt/quarantine)
+    reason: str = ""           # one of DEGRADED_REASONS when degraded
+    emit_s: float = 0.0        # emission time (trace seconds)
 
 
 def requests_from_trace(trace: dict) -> List[Scenario]:
     """Decode an arrival trace (``wireless.traces.arrival_trace``) into
-    the Scenario feed, one per arrival, in arrival order."""
-    return [scenario_from_request(arch, off, budget, seed)
-            for arch, off, budget, seed in zip(
+    the Scenario feed, one per arrival, in arrival order. Traces with a
+    ``deadline_s`` column yield deadline-carrying scenarios."""
+    deadlines = trace.get("deadline_s") or [None] * len(trace["arch"])
+    return [scenario_from_request(arch, off, budget, seed, deadline_s=d)
+            for arch, off, budget, seed, d in zip(
                 trace["arch"], trace["gain_offset_db"], trace["budget"],
-                trace["init_seed"])]
+                trace["init_seed"], deadlines)]
+
+
+def dedup_results(results: Iterable[StreamResult]) -> List[StreamResult]:
+    """At-least-once -> exactly-once: keep the first result per arrival
+    index, in the order seen. A crashed-and-resumed serve re-emits
+    whatever landed between the last snapshot and the crash; after this
+    dedup the stream is the uninterrupted run's (gen/lane placement may
+    differ — the result payloads are what replay-matches)."""
+    seen = set()
+    out = []
+    for r in results:
+        if r.index not in seen:
+            seen.add(r.index)
+            out.append(r)
+    return out
 
 
 class _LanePool:
@@ -102,13 +163,17 @@ class _LanePool:
         # result's (pool, lane, gen) triple must keep naming the lane
         # the run actually occupied
         self.lane_ids = np.arange(width, dtype=np.int64)
+        self.dead = False          # pool lost (chaos drop / heartbeat)
+        self.muted = False         # heartbeat silenced (hung-host model)
 
     # -- admission -----------------------------------------------------------
     def free_count(self) -> int:
+        if self.dead:
+            return 0
         return int(np.sum(self.order < 0))
 
     def live_count(self) -> int:
-        if self.state is None:
+        if self.state is None or self.dead:
             return 0
         return int(np.asarray(self.state["active"]).sum())
 
@@ -179,15 +244,21 @@ class _LanePool:
         return dict(pool=self.pool_id, lanes=self.width, live=live,
                     bucket=m)
 
-    def collect(self) -> Tuple[List[StreamResult], int]:
+    def collect(self) -> Tuple[List[StreamResult], List[int], int]:
         """Flush lanes that retired since the last collect — snapshot
         their ledger rows BEFORE any admission scatter reuses them.
-        Returns ``(results, loop-iterations since the last collect)``."""
+        Returns ``(results, faulted lane rows, loop iterations since
+        the last collect)``; faulted lanes (non-finite fit — frozen by
+        the body with ``fault`` set) are NOT flushed: the engine runs
+        the quarantine ladder on them."""
         if self.state is None:
-            return [], 0
+            return [], [], 0
         active = np.asarray(self.state["active"])
+        fault = np.asarray(self.state["fault"])
         rows = [r for r in range(self.width)
-                if self.order[r] >= 0 and not active[r]]
+                if self.order[r] >= 0 and not active[r] and not fault[r]]
+        faulted = [r for r in range(self.width)
+                   if self.order[r] >= 0 and fault[r]]
         out = []
         if rows:
             idx = jnp.asarray(np.asarray(rows))
@@ -199,15 +270,31 @@ class _LanePool:
                 # request it ever served (StreamResult carries it on)
                 sc = self.eng._requests.pop(req_idx)
                 raw = {k: sub[k][j] for k in wr._OUT_KEYS}
+                reason = self.eng._degraded.pop(req_idx, "")
                 out.append(StreamResult(
                     index=req_idx, scenario=sc,
                     result=wr.result_from_row(sub, j, sc),
                     pool=self.pool_id, lane=int(self.lane_ids[r]),
-                    gen=int(self.gen[r]), raw=raw))
+                    gen=int(self.gen[r]), raw=raw,
+                    degraded=bool(reason), reason=reason))
                 self.order[r] = -1
         it_new = int(self.it)
         iters, self.it_host = it_new - self.it_host, it_new
-        return out, iters
+        return out, faulted, iters
+
+    def repair(self, lanes: Sequence[int], scrub: bool) -> None:
+        """In-place quarantine repair rung (re-seed; optionally scrub
+        the GP dataset) — the same occupant continues."""
+        self.state = wr.quarantine_lanes(
+            self.state, jnp.asarray(np.asarray(lanes, np.int64)),
+            self.eng.cfg, scrub)
+
+    def retire(self, lanes: Sequence[int]) -> None:
+        """Force-retire lanes with the best-effort degraded answer; the
+        next collect flushes them as ordinary retirements."""
+        self.state = wr.retire_lanes(
+            self.state, self.run_data,
+            jnp.asarray(np.asarray(lanes, np.int64)))
 
     def shrink(self) -> None:
         """Drain-mode compaction: once the feed is exhausted, gather the
@@ -253,6 +340,29 @@ class StreamingBayesSplitEdge:
     ``time_scale``) paces admission against the wall clock for
     queue-depth/soak studies; without it the feed is purely
     order-driven and fully deterministic.
+
+    Fault tolerance (all off by default — a default-constructed server
+    is bitwise the pre-fault-tolerance engine):
+
+    * ``ckpt_dir`` + ``ckpt_every`` — snapshot the serving state every
+      k-th round (atomic commits; ``ckpt_keep`` most recent retained);
+      ``StreamingBayesSplitEdge.resume(ckpt_dir, requests)`` rebuilds
+      the server from the latest commit. ``checkpoint_now()`` forces a
+      snapshot (the SIGTERM drain hook).
+    * ``quarantine`` — the divergence ladder: ``"requeue"`` re-admits a
+      faulted request as a fresh run first (``max_requeues`` times),
+      then the in-place repair rungs; ``"repair"`` goes straight to
+      re-seed -> scrub -> degraded retirement.
+    * ``admission_policy`` — ``"fifo"`` (default), ``"edf"``, or a
+      callable (``sharding.admission_order``).
+    * ``shed_hopeless`` — preempt in-flight lanes and shed queued
+      requests whose deadlines are unmeetable (EWMA-estimated remaining
+      work, scaled by ``shed_safety``), emitting degraded results.
+    * ``chaos`` — a ``runtime.chaos.FaultInjector`` driven by the serve
+      loop (tests/benchmarks only).
+    * ``heartbeat_timeout_s`` — arm a ``HeartbeatMonitor`` over the
+      pools; a pool silent for this long is declared dead and its
+      in-flight requests re-enter the queue.
     """
 
     name = "Streaming-Bayes-Split-Edge"
@@ -272,13 +382,29 @@ class StreamingBayesSplitEdge:
                  weights: AcqWeights = AcqWeights(),
                  gp_cfg: gpm.GPConfig = gpm.GPConfig(), grid_n: int = 64,
                  constraint_aware: bool = True, use_grad_term: bool = True,
-                 use_schedules: bool = True, warm_start: bool = True):
+                 use_schedules: bool = True, warm_start: bool = True,
+                 admission_policy="fifo",
+                 shed_hopeless: bool = False, shed_safety: float = 1.0,
+                 quarantine: str = "requeue", max_requeues: int = 1,
+                 fault_on_divergence: bool = False,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
+                 ckpt_keep: int = 3, chaos=None,
+                 heartbeat_timeout_s: Optional[float] = None):
         if n_lanes < 1 or n_shards < 1 or n_lanes % n_shards:
             raise ValueError("n_lanes must split evenly over n_shards")
         width = n_lanes // n_shards
         if wr._next_pow2(width) != width:
             raise ValueError(f"per-shard lane count {width} must be a "
                              f"power of 2")
+        if (not callable(admission_policy)
+                and admission_policy not in ADMISSION_POLICIES):
+            raise ValueError(f"unknown admission policy "
+                             f"{admission_policy!r}")
+        if quarantine not in QUARANTINE_POLICIES:
+            raise ValueError(f"unknown quarantine policy {quarantine!r} "
+                             f"(one of {QUARANTINE_POLICIES})")
+        if ckpt_every and not ckpt_dir:
+            raise ValueError("ckpt_every needs a ckpt_dir")
         if l_pad is None or budget_max is None:
             if not hasattr(requests, "__len__"):
                 raise ValueError(
@@ -325,7 +451,8 @@ class StreamingBayesSplitEdge:
             budget_max=max(budget_max, n_init), l_pad=l_pad,
             constraint_aware=constraint_aware,
             gp_feasible_only=constraint_aware,
-            use_schedules=use_schedules, warm_start=warm_start, gp=gp_cfg)
+            use_schedules=use_schedules, warm_start=warm_start, gp=gp_cfg,
+            fault_on_divergence=fault_on_divergence)
         self._pools = [
             _LanePool(i, width, self,
                       None if self.devices is None
@@ -337,6 +464,36 @@ class StreamingBayesSplitEdge:
         self._feed_done = False
         self._served = False
         self._stats: dict = {}
+        # fault tolerance ----------------------------------------------------
+        self.admission_policy = admission_policy
+        self.shed_hopeless = bool(shed_hopeless)
+        self.shed_safety = float(shed_safety)
+        self.quarantine = quarantine
+        self.max_requeues = int(max_requeues)
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = int(ckpt_every)
+        self.ckpt_keep = int(ckpt_keep)
+        self.chaos = chaos
+        self.monitor = (None if heartbeat_timeout_s is None else
+                        HeartbeatMonitor(
+                            n_shards, dead_timeout_s=heartbeat_timeout_s))
+        # the quarantine ladder: one rung per fault of the same request
+        self._rungs = ((("requeue",) * self.max_requeues
+                        if quarantine == "requeue" else ())
+                       + ("reseed", "scrub", "retire"))
+        self._qlevel: dict = {}     # arrival index -> faults seen so far
+        self._degraded: dict = {}   # arrival index -> DEGRADED_REASONS entry
+        self._emitted: set = set()  # emission watermark (resume dedup)
+        self._pending: deque = deque()
+        self._round = 0
+        self._rr = 0
+        self._ewma_iter_s: Optional[float] = None
+        self._restore: Optional[dict] = None
+        self._n_evals_total = 0
+        self._counters = dict(
+            n_faults=0, n_requeued=0, n_preempted=0, n_shed=0,
+            n_degraded=0, n_pool_drops=0, n_checkpoints=0,
+            deadline_total=0, deadline_hits=0)
 
     # -- feed ----------------------------------------------------------------
     def _validate(self, sc: Scenario) -> Scenario:
@@ -401,72 +558,427 @@ class StreamingBayesSplitEdge:
                     sc, self.l_pad, self.n_init, self.constraint_aware,
                     self.grid_np[:1])
 
+    # -- fault handling ------------------------------------------------------
+    def _handle_fault(self, pool: _LanePool, lane: int,
+                      pending: deque) -> None:
+        """Run one rung of the quarantine ladder on a faulted lane. The
+        rung index is the request's fault count so far, so a request
+        that keeps diverging walks requeue^k -> re-seed -> scrub ->
+        degraded retirement and can never wedge the pool."""
+        idx = int(pool.order[lane])
+        self._counters["n_faults"] += 1
+        level = self._qlevel.get(idx, 0)
+        self._qlevel[idx] = level + 1
+        action = self._rungs[min(level, len(self._rungs) - 1)]
+        if action == "requeue":
+            # free the lane (the admission scatter fully re-initializes
+            # it) and re-run the request from scratch — a clean cold
+            # run, so recovery replay-matches the fault-free schedule
+            self._counters["n_requeued"] += 1
+            pool.order[lane] = -1
+            pending.append((idx, self._requests[idx]))
+        elif action == "reseed":
+            pool.repair([lane], scrub=False)
+        elif action == "scrub":
+            pool.repair([lane], scrub=True)
+        else:
+            self._degraded.setdefault(idx, "quarantine")
+            pool.retire([lane])
+
+    def _drop_pool(self, pool_id: int, reason: str = "") -> None:
+        """Pool loss: mark the pool dead and re-enqueue its in-flight
+        requests (bounded re-execution — one re-run per drop event);
+        they re-admit onto surviving pools on the next round."""
+        p = self._pools[pool_id]
+        if p.dead:
+            return
+        p.dead = True
+        self._counters["n_pool_drops"] += 1
+        for r in range(p.width):
+            idx = int(p.order[r])
+            if idx >= 0:
+                # a fresh full run supersedes any degraded verdict
+                self._degraded.pop(idx, None)
+                self._pending.append((idx, self._requests[idx]))
+                p.order[r] = -1
+
+    # -- deadlines -----------------------------------------------------------
+    def _now_trace(self, now_wall: float) -> float:
+        return now_wall / self.time_scale if self.time_scale > 0 else 0.0
+
+    def _hopeless(self, sc: Scenario, now_trace: float,
+                  remaining_evals: Optional[int] = None) -> bool:
+        """Deadline triage: already past it, or the EWMA-estimated
+        remaining work (queued requests: the full post-init loop)
+        cannot land before it."""
+        d = sc.deadline_s
+        if d is None:
+            return False
+        if now_trace >= d:
+            return True
+        ew = self._ewma_iter_s
+        if ew is None:
+            return False
+        rem = (max(1, sc.budget - self.n_init)
+               if remaining_evals is None else max(1, remaining_evals))
+        est = self.shed_safety * rem * self._now_trace(ew)
+        return now_trace + est > d
+
+    def _shed_result(self, idx: int, sc: Scenario,
+                     now_trace: float) -> StreamResult:
+        """Degraded answer for a request shed from the queue: the
+        feasible projection of the search-space center, evaluated
+        host-side (no lane was ever consumed)."""
+        a = sc.problem.project_feasible(np.array([0.5, 0.5]))
+        feas = sc.problem.feasible(a)
+        u = float(sc.problem.evaluate(a, record=False))
+        acc = float(sc.problem._accuracy(*sc.problem.denormalize(a))[1])
+        res = BOResult(
+            np.asarray(a, np.float64) if feas else None,
+            u if feas else -np.inf, acc if feas else 0.0,
+            0, [], [], [], [])
+        self._requests.pop(idx, None)
+        self._staged.pop(idx, None)
+        return StreamResult(index=idx, scenario=sc, result=res,
+                            pool=-1, lane=-1, gen=-1, raw={},
+                            degraded=True, reason="shed",
+                            emit_s=now_trace)
+
+    def _preempt(self, now_trace: float) -> None:
+        """Retire in-flight lanes whose deadlines are unmeetable; the
+        next flush emits their best-effort incumbents as degraded
+        results, and the lanes free for requests that can still win."""
+        if self._ewma_iter_s is None:
+            return
+        for p in self._pools:
+            if p.dead or p.state is None:
+                continue
+            active = np.asarray(p.state["active"])
+            n = np.asarray(p.state["n"])
+            doomed = []
+            for r in range(p.width):
+                idx = int(p.order[r])
+                if idx < 0 or not active[r]:
+                    continue
+                sc = self._requests.get(idx)
+                if sc is None or sc.deadline_s is None:
+                    continue
+                rem = int(sc.budget - n[r])
+                if rem > 0 and self._hopeless(sc, now_trace, rem):
+                    doomed.append(r)
+                    self._degraded.setdefault(idx, "preempted")
+            if doomed:
+                self._counters["n_preempted"] += len(doomed)
+                p.retire(doomed)
+
+    # -- checkpoint / restore ------------------------------------------------
+    def _meta(self) -> dict:
+        return dict(
+            n_lanes=self.n_lanes, n_shards=self.n_shards,
+            l_pad=self.l_pad, budget_max=self.budget_max,
+            n_init=self.n_init, time_scale=self.time_scale,
+            quarantine=self.quarantine, max_requeues=self.max_requeues,
+            policy=(self.admission_policy
+                    if isinstance(self.admission_policy, str)
+                    else "custom"),
+            round=self._round)
+
+    def _ckpt_tree(self) -> dict:
+        pools = {}
+        for p in self._pools:
+            pt = dict(order=p.order.copy(), gen=p.gen.copy(),
+                      lane_ids=p.lane_ids.copy(),
+                      it=np.int64(p.it_host), dead=np.int8(p.dead),
+                      has_state=np.int8(p.state is not None))
+            if p.state is not None:
+                pt["state"] = jax.tree.map(np.asarray, p.state)
+                pt["run_data"] = jax.tree.map(np.asarray, p.run_data)
+            pools[str(p.pool_id)] = pt
+        ql = sorted(self._qlevel)
+        dg = sorted(self._degraded)
+        queue = dict(
+            pending=np.asarray([i for i, _ in self._pending], np.int64),
+            emitted=np.asarray(sorted(self._emitted), np.int64),
+            n_pulled=np.int64(self._n_pulled),
+            rr=np.int64(self._rr),
+            qlevel_idx=np.asarray(ql, np.int64),
+            qlevel_n=np.asarray([self._qlevel[i] for i in ql], np.int64),
+            degraded_idx=np.asarray(dg, np.int64),
+            degraded_code=np.asarray(
+                [DEGRADED_REASONS.index(self._degraded[i]) for i in dg],
+                np.int64))
+        return dict(pools=pools, queue=queue)
+
+    def checkpoint_now(self) -> int:
+        """Force a snapshot of the full serving state (pool pytrees +
+        host lane maps + admission queue + emitted watermark) — the
+        SIGTERM/drain hook. Returns the checkpoint step (the current
+        serving round). Atomic: a crash mid-save leaves the previous
+        commit intact (``checkpoint/ckpt.py``)."""
+        if not self.ckpt_dir:
+            raise ValueError("no ckpt_dir configured")
+        ckptlib.save(self.ckpt_dir, self._round, self._ckpt_tree(),
+                     metadata=dict(stream=self._meta()), blocking=True)
+        self._counters["n_checkpoints"] += 1
+        self._gc_ckpts()
+        return self._round
+
+    def _gc_ckpts(self) -> None:
+        import os
+        import shutil
+        steps = sorted(
+            int(d.split("_")[1]) for d in os.listdir(self.ckpt_dir)
+            if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[:-self.ckpt_keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def _maybe_checkpoint(self) -> None:
+        if (self.ckpt_dir and self.ckpt_every
+                and self._round % self.ckpt_every == 0):
+            self.checkpoint_now()
+
+    @classmethod
+    def resume(cls, ckpt_dir: str, requests: Iterable[Scenario],
+               step: Optional[int] = None,
+               **kw) -> "StreamingBayesSplitEdge":
+        """Rebuild a server from its latest (or given) committed
+        checkpoint. ``requests`` must replay the SAME feed the crashed
+        server consumed (feeds are replayable by construction — traces
+        and seeded generators); the consumed prefix is replayed to
+        recover in-flight/queued Scenarios, and serving continues from
+        the snapshot. Static server shapes in ``kw`` must match the
+        checkpoint (``ValueError`` otherwise — restoring onto a
+        different ``n_shards`` is not supported); unspecified ones are
+        taken from it. Emission is at-least-once across the crash:
+        results emitted after the snapshot re-emit —
+        :func:`dedup_results` restores exactly-once."""
+        if step is None:
+            step = ckptlib.latest_step(ckpt_dir)
+            if step is None:
+                raise FileNotFoundError(
+                    f"no committed checkpoint under {ckpt_dir}")
+        man = ckptlib.load_manifest(ckpt_dir, step)
+        meta = man.get("metadata", {}).get("stream")
+        if meta is None:
+            raise ValueError(f"{ckpt_dir} step {step} is not a "
+                             f"streaming-engine checkpoint")
+        static = ("n_lanes", "n_shards", "l_pad", "budget_max", "n_init")
+        bad = {k: (kw[k], meta[k]) for k in static
+               if k in kw and kw[k] != meta[k]}
+        if bad:
+            raise ValueError(
+                "checkpoint/engine config mismatch — the serving state "
+                "is bound to its static shapes: "
+                + ", ".join(f"{k}: given {g} vs checkpointed {c}"
+                            for k, (g, c) in bad.items()))
+        for k in static:
+            kw.setdefault(k, meta[k])
+        kw.setdefault("time_scale", meta["time_scale"])
+        kw.setdefault("quarantine", meta["quarantine"])
+        kw.setdefault("max_requeues", meta["max_requeues"])
+        kw.setdefault("ckpt_dir", ckpt_dir)
+        eng = cls(requests, **kw)
+        eng._install(ckptlib.load_flat(ckpt_dir, step))
+        eng._round = int(meta["round"])
+        return eng
+
+    def _install(self, flat: dict) -> None:
+        t = ckptlib.unflatten(flat)
+        for p in self._pools:
+            pt = t["pools"][str(p.pool_id)]
+            p.order = np.asarray(pt["order"], np.int64)
+            p.gen = np.asarray(pt["gen"], np.int64)
+            p.lane_ids = np.asarray(pt["lane_ids"], np.int64)
+            p.width = int(p.order.shape[0])
+            p.dead = bool(pt["dead"])
+            it = int(pt["it"])
+            p.it, p.it_host = jnp.int32(it), it
+            if int(pt["has_state"]):
+                put = ((lambda x: jax.device_put(np.asarray(x), p.device))
+                       if p.device is not None else jnp.asarray)
+                p.state = jax.tree.map(put, pt["state"])
+                p.run_data = jax.tree.map(put, pt["run_data"])
+        q = t["queue"]
+        self._emitted = set(int(i) for i in q["emitted"])
+        self._qlevel = {int(i): int(n) for i, n in
+                        zip(q["qlevel_idx"], q["qlevel_n"])}
+        self._degraded = {int(i): DEGRADED_REASONS[int(c)] for i, c in
+                          zip(q["degraded_idx"], q["degraded_code"])}
+        self._restore = dict(
+            pending=[int(i) for i in q["pending"]],
+            n_pulled=int(q["n_pulled"]), rr=int(q["rr"]))
+
+    def _replay_feed(self, pending: deque) -> None:
+        """Re-derive the host Scenario table from the feed: pull the
+        checkpointed number of requests and keep the ones still live
+        (queued, in-flight, or retired-but-unflushed)."""
+        info, self._restore = self._restore, None
+        needed = set(info["pending"]) | set(self._degraded)
+        for p in self._pools:
+            needed.update(int(i) for i in p.order if i >= 0)
+        for j in range(info["n_pulled"]):
+            try:
+                sc = next(self._feed)
+            except StopIteration:
+                raise ValueError(
+                    "resume feed is shorter than the checkpointed pull "
+                    "count — resume() must replay the same feed")
+            if j in needed:
+                self._requests[j] = self._validate(sc)
+        self._n_pulled = info["n_pulled"]
+        self._rr = info["rr"]
+        for i in info["pending"]:
+            pending.append((i, self._requests[i]))
+
     # -- the server loop -----------------------------------------------------
     def serve(self) -> Iterator[StreamResult]:
         if self._served:
             raise RuntimeError("serve() already consumed this engine's "
                                "feed — build a new engine to replay")
         self._served = True
-        pending: deque = deque()
+        pending = self._pending
+        if self._restore is not None:
+            self._replay_feed(pending)
         # per-dispatch traces are bounded so an unbounded feed doesn't
         # grow host memory; the aggregate stats accumulate separately
         lane_log: deque = deque(maxlen=self.STATS_TRACE_CAP)
         queue_depth: deque = deque(maxlen=self.STATS_TRACE_CAP)
-        n_results = n_dispatches = slots_total = 0
+        n_results = n_dispatches = slots_total = n_flushed = 0
         qd_sum = qd_n = qd_max = 0
-        rr = 0
         t0 = time.monotonic()
+        c = self._counters
 
-        self._n_evals_total = 0
+        def emit(res):
+            nonlocal n_results
+            n_results += 1
+            self._n_evals_total += res.result.n_evals
+            self._emitted.add(res.index)
+            if res.degraded:
+                c["n_degraded"] += 1
+            if res.scenario.deadline_s is not None:
+                c["deadline_total"] += 1
+                if (not res.degraded
+                        and res.emit_s <= res.scenario.deadline_s):
+                    c["deadline_hits"] += 1
+            if self.on_result is not None:
+                self.on_result(res)
 
         def flush(pool, entry=None):
-            nonlocal n_results, n_dispatches, slots_total
-            flushed, iters = pool.collect()
+            nonlocal n_dispatches, slots_total, n_flushed
+            flushed, faulted, iters = pool.collect()
             if entry is not None:
                 entry["iters"] = iters
+                wall = time.monotonic() - entry.pop("t0")
+                entry["wall_s"] = wall
+                if iters > 0:
+                    x = wall / iters
+                    self._ewma_iter_s = (
+                        x if self._ewma_iter_s is None
+                        else 0.3 * x + 0.7 * self._ewma_iter_s)
                 lane_log.append(entry)
                 n_dispatches += 1
                 slots_total += entry["lanes"] * iters
+            for lane in faulted:
+                self._handle_fault(pool, lane, pending)
+            now_trace = self._now_trace(time.monotonic() - t0)
             for res in flushed:
-                n_results += 1
-                self._n_evals_total += res.result.n_evals
-                if self.on_result is not None:
-                    self.on_result(res)
+                res.emit_s = now_trace
+                n_flushed += 1
+                emit(res)
                 yield res
 
         while True:
+            self._round += 1
             now = time.monotonic() - t0
+            # snapshot FIRST: a crash anywhere in the round (chaos's
+            # kill model) resumes from a commit no older than one round
+            self._maybe_checkpoint()
+            if self.monitor is not None:
+                for p in self._pools:
+                    if not p.dead and not p.muted:
+                        self.monitor.report(p.pool_id, 0.0)
+                for h in self.monitor.dead():
+                    self._drop_pool(h, reason="heartbeat-timeout")
+            else:
+                # a muted pool can only ever be detected by the
+                # monitor; without one, drop it immediately
+                for p in self._pools:
+                    if p.muted and not p.dead:
+                        self._drop_pool(p.pool_id, reason="muted")
             self._pull(pending, now)
-            # head-of-line admission into the emptiest shard (ties
+            if self.shed_hopeless and pending:
+                # triage BEFORE admission: a request that cannot make
+                # its deadline must not take a lane from one that can
+                now_trace = self._now_trace(time.monotonic() - t0)
+                keep = deque()
+                for idx, sc in pending:
+                    if self._hopeless(sc, now_trace):
+                        c["n_shed"] += 1
+                        res = self._shed_result(idx, sc, now_trace)
+                        emit(res)
+                        yield res
+                    else:
+                        keep.append((idx, sc))
+                pending = self._pending = keep
+            # policy-ordered admission into the emptiest shard (ties
             # round-robin) — requests bind to exactly one pool, so the
             # multi-pool path stays collective-free
             fills: dict = {i: [] for i in range(self.n_shards)}
-            while pending:
-                free = [p.free_count() - len(fills[p.pool_id])
-                        for p in self._pools]
-                shard = next_admission_shard(free, rr)
-                if shard is None:
-                    break
-                rr = (shard + 1) % self.n_shards
-                fills[shard].append(pending.popleft())
+            if pending:
+                queue = list(pending)
+                sel = admission_order(queue, self._now_trace(now),
+                                      self.admission_policy)
+                taken = set()
+                for j in sel:
+                    free = [p.free_count() - len(fills[p.pool_id])
+                            for p in self._pools]
+                    shard = next_admission_shard(free, self._rr)
+                    if shard is None:
+                        break
+                    self._rr = (shard + 1) % self.n_shards
+                    fills[shard].append(queue[j])
+                    taken.add(j)
+                if taken:
+                    pending = self._pending = deque(
+                        q for k, q in enumerate(queue) if k not in taken)
             for i, reqs in fills.items():
                 if reqs:
                     self._pools[i].admit(reqs)
+            if pending and all(p.dead for p in self._pools):
+                raise RuntimeError(
+                    "all lane pools lost — cannot serve the queue")
+            # inject AFTER admission so poison/drop faults see the
+            # round's in-flight lanes; the kill model still crashes
+            # between the round's checkpoint and its dispatches (the
+            # admissions above are device-state only — the snapshot
+            # keeps those requests pending, so resume re-admits them)
+            if self.chaos is not None:
+                self.chaos.inject(self)     # may raise SimulatedCrash
+            if self.shed_hopeless:
+                self._preempt(self._now_trace(time.monotonic() - t0))
             queue_depth.append(len(pending))
             qd_sum += len(pending)
             qd_n += 1
             qd_max = max(qd_max, len(pending))
             # lanes whose budget <= n_init retire at the init design —
-            # flush them before (possibly instead of) any dispatch
+            # flush them (plus preempted/quarantine-retired lanes)
+            # before (possibly instead of) any dispatch
             for p in self._pools:
                 yield from flush(p)
             draining = self._feed_done and not pending
             dispatched = []
             for p in self._pools:
+                if p.dead or p.muted:
+                    continue
                 if p.live_count() > 0:
+                    if self.chaos is not None:
+                        self.chaos.on_dispatch(self, p)
+                    t_d = time.monotonic()
                     entry = p.dispatch(draining=draining)
                     if entry is not None:
                         entry["queue_depth"] = len(pending)
+                        entry["t0"] = t_d
                         dispatched.append((p, entry))
             # the device phases are in flight: overlap the host-side
             # pull + staging of the queue with them
@@ -475,9 +987,16 @@ class StreamingBayesSplitEdge:
             for p, entry in dispatched:
                 yield from flush(p, entry)
             if not dispatched:
-                if self._feed_done and not pending:
+                inflight = any(
+                    bool(np.any(p.order >= 0)) for p in self._pools
+                    if not p.dead)
+                if self._feed_done and not pending and not inflight:
                     break
-                if not pending and self.arrivals is not None:
+                if inflight:
+                    # only unreachable (muted) pools hold work — wait
+                    # for the heartbeat verdict instead of busy-spinning
+                    time.sleep(0.005)
+                elif not pending and self.arrivals is not None:
                     # idle server: sleep until the next arrival
                     t_next = (self.arrivals[self._n_pulled]
                               * self.time_scale
@@ -490,14 +1009,15 @@ class StreamingBayesSplitEdge:
                 # drain mode: no admissions left — shrink pools so the
                 # tail doesn't pay for freed lanes
                 for p in self._pools:
-                    p.shrink()
+                    if not p.dead:
+                        p.shrink()
 
         wall = time.monotonic() - t0
         # loop evals from the flushed results themselves (every retired
         # request's post-init evaluations): lane_log's per-dispatch
         # `live` is the ENTRY count, which overcounts draining
         # dispatches where lanes retire mid-phase
-        evals = self._n_evals_total - self.n_init * n_results
+        evals = self._n_evals_total - self.n_init * n_flushed
         self._stats = dict(
             n_results=n_results, n_dispatches=n_dispatches,
             lane_slots=slots_total, loop_evals=evals,
@@ -506,19 +1026,28 @@ class StreamingBayesSplitEdge:
             queue_depth_max=qd_max,
             wall_s=wall,
             arrivals_per_s=(n_results / wall if wall > 0 else 0.0),
+            rounds=self._round,
+            deadline_hit_rate=(
+                c["deadline_hits"] / c["deadline_total"]
+                if c["deadline_total"] else 1.0),
+            **dict(c),
             # bounded traces (the STATS_TRACE_CAP most recent entries)
             lane_log=list(lane_log), queue_depth=list(queue_depth))
 
     def run(self) -> List[BOResult]:
-        """Drain the whole feed; results in arrival order."""
+        """Drain the whole feed; results in arrival order (the newly
+        emitted indices — a resumed server returns what IT emitted;
+        merge with the pre-crash emissions via ``dedup_results``)."""
         out = {}
         for r in self.serve():
             out[r.index] = r.result
-        return [out[i] for i in range(len(out))]
+        return [out[i] for i in sorted(out)]
 
     def stream_stats(self) -> dict:
         """Serving-loop accounting of the last ``serve``/``run``:
         dispatch count, lane-slot occupancy (live-lane evals over
         computed lane slots), queue-depth trajectory and arrival
-        throughput, plus the per-dispatch lane log."""
+        throughput, the per-dispatch lane log, plus the fault-tolerance
+        counters (faults, requeues, preemptions, sheds, pool drops,
+        checkpoints, deadline hit rate)."""
         return dict(self._stats)

@@ -91,13 +91,22 @@ def replay_arrivals(n: int, frame_period_s: float = 0.02) -> np.ndarray:
 
 def arrival_trace(kind: str = "poisson", n: int = 100, seed: int = 0,
                   budgets=(6, 10, 14, 20), archs=("vgg19", "resnet101"),
-                  fading_std_db: float = 2.5, **kw) -> dict:
+                  fading_std_db: float = 2.5, deadline_slack=None,
+                  **kw) -> dict:
     """One replayable arrival trace: ``kind`` picks the arrival process
     (``poisson``/``bursty``/``replay``), every arrival draws its channel
     state from the seeded mMobile-like gain trace (``gain_offset_db`` =
     frame gain minus the trace mean, i.e. the fading excursion around
     the calibrated operating point), its budget and backbone from the
-    given mixes, and its init seed from the arrival index."""
+    given mixes, and its init seed from the arrival index.
+
+    ``deadline_slack`` (optional ``(lo_s, hi_s)``) gives every arrival
+    an absolute completion deadline ``deadline_s[i] = t[i] + slack_i``
+    with per-request slack drawn uniformly from the range — the
+    replayable input of the deadline-hit-rate benchmark (EDF admission
+    + hopeless-lane shedding vs FIFO). The field JSON round-trips like
+    every other column; traces without it decode to deadline-free
+    requests."""
     if kind == "poisson":
         t = poisson_arrivals(n, seed=seed, **kw)
     elif kind == "bursty":
@@ -110,7 +119,7 @@ def arrival_trace(kind: str = "poisson", n: int = 100, seed: int = 0,
     gains = synth_mmobile_trace(seed=seed, n_frames=max(n, 450),
                                 fading_std_db=fading_std_db)
     rng = np.random.default_rng(seed + 1)
-    return dict(
+    out = dict(
         kind=kind, seed=seed, n=n,
         t=[float(v) for v in t],
         gain_offset_db=[float(gains[i % len(gains)] - gains.mean())
@@ -120,6 +129,12 @@ def arrival_trace(kind: str = "poisson", n: int = 100, seed: int = 0,
         arch=[str(archs[i]) for i in rng.integers(0, len(archs), size=n)],
         init_seed=list(range(n)),
     )
+    if deadline_slack is not None:
+        lo, hi = deadline_slack
+        slack = rng.uniform(lo, hi, size=n)
+        out["deadline_s"] = [float(ti + si)
+                             for ti, si in zip(out["t"], slack)]
+    return out
 
 
 def save_trace(trace: dict, path: str) -> None:

@@ -1,0 +1,297 @@
+"""Fault-injected streaming: the crash-safety / quarantine / deadline /
+pool-loss invariants of the serving engine, driven by the deterministic
+``runtime.chaos.FaultInjector``.
+
+The recovery contract mirrors the established streaming-equivalence
+contract: recovery from any injected fault class replay-matches the
+fault-free run **bitwise under cold fits** (re-runs and re-admissions
+are pure re-scheduling) and within the studied warm tolerance under
+warm starts; emission across a crash is at-least-once and exactly-once
+after :func:`stream.dedup_results`; and no fault class may wedge the
+server — every admitted request emits exactly one (possibly degraded)
+result.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.batch_bo import scenario_from_request
+from repro.runtime.chaos import FaultInjector, SimulatedCrash
+from repro.runtime.stream import (StreamingBayesSplitEdge, dedup_results,
+                                  requests_from_trace)
+from repro.wireless.traces import arrival_trace, save_trace
+
+
+def _reqs(n=8, budgets=(6, 8, 10)):
+    return [scenario_from_request("vgg19", (-1) ** i * 1.5,
+                                  budgets[i % len(budgets)], i)
+            for i in range(n)]
+
+
+def _by_index(results):
+    return {r.index: r for r in results}
+
+
+def _assert_match(got, ref, bitwise=True, tol=0.5):
+    assert sorted(got) == sorted(ref), "request set mismatch (wedge?)"
+    for i in ref:
+        a = np.asarray(got[i].result.incumbent_trace)
+        b = np.asarray(ref[i].result.incumbent_trace)
+        if bitwise:
+            assert np.array_equal(
+                np.asarray(got[i].result.utilities),
+                np.asarray(ref[i].result.utilities)), f"request {i}"
+            assert (got[i].result.best_utility
+                    == ref[i].result.best_utility), f"request {i}"
+        else:
+            assert np.max(np.abs(a - b)) <= tol, f"request {i}"
+
+
+# -- checkpoint / restore -----------------------------------------------------
+
+@pytest.mark.parametrize("kill_at", [2, 4])
+def test_kill_resume_replay_match(tmp_path, kill_at):
+    """Kill at a dispatch round, resume from the latest commit: the
+    merged (pre-crash + post-resume) stream, deduped, is bitwise the
+    uninterrupted run (cold fits)."""
+    ref = _by_index(StreamingBayesSplitEdge(
+        _reqs(16), n_lanes=4, warm_start=False).serve())
+    ch = FaultInjector(seed=0, kill_at=[kill_at])
+    eng = StreamingBayesSplitEdge(
+        _reqs(16), n_lanes=4, warm_start=False, chaos=ch,
+        ckpt_dir=str(tmp_path), ckpt_every=1)
+    got = []
+    with pytest.raises(SimulatedCrash):
+        for r in eng.serve():
+            got.append(r)
+    assert ch.events[-1]["kind"] == "kill"
+    resumed = StreamingBayesSplitEdge.resume(
+        str(tmp_path), _reqs(16), warm_start=False)
+    got2 = list(resumed.serve())
+    merged = _by_index(dedup_results(got + got2))
+    _assert_match(merged, ref, bitwise=True)
+
+
+def test_resume_requires_checkpoint(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        StreamingBayesSplitEdge.resume(str(tmp_path / "empty"), _reqs())
+
+
+def test_resume_rejects_static_shape_mismatch(tmp_path):
+    """The serving state is bound to its static shapes: restoring onto
+    a different shard/pool geometry must fail loudly, not corrupt."""
+    eng = StreamingBayesSplitEdge(
+        _reqs(), n_lanes=8, n_shards=2, ckpt_dir=str(tmp_path),
+        ckpt_every=0)
+    list(eng.serve())
+    eng.checkpoint_now()
+    with pytest.raises(ValueError, match="n_shards"):
+        StreamingBayesSplitEdge.resume(str(tmp_path), _reqs(),
+                                       n_shards=1, n_lanes=8)
+
+
+def test_checkpoint_now_and_counters(tmp_path):
+    eng = StreamingBayesSplitEdge(
+        _reqs(4), n_lanes=4, ckpt_dir=str(tmp_path), ckpt_every=2)
+    list(eng.serve())
+    st = eng.stream_stats()
+    assert st["n_checkpoints"] >= 1
+    assert os.path.isdir(str(tmp_path))
+
+
+# -- divergence quarantine ----------------------------------------------------
+
+def test_nan_poison_requeue_cold_bitwise():
+    """A NaN-poisoned lane faults; the request re-runs from scratch
+    (requeue rung) — recovery is a pure re-scheduling, so the cold
+    stream replay-matches the fault-free run bitwise."""
+    ref = _by_index(StreamingBayesSplitEdge(
+        _reqs(10, (14,)), n_lanes=4, warm_start=False).serve())
+    ch = FaultInjector(seed=1, nan_poison_at=[2])
+    eng = StreamingBayesSplitEdge(
+        _reqs(10, (14,)), n_lanes=4, warm_start=False, chaos=ch)
+    got = _by_index(eng.serve())
+    st = eng.stream_stats()
+    assert any(ev["kind"] == "nan_poison" for ev in ch.events)
+    assert st["n_faults"] >= 1 and st["n_requeued"] >= 1
+    assert st["n_degraded"] == 0
+    _assert_match(got, ref, bitwise=True)
+
+
+def test_nan_poison_warm_within_tolerance():
+    ref = _by_index(StreamingBayesSplitEdge(
+        _reqs(10, (14,)), n_lanes=4).serve())
+    ch = FaultInjector(seed=1, nan_poison_at=[2])
+    eng = StreamingBayesSplitEdge(_reqs(10, (14,)), n_lanes=4, chaos=ch)
+    got = _by_index(eng.serve())
+    _assert_match(got, ref, bitwise=False, tol=0.5)
+
+
+def test_repair_ladder_in_place():
+    """quarantine="repair": no requeue — the re-seed rung fails on a
+    still-poisoned dataset, the scrub rung drops the poisoned rows and
+    the same occupant finishes. Every request still emits."""
+    ch = FaultInjector(seed=1, nan_poison_at=[2])
+    eng = StreamingBayesSplitEdge(
+        _reqs(10, (14,)), n_lanes=4, chaos=ch, quarantine="repair")
+    got = _by_index(eng.serve())
+    st = eng.stream_stats()
+    assert sorted(got) == list(range(10))
+    assert st["n_requeued"] == 0
+    assert st["n_faults"] >= 2   # reseed rung re-faults, scrub recovers
+
+
+def test_quarantine_terminal_rung_degrades_not_wedges():
+    """A lane that faults past every repair rung retires with the
+    best-effort degraded answer — the server never wedges."""
+    ch = FaultInjector(seed=1, nan_poison_at=[2])
+    eng = StreamingBayesSplitEdge(
+        _reqs(10, (14,)), n_lanes=4, chaos=ch)
+    eng._rungs = ("retire",)    # force the terminal rung directly
+    got = _by_index(eng.serve())
+    st = eng.stream_stats()
+    assert sorted(got) == list(range(10))
+    deg = [r for r in got.values() if r.degraded]
+    assert len(deg) == 1 and deg[0].reason == "quarantine"
+    assert st["n_degraded"] == 1
+    # the degraded result still carries a usable answer object
+    assert deg[0].result.n_evals >= 0
+
+
+def test_theta_poison_strict_detection():
+    """Hyperparameter-carry poison is only observable as a diverged
+    refit — caught by the opt-in strict detector."""
+    ch = FaultInjector(seed=1, nan_poison_at=[2], poison="theta")
+    eng = StreamingBayesSplitEdge(
+        _reqs(10, (14,)), n_lanes=4, chaos=ch, fault_on_divergence=True)
+    got = _by_index(eng.serve())
+    assert sorted(got) == list(range(10))
+    assert eng.stream_stats()["n_faults"] >= 1
+
+
+# -- pool loss ----------------------------------------------------------------
+
+def test_pool_drop_requeues_onto_survivor():
+    ref = _by_index(StreamingBayesSplitEdge(
+        _reqs(10), n_lanes=8, n_shards=2, warm_start=False).serve())
+    ch = FaultInjector(seed=2, drop_pool_at=[2])
+    eng = StreamingBayesSplitEdge(
+        _reqs(10), n_lanes=8, n_shards=2, warm_start=False, chaos=ch)
+    got = _by_index(eng.serve())
+    st = eng.stream_stats()
+    assert st["n_pool_drops"] == 1
+    assert any(ev["kind"] == "drop_pool" for ev in ch.events)
+    _assert_match(got, ref, bitwise=True)
+
+
+def test_all_pools_lost_raises():
+    ch = FaultInjector(seed=3, drop_pool_at=[2])
+    eng = StreamingBayesSplitEdge(_reqs(10), n_lanes=4, n_shards=1,
+                                  chaos=ch)
+    with pytest.raises(RuntimeError, match="all lane pools lost"):
+        list(eng.serve())
+
+
+def test_heartbeat_detects_muted_pool():
+    """A hung (muted) pool stops heartbeating without freeing lanes;
+    the monitor's timeout declares it dead and its in-flight requests
+    finish on the survivor."""
+    ch = FaultInjector(seed=4, mute_pool_at=[2])
+    eng = StreamingBayesSplitEdge(
+        _reqs(10), n_lanes=8, n_shards=2, chaos=ch,
+        heartbeat_timeout_s=0.3)
+    got = _by_index(eng.serve())
+    st = eng.stream_stats()
+    assert sorted(got) == list(range(10))
+    assert st["n_pool_drops"] == 1
+
+
+# -- deadlines ----------------------------------------------------------------
+
+def test_deadline_free_edf_is_fifo_bitwise():
+    """EDF over a deadline-free feed sorts every request to the same
+    infinite slack — arrival order — so the schedule (and the cold
+    results) are bitwise the FIFO schedule."""
+    a = _by_index(StreamingBayesSplitEdge(
+        _reqs(10), n_lanes=4, warm_start=False,
+        admission_policy="fifo").serve())
+    b = _by_index(StreamingBayesSplitEdge(
+        _reqs(10), n_lanes=4, warm_start=False,
+        admission_policy="edf").serve())
+    _assert_match(b, a, bitwise=True)
+    for i in a:
+        assert a[i].pool == b[i].pool and a[i].lane == b[i].lane
+
+
+def test_hopeless_requests_shed_degraded_exactly_once():
+    """Requests whose deadlines already passed never take a lane: they
+    shed immediately with a degraded (feasible-projection) result —
+    exactly one emission per request, zero dispatches."""
+    reqs = [scenario_from_request("vgg19", 0.0, 8, i, deadline_s=-1.0)
+            for i in range(6)]
+    eng = StreamingBayesSplitEdge(reqs, n_lanes=4, shed_hopeless=True)
+    got = list(eng.serve())
+    st = eng.stream_stats()
+    assert sorted(r.index for r in got) == list(range(6))
+    assert all(r.degraded and r.reason == "shed" for r in got)
+    assert all(r.result.n_evals == 0 for r in got)
+    assert st["n_shed"] == 6 and st["n_dispatches"] == 0
+    assert st["deadline_hit_rate"] == 0.0
+
+
+def test_mixed_deadlines_no_wedge_and_custom_policy():
+    """EDF + shedding over a deadlined bursty trace: every admitted
+    request emits exactly one result; a callable admission policy
+    plugs in unchanged."""
+    tr = arrival_trace("bursty", n=16, seed=0, budgets=(6, 10),
+                       deadline_slack=(0.5, 3.0))
+    eng = StreamingBayesSplitEdge(
+        requests_from_trace(tr), n_lanes=4, arrivals=tr["t"],
+        admission_policy="edf", shed_hopeless=True)
+    got = list(eng.serve())
+    assert sorted(r.index for r in got) == list(range(16))
+    st = eng.stream_stats()
+    assert 0.0 <= st["deadline_hit_rate"] <= 1.0
+    # callable policy: reverse arrival order
+    eng2 = StreamingBayesSplitEdge(
+        _reqs(6), n_lanes=4,
+        admission_policy=lambda pending, now: list(
+            range(len(pending)))[::-1])
+    got2 = list(eng2.serve())
+    assert sorted(r.index for r in got2) == list(range(6))
+
+
+# -- soak: seeded fault matrix ------------------------------------------------
+
+@pytest.mark.soak
+def test_soak_chaos_matrix(tmp_path):
+    """One full fault schedule (poison + pool drop + kill/resume) on a
+    deadlined bursty trace, seeded by CHAOS_SEED (the CI chaos job's
+    matrix). Invariant: exactly-once post-dedup emission of every
+    request. On failure the injector event log and the arrival trace
+    are the replay artifacts."""
+    seed = int(os.environ.get("CHAOS_SEED", "0"))
+    art_dir = os.environ.get("SOAK_ARTIFACT_DIR", str(tmp_path))
+    tr = arrival_trace("bursty", n=40, seed=seed, budgets=(6, 10, 14),
+                       deadline_slack=(1.0, 6.0))
+    save_trace(tr, os.path.join(art_dir, "chaos_trace.json"))
+    ch = FaultInjector(seed=seed, nan_poison_at=[3],
+                       drop_pool_at=[5], kill_at=[7])
+    eng = StreamingBayesSplitEdge(
+        requests_from_trace(tr), n_lanes=8, n_shards=2,
+        admission_policy="edf", shed_hopeless=True, chaos=ch,
+        ckpt_dir=str(tmp_path / "ckpt"), ckpt_every=2)
+    got = []
+    try:
+        for r in eng.serve():
+            got.append(r)
+    except SimulatedCrash:
+        resumed = StreamingBayesSplitEdge.resume(
+            str(tmp_path / "ckpt"), requests_from_trace(tr),
+            admission_policy="edf", shed_hopeless=True)
+        got += list(resumed.serve())
+    finally:
+        ch.save_events(os.path.join(art_dir, "chaos_events.json"))
+    merged = dedup_results(got)
+    assert sorted(r.index for r in merged) == list(range(40))

@@ -1,0 +1,124 @@
+"""Checkpoint library coverage for the serving-state paths: flat
+(template-free) round-trips of mixed-dtype pool pytrees, the
+SIGTERM/drain force-save hook, and manifest-metadata validation — the
+mechanism ``StreamingBayesSplitEdge.resume`` uses to reject a
+checkpoint whose static shapes don't match the new server BEFORE
+loading any arrays."""
+import os
+import signal
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, latest_step, load_flat,
+                              load_manifest, save, unflatten)
+from repro.core.batch_bo import scenario_from_request
+from repro.runtime.stream import StreamingBayesSplitEdge
+
+
+def _pool_tree():
+    """A serving-shaped tree: device pytrees of mixed dtypes next to
+    host-side numpy lane maps (int64) and python-int scalars, two pools
+    deep — the exact shape ``_ckpt_tree`` emits."""
+    return {
+        "pools": {
+            "0": {
+                "order": np.array([3, -1, 5, 0], np.int64),
+                "gen": np.array([1, 0, 2, 1], np.int64),
+                "it": 7,
+                "state": {
+                    "x": jnp.ones((4, 16, 2), jnp.float32) * 0.25,
+                    "n": jnp.array([3, 0, 5, 9], jnp.int32),
+                    "active": jnp.array([True, False, True, True]),
+                    "fault": jnp.zeros(4, bool),
+                },
+            },
+            "1": {
+                "order": np.array([-1, -1], np.int64),
+                "gen": np.zeros(2, np.int64),
+                "it": 0,
+                "state": {
+                    "x": jnp.zeros((2, 16, 2), jnp.float32),
+                    "n": jnp.zeros(2, jnp.int32),
+                    "active": jnp.zeros(2, bool),
+                    "fault": jnp.zeros(2, bool),
+                },
+            },
+        },
+        "queue": {"pending": np.array([7, 8], np.int64),
+                  "n_pulled": 9},
+    }
+
+
+def test_flat_roundtrip_mixed_dtypes(tmp_path):
+    t = _pool_tree()
+    save(str(tmp_path), 3, t, metadata=dict(stream=dict(n_shards=2)))
+    flat = load_flat(str(tmp_path), 3)
+    tree = unflatten(flat)
+    for pid in ("0", "1"):
+        src, got = t["pools"][pid], tree["pools"][pid]
+        assert got["order"].dtype == np.int64
+        np.testing.assert_array_equal(got["order"], src["order"])
+        np.testing.assert_array_equal(got["gen"], src["gen"])
+        assert int(got["it"]) == src["it"]
+        for k, v in src["state"].items():
+            assert got["state"][k].dtype == np.asarray(v).dtype, k
+            np.testing.assert_array_equal(got["state"][k],
+                                          np.asarray(v), err_msg=k)
+    np.testing.assert_array_equal(tree["queue"]["pending"],
+                                  t["queue"]["pending"])
+    assert int(tree["queue"]["n_pulled"]) == 9
+
+
+def test_manifest_carries_stream_metadata(tmp_path):
+    """resume() validates static shapes from the manifest alone — the
+    metadata must round-trip without touching arrays.npz."""
+    save(str(tmp_path), 5, _pool_tree(),
+         metadata=dict(stream=dict(n_shards=2, n_lanes=6, l_pad=16)))
+    man = load_manifest(str(tmp_path), 5)
+    assert man["metadata"]["stream"] == dict(n_shards=2, n_lanes=6,
+                                             l_pad=16)
+    assert man["keys"]["pools/0/state/x"]["shape"] == [4, 16, 2]
+    assert man["keys"]["pools/0/order"]["dtype"] == "int64"
+
+
+def test_sigterm_force_save(tmp_path):
+    """The preemption path: a SIGTERM handler force-saves regardless of
+    the save interval, and the commit is immediately restorable."""
+    mgr = CheckpointManager(str(tmp_path), save_interval=1000, keep=2,
+                            async_save=False)
+    t = _pool_tree()
+    saved = {}
+
+    def on_sigterm(signum, frame):
+        saved["ok"] = mgr.maybe_save(17, t, metadata=dict(reason="sigterm"),
+                                     force=True)
+
+    old = signal.signal(signal.SIGTERM, on_sigterm)
+    try:
+        os.kill(os.getpid(), signal.SIGTERM)
+    finally:
+        signal.signal(signal.SIGTERM, old)
+    assert saved["ok"] is True
+    assert latest_step(str(tmp_path)) == 17
+    man = load_manifest(str(tmp_path), 17)
+    assert man["metadata"]["reason"] == "sigterm"
+    np.testing.assert_array_equal(
+        unflatten(load_flat(str(tmp_path), 17))["pools"]["0"]["order"],
+        t["pools"]["0"]["order"])
+
+
+def test_streaming_resume_rejects_wrong_geometry(tmp_path):
+    """End-to-end: a drained server's forced snapshot refuses to
+    restore onto a different pool geometry with an error that names the
+    mismatched static shape."""
+    reqs = [scenario_from_request("vgg19", 0.0, 6, i) for i in range(3)]
+    eng = StreamingBayesSplitEdge(reqs, n_lanes=4, n_shards=1,
+                                  ckpt_dir=str(tmp_path))
+    list(eng.serve())
+    step = eng.checkpoint_now()
+    assert latest_step(str(tmp_path)) == step
+    with pytest.raises(ValueError, match="n_lanes"):
+        StreamingBayesSplitEdge.resume(
+            str(tmp_path), reqs, n_lanes=8)

@@ -100,8 +100,43 @@ def test_straggler_detection():
     for step in range(10):
         for h in range(8):
             mon.report(h, 1.0 + (2.5 if h == 3 else 0.0), now=100.0 + step)
-    assert mon.stragglers() == [3]
+    assert mon.stragglers(now=100.0 + 9) == [3]
     assert mon.dead(now=100.0 + 9 + 61.0) == list(range(8))
+
+
+def test_dead_host_excluded_from_straggler_stats():
+    """A dead host's stale trailing median must neither appear in the
+    straggler report nor inflate the MAD threshold that the alive hosts
+    are judged against."""
+    mon = HeartbeatMonitor(n_hosts=4, window=10, dead_timeout_s=5.0)
+    for step in range(10):
+        for h in range(4):
+            # host 3 is both the slowest AND about to go silent
+            mon.report(h, 1.0 + (4.0 if h == 3 else 0.0), now=100.0 + step)
+    # host 2 degrades while host 3 has gone dark
+    for step in range(10, 20):
+        for h in range(3):
+            mon.report(h, 1.0 + (2.5 if h == 2 else 0.0), now=100.0 + step)
+    now = 100.0 + 19
+    assert mon.dead(now=now) == [3]
+    report = mon.stragglers(now=now)
+    assert 3 not in report           # dead, not straggling
+    assert report == [2]             # true straggler still surfaces
+
+
+def test_dead_prunes_step_times_until_rejoin():
+    """Flagging a host dead drops its trailing step-time window; a
+    rejoining host rebuilds from fresh reports only."""
+    mon = HeartbeatMonitor(n_hosts=2, window=10, dead_timeout_s=5.0)
+    for step in range(10):
+        mon.report(0, 1.0, now=100.0 + step)
+        mon.report(1, 9.0, now=100.0 + step)
+    assert mon.dead(now=200.0) == [0, 1]
+    assert mon.step_times[0] == [] and mon.step_times[1] == []
+    # host 1 rejoins fast — its pre-failure 9.0s samples must be gone
+    for step in range(5):
+        mon.report(1, 1.0, now=200.0 + step)
+    assert mon.step_times[1] == [1.0] * 5
 
 
 @settings(max_examples=30, deadline=None)

@@ -37,7 +37,25 @@ gate breaks:
   * streaming_throughput — the server's arrivals/s stays within 1.15x
     of the offline batched engine's scenarios/s on that workload (the
     ratio against the stronger wholerun-compacted path is recorded for
-    tracking).
+    tracking);
+  * chaos_replay_match — recovery from every injected fault class
+    (process kill at three dispatch rounds + checkpoint/resume,
+    NaN-poisoned lane + quarantine requeue, lane-pool loss +
+    re-admission onto the survivor) replay-matches the fault-free run
+    (bitwise for cold fits, within the studied trace tolerance warm;
+    post-dedup for the kill/resume merge), and recovery costs at most
+    1.25x the fault-free wall clock (min over >=3 interleaved repeats;
+    the deterministic computed-work ratio — lane-slots, the
+    bounded-re-execution audit — is recorded alongside);
+  * deadline_hit_rate — on a deadlined bursty trace, EDF admission +
+    hopeless shedding does not lose to FIFO on deadline hit rate (the
+    A/B is wall-clock paced, so it retries under transient load: best
+    of <=3 attempts, count recorded), and neither schedule wedges:
+    every admitted request emits exactly one (possibly degraded)
+    result;
+  * quarantine_never_wedges — a lane driven past every repair rung
+    retires with a degraded best-effort answer instead of wedging the
+    server (every request still emits exactly once).
 
 The gate outcome is also emitted as ONE machine-readable line::
 
@@ -154,6 +172,25 @@ def main() -> int:
          slowdown_vs_wholerun=s["slowdown_vs_wholerun"],
          occupancy_mean=s["occupancy_mean"],
          queue_depth_max=s["queue_depth_max"])
+    # crash-safe serving: fault-injected recovery + deadline admission
+    c = r["chaos"]
+    gate("chaos_replay_match",
+         r["chaos_replay_match"] and c["recovery_overhead"] <= 1.25,
+         kill_rounds=c["kill_rounds"], kill_matches=c["kill_matches"],
+         poison_cold_bitwise=c["poison_cold_bitwise"],
+         poison_warm_within_tol=c["poison_warm_within_tol"],
+         pool_drop_match=c["pool_drop_match"],
+         recovery_overhead=c["recovery_overhead"],
+         recovery_work_overhead=c["recovery_work_overhead"],
+         faultfree_s=c["faultfree_s"], recovery_s=c["recovery_s"])
+    gate("deadline_hit_rate",
+         (c["edf_hit_rate"] >= c["fifo_hit_rate"]
+          and c["deadline_exactly_once"]),
+         edf_hit_rate=c["edf_hit_rate"], fifo_hit_rate=c["fifo_hit_rate"],
+         deadline=c["deadline"])
+    gate("quarantine_never_wedges", c["quarantine_no_wedge"],
+         n_quarantined=c["n_quarantined"],
+         poison_n_requeued=c["poison_n_requeued"])
 
     sharded = ("n/a" if r["sharded_s"] is None
                else f"{r['sharded_s']:.2f}s/{r['n_devices']}dev")
@@ -171,6 +208,9 @@ def main() -> int:
           f"streaming {s['streaming_s']:.2f}s/"
           f"{s['n_requests']}req@{s['n_lanes']}lanes "
           f"({s['arrivals_per_s']:.0f} arr/s), "
+          f"chaos replay-match={r['chaos_replay_match']} "
+          f"(recovery {c['recovery_overhead']}x, "
+          f"edf {c['edf_hit_rate']} vs fifo {c['fifo_hit_rate']}), "
           f"zero-rejits={r['zero_rejits_after_warmup']}")
     print("BENCH_CHECK_SUMMARY " + json.dumps(gates, sort_keys=True))
 
@@ -191,6 +231,9 @@ def main() -> int:
             streaming_s=s["streaming_s"],
             streaming_arrivals_per_s=s["arrivals_per_s"],
             streaming_slowdown_vs_wholerun=s["slowdown_vs_wholerun"],
+            chaos_recovery_overhead=c["recovery_overhead"],
+            chaos_edf_hit_rate=c["edf_hit_rate"],
+            chaos_fifo_hit_rate=c["fifo_hit_rate"],
             gates=gates)
         with open(hist, "a") as f:
             f.write(json.dumps(record, sort_keys=True) + "\n")
