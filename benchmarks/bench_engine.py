@@ -7,9 +7,12 @@ seed x gain x budget scenario sweep, plus a mixed-architecture
 heterogeneous-budget (6..20) lane-compaction A/B (``--no-compaction``
 restores the one-dispatch program), a streaming admission-queue
 serving section (``run_streaming``: replay parity, arrival throughput,
-queue depth and lane occupancy over time) and a crash-safety section
+queue depth and lane occupancy over time), a crash-safety section
 (``run_chaos``: fault-injected kill/resume, quarantine, pool loss and
-the EDF-vs-FIFO deadline A/B). Emits the canonical artifact
+the EDF-vs-FIFO deadline A/B) and an overload-tolerance section
+(``run_overload``: elastic-pool replay parity, bounded-queue
+backpressure at 4x load, score-vs-round-robin failover routing under
+a flapped+slowed pool). Emits the canonical artifact
 ``benchmarks/artifacts/BENCH_bo_engine.json`` with wall-clock, speedups,
 per-iteration compile counts (must be flat after warmup => zero re-jits
 in the BO loop), warm-start fit-step accounting, candidates/sec,
@@ -524,6 +527,135 @@ def run_chaos(repeats: int = 1, n_lanes: int = 4) -> dict:
     )
 
 
+def run_overload(repeats: int = 1, n_lanes: int = 4) -> dict:
+    """Overload-tolerance section: elastic lane pools, bounded-queue
+    backpressure and health-aware failover routing on the canonical
+    heterogeneous batch (16 requests, budgets 6..20, VGG19+ResNet101).
+
+    Verifies the three overload contracts — (a) an elastic server
+    (grow/shrink between dispatches) replay-matches the fixed-width
+    server on the same feed bitwise under cold fits and within the
+    studied tolerance warm, while actually resizing (``n_grows >= 1``);
+    (b) under a bursty trace at 4x nominal load the bounded admission
+    queue never exceeds ``max_pending`` and every request still emits
+    exactly once (shed requests emit degraded results); (c) under a
+    flapping + slowed pool, score routing's deadline hit rate does not
+    lose to round-robin (wall-clock paced, so the A/B retries under
+    transient load like the chaos deadline A/B: up to 3 attempts)."""
+    from repro.runtime.chaos import FaultInjector
+    from repro.runtime.stream import (StreamingBayesSplitEdge,
+                                      requests_from_trace)
+    from repro.wireless.traces import arrival_trace
+
+    mk = make_hetero_scenarios
+
+    def exactly_once(results, n):
+        return sorted(r.index for r in results) == list(range(n))
+
+    # warmup: compile the fixed-width phase programs (the elastic parity
+    # runs below warm the remaining per-width programs as they resize)
+    StreamingBayesSplitEdge(mk(), n_lanes=n_lanes, warm_start=False).run()
+    StreamingBayesSplitEdge(mk(), n_lanes=n_lanes).run()
+    w_min, w_max = 2, 4 * n_lanes
+
+    # -- elastic vs fixed-width parity on the same offline feed --------------
+    r_f_cold = StreamingBayesSplitEdge(mk(), n_lanes=n_lanes,
+                                       warm_start=False).run()
+    eng_e = StreamingBayesSplitEdge(
+        mk(), n_lanes=n_lanes, warm_start=False, elastic=True,
+        n_lanes_min=w_min, n_lanes_max=w_max)
+    elastic_cold = _bitwise_results(eng_e.run(), r_f_cold)
+    st_e = eng_e.stream_stats()
+    r_f_warm = StreamingBayesSplitEdge(mk(), n_lanes=n_lanes).run()
+    eng_ew = StreamingBayesSplitEdge(
+        mk(), n_lanes=n_lanes, elastic=True,
+        n_lanes_min=w_min, n_lanes_max=w_max)
+    elastic_warm = _same_results(eng_ew.run(), r_f_warm)
+
+    # timings (parity runs above warmed every visited width): the
+    # elastic overhead ratio tracks the cost of the resize dispatches
+    t_f, t_e = [], []
+    for _ in range(max(repeats, 2)):
+        t0 = time.time()
+        StreamingBayesSplitEdge(mk(), n_lanes=n_lanes).run()
+        t_f.append(time.time() - t0)
+        t0 = time.time()
+        StreamingBayesSplitEdge(mk(), n_lanes=n_lanes, elastic=True,
+                                n_lanes_min=w_min, n_lanes_max=w_max).run()
+        t_e.append(time.time() - t0)
+    fixed_s, elastic_s = float(np.min(t_f)), float(np.min(t_e))
+
+    # -- bounded admission queue under a bursty trace at 4x load -------------
+    cap = n_lanes
+    tr = arrival_trace("bursty", n=16, seed=0, budgets=(6, 10, 14, 20),
+                       deadline_slack=(0.5, 4.0), load=4.0)
+    eng_q = StreamingBayesSplitEdge(
+        requests_from_trace(tr), n_lanes=n_lanes, budget_max=20,
+        arrivals=tr["t"], time_scale=0.1, admission_policy="edf",
+        shed_hopeless=True, max_pending=cap, overload="shed-oldest")
+    res_q = list(eng_q.serve())
+    st_q = eng_q.stream_stats()
+    queue_bounded = st_q["queue_depth_max"] <= cap
+    q_once = exactly_once(res_q, len(tr["t"]))
+
+    # -- failover routing A/B: score vs round-robin under a flapped then
+    # slowed pool. route_max_retries is high so neither run drops the
+    # pool — this isolates the routing decision itself; the drop rung
+    # is exercised by run_chaos and the failover-ladder tests.
+    tr2 = arrival_trace("bursty", n=16, seed=1, budgets=(6, 10, 14, 20),
+                        deadline_slack=(0.5, 4.0), load=2.0)
+    fo = {}
+    for attempt in range(3):
+        for policy in ("rr", "score"):
+            eng = StreamingBayesSplitEdge(
+                requests_from_trace(tr2), n_lanes=2 * n_lanes, n_shards=2,
+                budget_max=20, arrivals=tr2["t"], time_scale=0.1,
+                admission_policy="edf", shed_hopeless=True,
+                routing=policy, heartbeat_timeout_s=30.0,
+                route_backoff_s=0.05, route_max_retries=50,
+                chaos=FaultInjector(seed=3, flap_at=[2], flap_rounds=2,
+                                    slow_pool_at=[3], slow_s=0.08,
+                                    slow_rounds=40))
+            res = list(eng.serve())
+            st = eng.stream_stats()
+            fo[policy] = dict(hit_rate=st["deadline_hit_rate"],
+                              n_backoffs=st["n_backoffs"],
+                              n_rebalanced=st["n_rebalanced"],
+                              n_pool_drops=st["n_pool_drops"],
+                              exactly_once=exactly_once(res, len(tr2["t"])))
+        fo["attempts"] = attempt + 1
+        if (fo["score"]["hit_rate"] >= fo["rr"]["hit_rate"]
+                and fo["score"]["exactly_once"]
+                and fo["rr"]["exactly_once"]):
+            break
+
+    return dict(
+        n_requests=len(mk()), n_lanes=n_lanes,
+        n_lanes_min=w_min, n_lanes_max=w_max,
+        elastic_cold_bitwise=bool(elastic_cold),
+        elastic_warm_within_tol=bool(elastic_warm),
+        elastic_matches_fixed=bool(elastic_cold and elastic_warm),
+        elastic_n_grows=int(st_e["n_grows"]),
+        elastic_n_shrinks=int(st_e["n_shrinks"]),
+        elastic_resize_log=st_e["resize_log"],
+        fixed_s=round(fixed_s, 4),
+        elastic_s=round(elastic_s, 4),
+        elastic_overhead=round(elastic_s / fixed_s, 3),
+        max_pending=cap,
+        queue_depth_max=int(st_q["queue_depth_max"]),
+        queue_depth_trace=st_q["queue_depth"],
+        n_overflow_shed=int(st_q["n_overflow_shed"]),
+        overload_hit_rate=st_q["deadline_hit_rate"],
+        overload_exactly_once=bool(q_once),
+        queue_bounded=bool(queue_bounded),
+        failover=fo,
+        routing_hit_rate=fo["score"]["hit_rate"],
+        rr_hit_rate=fo["rr"]["hit_rate"],
+        failover_exactly_once=bool(fo["score"]["exactly_once"]
+                                   and fo["rr"]["exactly_once"]),
+    )
+
+
 def run_mixed(budget: int = 12, seeds=(0, 1), repeats: int = 1) -> dict:
     """Mixed-architecture batch (VGG19 + ResNet101, max-L padded layout):
     times one heterogeneous batch through both engines and checks it
@@ -571,7 +703,7 @@ def run(n_scenarios: int = 16, budget: int = 20, repeats: int = 1,
         n_legacy: int | None = None, save: bool = True,
         mixed: bool = True, compaction: bool = True,
         hetero: bool = True, streaming: bool = True,
-        chaos: bool = True) -> dict:
+        chaos: bool = True, overload: bool = True) -> dict:
     mon = CompileMonitor()
 
     # -- seed baseline: per-iteration recompiling sequential loop ------------
@@ -687,6 +819,8 @@ def run(n_scenarios: int = 16, budget: int = 20, repeats: int = 1,
     streaming_report = run_streaming(repeats=repeats) if streaming else None
     # -- crash-safe serving: fault injection + deadline A/B ------------------
     chaos_report = run_chaos(repeats=repeats) if chaos else None
+    # -- overload tolerance: elastic pools, bounded queue, failover routing --
+    overload_report = run_overload(repeats=repeats) if overload else None
 
     n_cand = 64 * 64 + scs[0].problem.L + 45
     evals = sum(r.n_evals for r in bat_results)
@@ -792,6 +926,16 @@ def run(n_scenarios: int = 16, budget: int = 20, repeats: int = 1,
                       and chaos_report["poison_cold_bitwise"]
                       and chaos_report["poison_warm_within_tol"]
                       and chaos_report["pool_drop_match"])),
+        # overload tolerance: elastic pool parity, bounded-queue
+        # backpressure, failover-routing deadline A/B
+        overload=overload_report,
+        overload_elastic_matches_fixed=(
+            None if overload_report is None
+            else overload_report["elastic_matches_fixed"]),
+        overload_queue_bounded=(
+            None if overload_report is None
+            else bool(overload_report["queue_bounded"]
+                      and overload_report["overload_exactly_once"])),
         compile_counters=compile_counters(),
     )
     if save:
@@ -830,11 +974,16 @@ def main():
                     help="run the fault-injected crash-safety section "
                          "(kill/resume, quarantine, pool loss, deadline "
                          "A/B; --no-chaos disables)")
+    ap.add_argument("--overload", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="run the overload-tolerance section (elastic "
+                         "pool parity, bounded-queue backpressure, "
+                         "failover routing A/B; --no-overload disables)")
     args = ap.parse_args()
     r = run(args.scenarios, args.budget, args.repeats, args.legacy,
             mixed=args.mixed_arch, compaction=args.compaction,
             hetero=args.hetero, streaming=args.streaming,
-            chaos=args.chaos)
+            chaos=args.chaos, overload=args.overload)
     seed_s = r["sequential_seed_s"]
     print(f"seed-sequential {'n/a' if seed_s is None else f'{seed_s:.2f}s'}"
           f"  sequential {r['sequential_s']:.2f}s"
@@ -888,6 +1037,14 @@ def main():
               f"{c['recovery_overhead']}x, deadline hit-rate "
               f"edf {c['edf_hit_rate']} vs fifo {c['fifo_hit_rate']}, "
               f"quarantine-no-wedge {c['quarantine_no_wedge']}")
+    if r["overload"] is not None:
+        o = r["overload"]
+        print(f"overload {o['n_requests']} requests: elastic-match "
+              f"{o['elastic_matches_fixed']} ({o['elastic_n_grows']} grows,"
+              f" {o['elastic_overhead']}x overhead), queue "
+              f"{o['queue_depth_max']}/{o['max_pending']} bounded "
+              f"{o['queue_bounded']}, routing hit-rate score "
+              f"{o['routing_hit_rate']} vs rr {o['rr_hit_rate']}")
     print(f"matern-score {r['matern_score_candidates_per_sec']:,} cand/s  "
           f"BO loop {r['bo_candidates_per_sec']:,} cand/s")
     return r

@@ -18,6 +18,7 @@ import os
 import shutil
 import threading
 import time
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -44,15 +45,27 @@ def _unflatten_into(template, flat):
 
 
 def save(ckpt_dir: str, step: int, tree: Any, *, metadata: Optional[dict] = None,
-         blocking: bool = True) -> threading.Thread | None:
+         blocking: bool = True, retries: int = 3,
+         retry_backoff_s: float = 0.05) -> threading.Thread | None:
     """Atomic checkpoint save. blocking=False returns the writer thread
     (arrays are snapshotted to host memory synchronously — the training
-    step can mutate device buffers immediately)."""
+    step can mutate device buffers immediately).
+
+    Transient I/O failures (``OSError`` from a flaky disk/NFS mount)
+    retry up to ``retries`` times with exponential backoff, rebuilding
+    the ``.tmp`` staging dir from scratch each attempt. After the last
+    attempt the failure is reported as a ``warnings.warn`` instead of
+    an exception — a serving run must not die because one snapshot
+    failed — and the commit protocol guarantees no torn state either
+    way: ``COMMITTED`` is written last inside the staging dir and the
+    final rename is atomic, so readers (``latest_step``) only ever see
+    the previous intact commit."""
     flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
 
-    def write():
+    def write_once():
         final = os.path.join(ckpt_dir, f"step_{step:08d}")
         tmp = final + ".tmp"
+        shutil.rmtree(tmp, ignore_errors=True)
         os.makedirs(tmp, exist_ok=True)
         np.savez(os.path.join(tmp, "arrays.npz"), **flat)
         manifest = dict(
@@ -71,6 +84,24 @@ def save(ckpt_dir: str, step: int, tree: Any, *, metadata: Optional[dict] = None
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
+
+    def write():
+        last = None
+        for attempt in range(max(1, retries)):
+            try:
+                write_once()
+                return
+            except OSError as e:
+                last = e
+                if attempt + 1 < max(1, retries):
+                    time.sleep(retry_backoff_s * (2 ** attempt))
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{step:08d}.tmp"),
+                      ignore_errors=True)
+        warnings.warn(
+            f"checkpoint save of step {step} to {ckpt_dir} gave up "
+            f"after {max(1, retries)} attempts: {last!r} (the previous "
+            f"commit is intact; serving continues)",
+            RuntimeWarning, stacklevel=2)
 
     if blocking:
         write()

@@ -13,6 +13,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 SQRT5 = 2.23606797749979
 
@@ -246,6 +247,19 @@ def take_lanes(tree, idx):
     bucketed datasets survive a lane compaction/permutation unchanged,
     as does the fitted posterior-cache pytree and the whole-run state."""
     return jax.tree.map(lambda v: v[idx], tree)
+
+
+def pad_lanes_index(rows: int, s_next: int):
+    """The grow-side companion of :func:`take_lanes`: the gather index
+    that widens an ``rows``-lane pytree to ``s_next`` lanes in place —
+    the original rows followed by duplicates of row 0 (the caller masks
+    the duplicates out; the elastic-pool grow path zeroes their
+    bookkeeping so a later admission scatter starts them fresh)."""
+    if s_next < rows:
+        raise ValueError(f"pad_lanes_index cannot narrow ({rows} -> "
+                         f"{s_next})")
+    return np.concatenate([np.arange(rows, dtype=np.int64),
+                           np.zeros(s_next - rows, np.int64)])
 
 
 def empty_dataset_batch(cfg: GPConfig, s: int, dim: int = 2):

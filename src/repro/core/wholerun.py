@@ -568,6 +568,47 @@ def gather_live_lanes(state, run_data, live: np.ndarray, s_next: int):
     return state, run_data, keep
 
 
+@partial(jax.jit, static_argnames=("k",))
+def _fresh_tail(state, k: int):
+    """Zero the bookkeeping of every row past the first ``k``: resized
+    pools pad with gathered duplicates of occupied rows, and a duplicate
+    must not inherit its source's generation / fault / seed flags — the
+    admission scatter overwrites everything else but *increments* the
+    generation, so a stale copy would break the (pool, lane, gen)
+    attribution of its next occupant."""
+    s = state["active"].shape[0]
+    tail = jnp.arange(s) >= k
+    z32 = jnp.zeros((s,), jnp.int32)
+    return dict(state,
+                active=state["active"] & ~tail,
+                fault=state["fault"] & ~tail,
+                seeded=state["seeded"] & ~tail,
+                gen=jnp.where(tail, z32, state["gen"]))
+
+
+def resize_lanes(state, run_data, occ: np.ndarray, s_next: int):
+    """Elastic pool resize — the compaction gather run in *either*
+    direction: permute the occupied rows (``occ``, original indices)
+    into a dense prefix of an ``s_next``-lane layout (state pytree AND
+    lane-aligned inputs), growing or shrinking the pool between
+    dispatches with zero recompilation beyond the per-width program
+    cache. Tail rows (gathered via :func:`gp.pad_lanes_index`-style
+    duplicates of the first occupant, or of row 0 when the pool is
+    empty) come back deactivated with fresh generation/fault/seed
+    bookkeeping, ready for an ordinary admission scatter. Returns
+    ``(state, run_data)``; the caller permutes its host lane maps with
+    ``occ`` itself."""
+    if occ.size > s_next:
+        raise ValueError(f"{occ.size} occupied lanes cannot fit a "
+                         f"{s_next}-lane pool")
+    src = np.zeros(s_next, np.int64)
+    src[:occ.size] = occ
+    idx = jnp.asarray(src)
+    state = gather_lanes(state, idx)
+    run_data = gather_lanes(run_data, idx)
+    return _fresh_tail(state, int(occ.size)), run_data
+
+
 # -- streaming admission programs (runtime/stream.py drives these) -----------
 
 @partial(jax.jit, static_argnames=("cfg", "m", "last"))

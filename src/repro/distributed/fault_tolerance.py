@@ -44,6 +44,15 @@ class HeartbeatMonitor:
             ts.pop(0)
         self.last_seen[host] = now if now is not None else time.time()
 
+    def heartbeat(self, host: int, now: Optional[float] = None):
+        """Liveness-only ping: refresh ``last_seen`` without recording a
+        step time. A host that is alive but between steps (the streaming
+        engine's round-top ping) must not pollute its trailing
+        step-time window with zeros — that would mask it from
+        :meth:`stragglers`, whose whole point is catching alive-but-slow
+        hosts."""
+        self.last_seen[host] = now if now is not None else time.time()
+
     def _silent(self, now: Optional[float]) -> set:
         now = now if now is not None else time.time()
         return {h for h, t in self.last_seen.items()

@@ -27,11 +27,24 @@ Fault classes (all one-shot per configured entry, all logged to an
   timeout, not from the injector.
 * ``delay_at`` — sleep ``delay_s`` before the round's dispatches (the
   straggler model for heartbeat/overhead studies).
+* ``storm_at`` — arrival storm (the flash-crowd model for the bounded
+  admission queue): collapse the arrival times of the next ``storm_n``
+  not-yet-pulled feed entries to "now", so they all land in one round's
+  pull regardless of the trace's pacing.
+* ``flap_at`` — flapping pool: mute a pool's heartbeat for
+  ``flap_rounds`` serving rounds, then un-mute it (the
+  recovers-before-the-dead-timeout model that exercises failover
+  routing/backoff rather than the drop-pool path).
+* ``slow_pool_at`` — persistent straggler: one pool's dispatches each
+  pay an extra ``slow_s`` sleep for ``slow_rounds`` rounds (vs the
+  one-shot ``delay_at``) — the slow-host model the routing score and
+  work-rebalancing respond to.
 
 Every random choice (which pool, which lane) comes from one
 ``numpy.random.default_rng(seed)`` stream in firing order, so a chaos
 schedule is fully determined by ``(seed, schedule)`` and a failing run
-replays exactly.
+replays exactly: :func:`FaultInjector.save_events` /
+:func:`load_events` round-trip the event log as JSON for CI artifacts.
 """
 from __future__ import annotations
 
@@ -88,8 +101,15 @@ class FaultInjector:
                  drop_pool_at: Iterable[int] = (),
                  mute_pool_at: Iterable[int] = (),
                  delay_at: Iterable[int] = (),
+                 storm_at: Iterable[int] = (),
+                 flap_at: Iterable[int] = (),
+                 slow_pool_at: Iterable[int] = (),
                  poison: str = "data",
-                 delay_s: float = 0.05):
+                 delay_s: float = 0.05,
+                 storm_n: int = 8,
+                 flap_rounds: int = 2,
+                 slow_s: float = 0.05,
+                 slow_rounds: int = 3):
         if poison not in ("data", "theta"):
             raise ValueError(f"poison must be 'data' or 'theta', got "
                              f"{poison!r}")
@@ -100,8 +120,18 @@ class FaultInjector:
         self.drop_pool_at = set(int(r) for r in drop_pool_at)
         self.mute_pool_at = set(int(r) for r in mute_pool_at)
         self.delay_at = set(int(r) for r in delay_at)
+        self.storm_at = set(int(r) for r in storm_at)
+        self.flap_at = set(int(r) for r in flap_at)
+        self.slow_pool_at = set(int(r) for r in slow_pool_at)
         self.poison = poison
         self.delay_s = float(delay_s)
+        self.storm_n = int(storm_n)
+        self.flap_rounds = int(flap_rounds)
+        self.slow_s = float(slow_s)
+        self.slow_rounds = int(slow_rounds)
+        # live flap/slow state: (pool_id, expiry round) or None
+        self._flapping: Optional[tuple] = None
+        self._slow: Optional[tuple] = None
         self.events: list = []
 
     # -- helpers -------------------------------------------------------------
@@ -134,6 +164,44 @@ class FaultInjector:
         same-round poison/drop faults still land first."""
         r = engine._round
         pools = engine._pools
+        # expire a live flap FIRST: the un-mute must land even if this
+        # round fires new faults (including a new flap on another pool)
+        if self._flapping is not None and r >= self._flapping[1]:
+            pid = self._flapping[0]
+            if pid < len(pools) and pools[pid].muted:
+                pools[pid].muted = False
+                self._log("unflap", r, pool=pid)
+            self._flapping = None
+        if r in self.storm_at:
+            self.storm_at.discard(r)
+            if engine.arrivals is None:
+                self._log("storm_skipped", r)
+            else:
+                lo = engine._n_pulled
+                hi = min(lo + self.storm_n, len(engine.arrivals))
+                for i in range(lo, hi):
+                    engine.arrivals[i] = 0.0
+                self._log("storm", r, first=lo, n=hi - lo)
+        if r in self.flap_at:
+            self.flap_at.discard(r)
+            pid = self._pick_pool(pools, need_inflight=False)
+            if pid is None:
+                self._log("flap_skipped", r)
+            else:
+                pools[pid].muted = True
+                self._flapping = (pid, r + self.flap_rounds)
+                self._log("flap", r, pool=pid,
+                          until=r + self.flap_rounds)
+        if r in self.slow_pool_at:
+            self.slow_pool_at.discard(r)
+            pid = self._pick_pool(pools, need_inflight=False)
+            if pid is None:
+                self._log("slow_pool_skipped", r)
+            else:
+                self._slow = (pid, r + self.slow_rounds)
+                self._log("slow_pool", r, pool=pid,
+                          until=r + self.slow_rounds,
+                          slow_s=self.slow_s)
         if r in self.nan_poison_at:
             self.nan_poison_at.discard(r)
             pid = self._pick_pool(pools, need_inflight=True)
@@ -171,13 +239,23 @@ class FaultInjector:
             raise SimulatedCrash(r)
 
     def on_dispatch(self, engine, pool) -> None:
-        """Pre-dispatch hook: inject the configured straggler delay."""
+        """Pre-dispatch hook: inject the configured straggler delays —
+        the one-shot ``delay_at`` and the persistent ``slow_pool_at``
+        (every dispatch of the picked pool pays ``slow_s`` until the
+        slow window expires; sleeps are not individually logged — the
+        arming ``slow_pool`` event plus the round determine them)."""
         r = engine._round
         if r in self.delay_at:
             self.delay_at.discard(r)
             self._log("delay", r, pool=pool.pool_id,
                       delay_s=self.delay_s)
             time.sleep(self.delay_s)
+        if self._slow is not None:
+            pid, until = self._slow
+            if r >= until:
+                self._slow = None
+            elif pool.pool_id == pid:
+                time.sleep(self.slow_s)
 
     # -- artifacts -----------------------------------------------------------
     def save_events(self, path: str) -> None:
@@ -190,3 +268,12 @@ class FaultInjector:
         with open(path, "w") as f:
             json.dump(dict(seed=self.seed, events=self.events), f,
                       sort_keys=True)
+
+
+def load_events(path: str) -> dict:
+    """Round-trip of :meth:`FaultInjector.save_events`: the
+    ``{seed, events}`` dict as saved — the replay side of the CI
+    artifact contract (re-seed a fresh ``FaultInjector`` with ``seed``
+    and the failing schedule, and the event log reproduces)."""
+    with open(path) as f:
+        return json.load(f)

@@ -95,12 +95,28 @@ from repro.core.batch_bo import Scenario, scenario_from_request
 from repro.core.bo import BOResult
 from repro.distributed.fault_tolerance import HeartbeatMonitor
 from repro.distributed.sharding import (ADMISSION_POLICIES, admission_order,
-                                        next_admission_shard)
+                                        next_admission_shard,
+                                        route_admission_shard)
 
-# vocabulary of degraded-result reasons (checkpointed as codes)
-DEGRADED_REASONS = ("quarantine", "preempted", "shed")
+# vocabulary of degraded-result reasons (checkpointed as codes — the
+# tuple is APPEND-ONLY: existing checkpoints store indices into it)
+DEGRADED_REASONS = ("quarantine", "preempted", "shed", "rejected")
 
 QUARANTINE_POLICIES = ("requeue", "repair")
+
+# what to do with a new arrival once the admission queue holds
+# ``max_pending`` requests:
+# * "block"      — stop pulling the feed (backpressure: timed arrivals
+#   wait in the feed; order-driven feeds simply aren't consumed);
+# * "reject"     — accept-and-refuse: the arrival emits a degraded
+#   result (reason "rejected") immediately, never taking queue space;
+# * "shed-oldest"— evict the oldest hopeless queued request (falling
+#   back to the oldest outright) with a degraded "shed" result, then
+#   queue the new arrival — composes with EDF + shed_hopeless: the
+#   eviction prefers requests the deadline triage would shed anyway.
+OVERLOAD_POLICIES = ("block", "reject", "shed-oldest")
+
+ROUTING_POLICIES = ("score", "rr")
 
 
 @dataclasses.dataclass
@@ -163,8 +179,20 @@ class _LanePool:
         # result's (pool, lane, gen) triple must keep naming the lane
         # the run actually occupied
         self.lane_ids = np.arange(width, dtype=np.int64)
+        # next unissued lane id: elastic resizes mint fresh ids so a
+        # (pool, lane, gen) triple never collides across pool widths
+        self._lane_seq = width
         self.dead = False          # pool lost (chaos drop / heartbeat)
         self.muted = False         # heartbeat silenced (hung-host model)
+        # failover-routing health signals
+        self.ewma_wall = None      # EWMA per-dispatch wall clock (s)
+        self.backoff_level = 0     # consecutive unhealthy strikes
+        self.backoff_until = 0.0   # no admissions before this (serve s)
+        # elastic-controller state (hysteresis over queue pressure)
+        self.ewma_free = 0.0       # EWMA lanes freed per dispatch
+        self.hot = 0               # consecutive under-capacity rounds
+        self.cold = 0              # consecutive over-capacity rounds
+        self.cool = 0              # post-resize cooldown countdown
 
     # -- admission -----------------------------------------------------------
     def free_count(self) -> int:
@@ -315,6 +343,37 @@ class _LanePool:
         self.lane_ids = self.lane_ids[keep]
         self.width = s_next
 
+    def resize_to(self, s_next: int) -> None:
+        """Elastic resize between dispatches — grow or shrink: gather
+        the occupied rows (active, faulted, or retired-but-unflushed —
+        anything the host still owes an emission for) into a dense
+        prefix of the new width (``wholerun.resize_lanes``, the PR 4
+        compaction gather run in either direction), and bring the tail
+        up as genuinely free lanes: fresh lane ids and zeroed
+        generations, ready for an ordinary admission scatter. A pure
+        re-scheduling — every occupant's per-lane state rides along
+        unchanged — so elastic runs keep the replay contract by
+        construction."""
+        if s_next == self.width:
+            return
+        occ = np.flatnonzero(self.order >= 0)
+        if occ.size > s_next:
+            raise ValueError(f"cannot resize pool {self.pool_id} to "
+                             f"{s_next}: {occ.size} lanes are occupied")
+        if self.state is not None:
+            self.state, self.run_data = wr.resize_lanes(
+                self.state, self.run_data, occ, s_next)
+        order = np.full(s_next, -1, np.int64)
+        order[:occ.size] = self.order[occ]
+        gen = np.zeros(s_next, np.int64)
+        gen[:occ.size] = self.gen[occ]
+        lane_ids = np.arange(self._lane_seq, self._lane_seq + s_next,
+                             dtype=np.int64)
+        lane_ids[:occ.size] = self.lane_ids[occ]
+        self._lane_seq += s_next
+        self.order, self.gen, self.lane_ids = order, gen, lane_ids
+        self.width = s_next
+
 
 class StreamingBayesSplitEdge:
     """Admission-queue Bayes-Split-Edge server over compacted lanes.
@@ -331,10 +390,28 @@ class StreamingBayesSplitEdge:
 
     * ``n_lanes`` — total lane capacity (a power of 2), split evenly
       over ``n_shards`` independent pools;
-    * ``l_pad`` — max supported layer count (requests with a deeper
-      backbone are rejected with ``ValueError``);
-    * ``budget_max`` — max supported evaluation budget (ledger length;
-      larger requests are rejected).
+    * ``l_pad`` — max supported layer count;
+    * ``budget_max`` — max supported evaluation budget (ledger length).
+
+    Requests exceeding either static shape are *rejected*, not raised:
+    they emit one degraded ``StreamResult`` (reason ``"rejected"``,
+    zero evaluations) so a live feed never kills the serve loop.
+
+    Overload tolerance (the elastic-serving layer):
+
+    * ``elastic`` + ``n_lanes_min``/``n_lanes_max`` — grow/shrink each
+      pool between dispatches (power-of-2 widths, hysteresis over queue
+      share and EWMA lane-free rate; see ``docs/engine.md``). Elastic
+      runs replay-match a fixed-width run on the same feed.
+    * ``max_pending`` + ``overload`` — bound the admission queue; the
+      policy (``"block"``/``"reject"``/``"shed-oldest"``) decides what
+      happens at the bound. Every accepted request still emits exactly
+      one result.
+    * ``routing`` — ``"score"`` (default) places admissions by free
+      capacity discounted by pool health and drives the failover
+      ladder (backoff -> rebalance -> drop) when a monitor is armed;
+      ``"rr"`` is the historical most-free/round-robin placement.
+      On a healthy fleet ``"score"`` reduces exactly to ``"rr"``.
 
     ``arrivals`` (optional, aligned with the feed, in seconds scaled by
     ``time_scale``) paces admission against the wall clock for
@@ -370,6 +447,16 @@ class StreamingBayesSplitEdge:
     # this many recent entries — a long-lived server's aggregate stats
     # accumulate in O(1) regardless of stream length
     STATS_TRACE_CAP = 4096
+    # elastic hysteresis: consecutive under-/over-capacity rounds
+    # before a pool grows/shrinks, and the post-resize cooldown — wide
+    # apart on purpose so queue noise cannot make a pool thrash
+    ELASTIC_GROW_PATIENCE = 2
+    ELASTIC_SHRINK_PATIENCE = 4
+    ELASTIC_COOLDOWN = 4
+    # failover: a pool whose EWMA dispatch wall exceeds this multiple
+    # of the other alive pools' median is a straggler (engine-side test
+    # — the monitor's MAD rule cannot fire on a 2-pool fleet)
+    ROUTE_STRAGGLER_X = 3.0
 
     def __init__(self, requests: Iterable[Scenario], n_lanes: int = 8,
                  l_pad: Optional[int] = None,
@@ -389,13 +476,45 @@ class StreamingBayesSplitEdge:
                  fault_on_divergence: bool = False,
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
                  ckpt_keep: int = 3, chaos=None,
-                 heartbeat_timeout_s: Optional[float] = None):
+                 heartbeat_timeout_s: Optional[float] = None,
+                 elastic: bool = False,
+                 n_lanes_min: Optional[int] = None,
+                 n_lanes_max: Optional[int] = None,
+                 max_pending: Optional[int] = None,
+                 overload: str = "block",
+                 routing: str = "score",
+                 route_backoff_s: float = 0.05,
+                 route_max_retries: int = 3):
         if n_lanes < 1 or n_shards < 1 or n_lanes % n_shards:
             raise ValueError("n_lanes must split evenly over n_shards")
         width = n_lanes // n_shards
         if wr._next_pow2(width) != width:
             raise ValueError(f"per-shard lane count {width} must be a "
                              f"power of 2")
+        n_lanes_min = n_lanes if n_lanes_min is None else int(n_lanes_min)
+        n_lanes_max = n_lanes if n_lanes_max is None else int(n_lanes_max)
+        if elastic:
+            for name, v in (("n_lanes_min", n_lanes_min),
+                            ("n_lanes_max", n_lanes_max)):
+                if v < n_shards or v % n_shards:
+                    raise ValueError(f"{name}={v} must split evenly "
+                                     f"over {n_shards} shards")
+                w = v // n_shards
+                if wr._next_pow2(w) != w:
+                    raise ValueError(f"{name} per-shard width {w} must "
+                                     f"be a power of 2")
+            if not n_lanes_min <= n_lanes <= n_lanes_max:
+                raise ValueError(
+                    f"need n_lanes_min <= n_lanes <= n_lanes_max, got "
+                    f"{n_lanes_min} / {n_lanes} / {n_lanes_max}")
+        if max_pending is not None and int(max_pending) < 1:
+            raise ValueError("max_pending must be at least 1")
+        if overload not in OVERLOAD_POLICIES:
+            raise ValueError(f"unknown overload policy {overload!r} "
+                             f"(one of {OVERLOAD_POLICIES})")
+        if routing not in ROUTING_POLICIES:
+            raise ValueError(f"unknown routing policy {routing!r} "
+                             f"(one of {ROUTING_POLICIES})")
         if (not callable(admission_policy)
                 and admission_policy not in ADMISSION_POLICIES):
             raise ValueError(f"unknown admission policy "
@@ -470,6 +589,20 @@ class StreamingBayesSplitEdge:
         self.shed_safety = float(shed_safety)
         self.quarantine = quarantine
         self.max_requeues = int(max_requeues)
+        # overload tolerance ---------------------------------------------------
+        self.elastic = bool(elastic)
+        self.n_lanes_min = n_lanes_min
+        self.n_lanes_max = n_lanes_max
+        self._w_min = n_lanes_min // n_shards
+        self._w_max = n_lanes_max // n_shards
+        self.max_pending = (None if max_pending is None
+                            else int(max_pending))
+        self.overload = overload
+        self.routing = routing
+        self.route_backoff_s = float(route_backoff_s)
+        self.route_max_retries = int(route_max_retries)
+        self._overflow: deque = deque()   # host-side results awaiting yield
+        self._resize_log: deque = deque(maxlen=self.STATS_TRACE_CAP)
         self.ckpt_dir = ckpt_dir
         self.ckpt_every = int(ckpt_every)
         self.ckpt_keep = int(ckpt_keep)
@@ -493,17 +626,24 @@ class StreamingBayesSplitEdge:
         self._counters = dict(
             n_faults=0, n_requeued=0, n_preempted=0, n_shed=0,
             n_degraded=0, n_pool_drops=0, n_checkpoints=0,
-            deadline_total=0, deadline_hits=0)
+            deadline_total=0, deadline_hits=0,
+            n_rejected=0, n_overflow_shed=0, n_grows=0, n_shrinks=0,
+            n_backoffs=0, n_rebalanced=0)
 
     # -- feed ----------------------------------------------------------------
-    def _validate(self, sc: Scenario) -> Scenario:
+    def _oversized(self, sc: Scenario) -> str:
+        """Why this request cannot be served at the engine's static
+        shapes (empty string when it can). Oversized requests are not
+        an error — a live feed cannot be pre-screened — they emit a
+        degraded result with reason ``"rejected"`` instead of killing
+        the serve loop."""
         if sc.budget > self.budget_max:
-            raise ValueError(f"request budget {sc.budget} exceeds the "
-                             f"server budget_max={self.budget_max}")
+            return (f"budget {sc.budget} exceeds the server "
+                    f"budget_max={self.budget_max}")
         if sc.problem.L > self.l_pad:
-            raise ValueError(f"request L={sc.problem.L} exceeds the "
-                             f"server l_pad={self.l_pad}")
-        return sc
+            return (f"L={sc.problem.L} exceeds the server "
+                    f"l_pad={self.l_pad}")
+        return ""
 
     def _arrived(self, i: int, now: float) -> bool:
         if self.arrivals is None or i >= len(self.arrivals):
@@ -518,15 +658,29 @@ class StreamingBayesSplitEdge:
         of look-ahead (the staging of look-ahead requests hides under
         the running device phase) — so generator feeds are consumed on
         demand; timed feeds pull everything whose arrival time has
-        passed (those requests are queued regardless of capacity, which
-        is what the queue-depth metric measures).
-        """
+        passed.
+
+        ``max_pending`` bounds the queue: once it is full, the
+        ``overload`` policy decides — ``"block"`` stops pulling (pure
+        backpressure: arrivals wait in the feed), ``"reject"`` answers
+        each excess arrival with an immediate degraded result, and
+        ``"shed-oldest"`` evicts the oldest hopeless queued request
+        (falling back to the oldest outright) to make room. Every
+        pulled request still emits exactly one result. Oversized
+        requests (``_oversized``) are rejected here regardless of
+        queue state. Degraded results produced here land in
+        ``self._overflow``; the serve loop drains it right after each
+        pull."""
         if self._feed_done:
             return
         free = sum(p.free_count() for p in self._pools)
+        cap = self.max_pending
         while True:
             if (self.arrivals is None
                     and len(pending) >= free + self.n_lanes):
+                return
+            if (cap is not None and self.overload == "block"
+                    and len(pending) >= cap):
                 return
             if not self._arrived(self._n_pulled, now):
                 return
@@ -537,7 +691,33 @@ class StreamingBayesSplitEdge:
                 return
             i = self._n_pulled
             self._n_pulled += 1
-            self._requests[i] = self._validate(sc)
+            why = self._oversized(sc)
+            if why:
+                self._counters["n_rejected"] += 1
+                self._overflow.append(self._host_result(
+                    i, sc, self._now_trace(now), "rejected"))
+                continue
+            if cap is not None and len(pending) >= cap:
+                now_trace = self._now_trace(now)
+                if self.overload == "reject":
+                    self._counters["n_rejected"] += 1
+                    self._overflow.append(self._host_result(
+                        i, sc, now_trace, "rejected"))
+                    continue
+                # "shed-oldest": hopeless-first eviction keeps the
+                # bound while spending it on the request EDF would
+                # have wasted a lane on anyway
+                victim = 0
+                for k, (_, vsc) in enumerate(pending):
+                    if self._hopeless(vsc, now_trace):
+                        victim = k
+                        break
+                vidx, vsc = pending[victim]
+                del pending[victim]
+                self._counters["n_overflow_shed"] += 1
+                self._overflow.append(self._host_result(
+                    vidx, vsc, now_trace, "shed"))
+            self._requests[i] = sc
             pending.append((i, sc))
 
     def _stage_request(self, idx: int, sc: Scenario) -> dict:
@@ -624,11 +804,12 @@ class StreamingBayesSplitEdge:
         est = self.shed_safety * rem * self._now_trace(ew)
         return now_trace + est > d
 
-    def _shed_result(self, idx: int, sc: Scenario,
-                     now_trace: float) -> StreamResult:
-        """Degraded answer for a request shed from the queue: the
-        feasible projection of the search-space center, evaluated
-        host-side (no lane was ever consumed)."""
+    def _host_result(self, idx: int, sc: Scenario, now_trace: float,
+                     reason: str) -> StreamResult:
+        """Degraded answer produced host-side, no lane ever consumed:
+        the feasible projection of the search-space center. Shared by
+        queue shedding (``reason="shed"``), overload rejection and
+        oversized-request rejection (``reason="rejected"``)."""
         a = sc.problem.project_feasible(np.array([0.5, 0.5]))
         feas = sc.problem.feasible(a)
         u = float(sc.problem.evaluate(a, record=False))
@@ -641,7 +822,7 @@ class StreamingBayesSplitEdge:
         self._staged.pop(idx, None)
         return StreamResult(index=idx, scenario=sc, result=res,
                             pool=-1, lane=-1, gen=-1, raw={},
-                            degraded=True, reason="shed",
+                            degraded=True, reason=reason,
                             emit_s=now_trace)
 
     def _preempt(self, now_trace: float) -> None:
@@ -671,6 +852,141 @@ class StreamingBayesSplitEdge:
                 self._counters["n_preempted"] += len(doomed)
                 p.retire(doomed)
 
+    # -- elastic pool sizing ---------------------------------------------------
+    def _elastic_step(self, n_pending: int) -> None:
+        """Hysteresis controller: grow a pool when its share of the
+        queue has exceeded its free capacity (current free lanes plus
+        the EWMA lane-free rate) for ``ELASTIC_GROW_PATIENCE``
+        consecutive rounds; shrink when the queue is empty and the pool
+        has sat at <= quarter occupancy for ``ELASTIC_SHRINK_PATIENCE``
+        rounds. Power-of-2 steps inside [``n_lanes_min``,
+        ``n_lanes_max``] per shard, with a post-resize cooldown so the
+        controller can observe the new width before moving again."""
+        alive = [p for p in self._pools if not p.dead]
+        if not alive:
+            return
+        share = -(-n_pending // len(alive))      # ceil queue share
+        for p in alive:
+            if p.cool > 0:
+                p.cool -= 1
+                p.hot = p.cold = 0
+                continue
+            occ = int(np.sum(p.order >= 0))
+            free = p.width - occ
+            p.hot = (p.hot + 1 if (p.width < self._w_max
+                                   and share > free + p.ewma_free)
+                     else 0)
+            p.cold = (p.cold + 1 if (n_pending == 0
+                                     and p.width > self._w_min
+                                     and occ <= p.width // 4)
+                      else 0)
+            new = None
+            if p.hot >= self.ELASTIC_GROW_PATIENCE:
+                new = min(self._w_max, p.width * 2)
+                self._counters["n_grows"] += 1
+            elif p.cold >= self.ELASTIC_SHRINK_PATIENCE:
+                new = max(self._w_min,
+                          wr._next_pow2(max(1, 2 * occ)))
+                if new >= p.width:
+                    new = None
+                else:
+                    self._counters["n_shrinks"] += 1
+            if new is not None and new != p.width:
+                old = p.width
+                p.resize_to(new)
+                p.hot = p.cold = 0
+                p.cool = self.ELASTIC_COOLDOWN
+                self._resize_log.append(dict(
+                    round=self._round, pool=p.pool_id,
+                    width=(old, new), pending=n_pending))
+
+    # -- failover routing -------------------------------------------------------
+    def _failover_step(self, now: float) -> None:
+        """Back unhealthy pools off the admission path. A pool is
+        unhealthy while its heartbeat is muted, or while its EWMA
+        dispatch wall exceeds ``ROUTE_STRAGGLER_X`` times the median of
+        the other alive pools (a 2-pool fleet can't use the monitor's
+        MAD rule). Each strike doubles the backoff window
+        (``route_backoff_s`` base); the second strike also rebalances
+        the pool's in-flight work onto the healthy pools, and a strike
+        past ``route_max_retries`` hands the pool to the established
+        drop-pool path. A pool that looks healthy again after its
+        window resets to a clean slate. Only engaged with a
+        ``HeartbeatMonitor`` armed — health is the monitor subsystem's
+        verdict, and a default server keeps PR 6 behavior exactly."""
+        alive = [p for p in self._pools if not p.dead]
+        if len(alive) < 2:
+            return
+        for p in alive:
+            slow = False
+            if p.ewma_wall is not None:
+                others = [q.ewma_wall for q in alive
+                          if q is not p and q.ewma_wall is not None]
+                slow = bool(others) and (
+                    p.ewma_wall
+                    > self.ROUTE_STRAGGLER_X * float(np.median(others)))
+            if p.muted or slow:
+                if now < p.backoff_until:
+                    continue         # strike already counted
+                p.backoff_level += 1
+                self._counters["n_backoffs"] += 1
+                if p.backoff_level > self.route_max_retries:
+                    self._drop_pool(p.pool_id,
+                                    reason="backoff-exhausted")
+                    continue
+                p.backoff_until = now + (self.route_backoff_s
+                                         * 2.0 ** (p.backoff_level - 1))
+                if p.backoff_level >= 2:
+                    self._rebalance_pool(p)
+            elif p.backoff_level and now >= p.backoff_until:
+                p.backoff_level = 0  # recovered
+
+    def _rebalance_pool(self, p: _LanePool) -> None:
+        """Move a struggling pool's in-flight (active) requests back to
+        the admission queue so healthy pools can serve them: the lanes
+        retire device-side but their rows never flush (``order`` clears
+        first), and each re-run is an ordinary fresh cold run — the
+        same bounded-re-execution argument as the requeue and drop-pool
+        paths, so rebalancing never perturbs the replay contract.
+        Faulted and retired-but-unflushed lanes stay: the quarantine
+        ladder and the flush own those."""
+        if p.state is None:
+            return
+        active = np.asarray(p.state["active"])
+        moved = []
+        for r in range(p.width):
+            idx = int(p.order[r])
+            if idx < 0 or not active[r]:
+                continue
+            self._degraded.pop(idx, None)
+            self._pending.append((idx, self._requests[idx]))
+            p.order[r] = -1
+            moved.append(r)
+        if moved:
+            p.retire(moved)
+            self._counters["n_rebalanced"] += len(moved)
+
+    def _route_features(self, now: float) -> List[dict]:
+        """Per-pool routing features for ``route_admission_shard``.
+        EWMA walls are only exposed for pools carrying backoff strikes:
+        on a healthy fleet every score stays the integer free-lane
+        count, so routing is deterministic and reduces exactly to the
+        historical most-free/round-robin placement."""
+        feats = []
+        for p in self._pools:
+            f = dict(free=0 if (p.dead or p.muted) else p.free_count(),
+                     backoff=bool(p.dead or p.muted
+                                  or now < p.backoff_until))
+            if p.backoff_level > 0:
+                f["ewma_wall_s"] = p.ewma_wall
+            if self.monitor is not None and not p.dead:
+                grace = 0.5 * self.monitor.dead_timeout_s
+                stale = time.time() - self.monitor.last_seen[p.pool_id]
+                if stale > grace > 0:
+                    f["stale_frac"] = stale / grace - 1.0
+            feats.append(f)
+        return feats
+
     # -- checkpoint / restore ------------------------------------------------
     def _meta(self) -> dict:
         return dict(
@@ -681,6 +997,10 @@ class StreamingBayesSplitEdge:
             policy=(self.admission_policy
                     if isinstance(self.admission_policy, str)
                     else "custom"),
+            elastic=self.elastic, n_lanes_min=self.n_lanes_min,
+            n_lanes_max=self.n_lanes_max, max_pending=self.max_pending,
+            overload=self.overload, routing=self.routing,
+            pool_widths=[p.width for p in self._pools],
             round=self._round)
 
     def _ckpt_tree(self) -> dict:
@@ -689,7 +1009,14 @@ class StreamingBayesSplitEdge:
             pt = dict(order=p.order.copy(), gen=p.gen.copy(),
                       lane_ids=p.lane_ids.copy(),
                       it=np.int64(p.it_host), dead=np.int8(p.dead),
-                      has_state=np.int8(p.state is not None))
+                      has_state=np.int8(p.state is not None),
+                      # elastic geometry/controller: widths round-trip
+                      # through the array shapes; the id counter and
+                      # hysteresis state ride alongside
+                      lane_seq=np.int64(p._lane_seq),
+                      ewma_free=np.float64(p.ewma_free),
+                      hot=np.int64(p.hot), cold=np.int64(p.cold),
+                      cool=np.int64(p.cool))
             if p.state is not None:
                 pt["state"] = jax.tree.map(np.asarray, p.state)
                 pt["run_data"] = jax.tree.map(np.asarray, p.run_data)
@@ -777,6 +1104,11 @@ class StreamingBayesSplitEdge:
         kw.setdefault("time_scale", meta["time_scale"])
         kw.setdefault("quarantine", meta["quarantine"])
         kw.setdefault("max_requeues", meta["max_requeues"])
+        # overload-tolerance config (absent in pre-elastic checkpoints)
+        for k in ("elastic", "n_lanes_min", "n_lanes_max",
+                  "max_pending", "overload", "routing"):
+            if meta.get(k) is not None:
+                kw.setdefault(k, meta[k])
         kw.setdefault("ckpt_dir", ckpt_dir)
         eng = cls(requests, **kw)
         eng._install(ckptlib.load_flat(ckpt_dir, step))
@@ -790,7 +1122,17 @@ class StreamingBayesSplitEdge:
             p.order = np.asarray(pt["order"], np.int64)
             p.gen = np.asarray(pt["gen"], np.int64)
             p.lane_ids = np.asarray(pt["lane_ids"], np.int64)
+            # elastic geometry round-trips through the array shapes:
+            # a pool resumes at its checkpointed width, whatever the
+            # construction-time nominal was
             p.width = int(p.order.shape[0])
+            p._lane_seq = int(pt.get(
+                "lane_seq",
+                p.lane_ids.max() + 1 if p.lane_ids.size else 0))
+            p.ewma_free = float(pt.get("ewma_free", 0.0))
+            p.hot = int(pt.get("hot", 0))
+            p.cold = int(pt.get("cold", 0))
+            p.cool = int(pt.get("cool", 0))
             p.dead = bool(pt["dead"])
             it = int(pt["it"])
             p.it, p.it_host = jnp.int32(it), it
@@ -825,7 +1167,10 @@ class StreamingBayesSplitEdge:
                     "resume feed is shorter than the checkpointed pull "
                     "count — resume() must replay the same feed")
             if j in needed:
-                self._requests[j] = self._validate(sc)
+                # oversized requests are never "needed": they were
+                # rejected (degraded result) the round they were
+                # pulled, before any snapshot could owe them state
+                self._requests[j] = sc
         self._n_pulled = info["n_pulled"]
         self._rr = info["rr"]
         for i in info["pending"]:
@@ -876,6 +1221,16 @@ class StreamingBayesSplitEdge:
                     self._ewma_iter_s = (
                         x if self._ewma_iter_s is None
                         else 0.3 * x + 0.7 * self._ewma_iter_s)
+                # per-pool health/elasticity signals: the EWMA dispatch
+                # wall feeds the routing score and straggler test (and
+                # the monitor, as this pool's real step time); the EWMA
+                # free rate feeds the elastic grow decision
+                pool.ewma_wall = (wall if pool.ewma_wall is None
+                                  else 0.3 * wall + 0.7 * pool.ewma_wall)
+                pool.ewma_free = (0.3 * len(flushed)
+                                  + 0.7 * pool.ewma_free)
+                if self.monitor is not None and not pool.muted:
+                    self.monitor.report(pool.pool_id, wall)
                 lane_log.append(entry)
                 n_dispatches += 1
                 slots_total += entry["lanes"] * iters
@@ -897,9 +1252,16 @@ class StreamingBayesSplitEdge:
             if self.monitor is not None:
                 for p in self._pools:
                     if not p.dead and not p.muted:
-                        self.monitor.report(p.pool_id, 0.0)
+                        # liveness-only ping: real step times reach the
+                        # monitor from the dispatch flush, so the
+                        # straggler statistics stay meaningful
+                        self.monitor.heartbeat(p.pool_id)
                 for h in self.monitor.dead():
                     self._drop_pool(h, reason="heartbeat-timeout")
+                if self.routing == "score":
+                    # failover ladder: backoff -> rebalance -> drop,
+                    # all BEFORE the hard heartbeat timeout would fire
+                    self._failover_step(now)
             else:
                 # a muted pool can only ever be detected by the
                 # monitor; without one, drop it immediately
@@ -907,6 +1269,12 @@ class StreamingBayesSplitEdge:
                     if p.muted and not p.dead:
                         self._drop_pool(p.pool_id, reason="muted")
             self._pull(pending, now)
+            while self._overflow:
+                # host-side degraded answers minted by the pull
+                # (oversized/overload rejections, overflow sheds)
+                res = self._overflow.popleft()
+                emit(res)
+                yield res
             if self.shed_hopeless and pending:
                 # triage BEFORE admission: a request that cannot make
                 # its deadline must not take a lane from one that can
@@ -915,25 +1283,50 @@ class StreamingBayesSplitEdge:
                 for idx, sc in pending:
                     if self._hopeless(sc, now_trace):
                         c["n_shed"] += 1
-                        res = self._shed_result(idx, sc, now_trace)
+                        res = self._host_result(idx, sc, now_trace,
+                                                "shed")
                         emit(res)
                         yield res
                     else:
                         keep.append((idx, sc))
                 pending = self._pending = keep
-            # policy-ordered admission into the emptiest shard (ties
-            # round-robin) — requests bind to exactly one pool, so the
-            # multi-pool path stays collective-free
+            if self.elastic:
+                # resize BEFORE admission so this round's fills see the
+                # new width (grow under pressure, shrink when idle)
+                self._elastic_step(len(pending))
+            # policy-ordered admission into the best shard — requests
+            # bind to exactly one pool, so the multi-pool path stays
+            # collective-free. "score" places by free capacity
+            # discounted by health (EWMA dispatch wall, heartbeat
+            # staleness, backoff); on a healthy fleet it reduces
+            # exactly to the historical most-free/round-robin ("rr").
             fills: dict = {i: [] for i in range(self.n_shards)}
             if pending:
                 queue = list(pending)
                 sel = admission_order(queue, self._now_trace(now),
                                       self.admission_policy)
+                feats = (self._route_features(now)
+                         if self.routing == "score" else None)
+                wall_ref = None
+                if feats is not None:
+                    walls = [p.ewma_wall for p in self._pools
+                             if not p.dead and p.ewma_wall is not None]
+                    wall_ref = (float(np.median(walls))
+                                if walls else None)
                 taken = set()
                 for j in sel:
-                    free = [p.free_count() - len(fills[p.pool_id])
-                            for p in self._pools]
-                    shard = next_admission_shard(free, self._rr)
+                    if feats is not None:
+                        for p in self._pools:
+                            if not (p.dead or p.muted):
+                                feats[p.pool_id]["free"] = (
+                                    p.free_count()
+                                    - len(fills[p.pool_id]))
+                        shard = route_admission_shard(
+                            feats, self._rr, wall_ref=wall_ref)
+                    else:
+                        free = [p.free_count() - len(fills[p.pool_id])
+                                for p in self._pools]
+                        shard = next_admission_shard(free, self._rr)
                     if shard is None:
                         break
                     self._rr = (shard + 1) % self.n_shards
@@ -972,9 +1365,12 @@ class StreamingBayesSplitEdge:
                 if p.dead or p.muted:
                     continue
                 if p.live_count() > 0:
+                    # timing starts BEFORE the chaos hook: an injected
+                    # straggler delay is exactly the slow-host cost the
+                    # per-pool EWMA wall is supposed to see
+                    t_d = time.monotonic()
                     if self.chaos is not None:
                         self.chaos.on_dispatch(self, p)
-                    t_d = time.monotonic()
                     entry = p.dispatch(draining=draining)
                     if entry is not None:
                         entry["queue_depth"] = len(pending)
@@ -986,6 +1382,10 @@ class StreamingBayesSplitEdge:
             self._prestage(pending)
             for p, entry in dispatched:
                 yield from flush(p, entry)
+            while self._overflow:
+                res = self._overflow.popleft()
+                emit(res)
+                yield res
             if not dispatched:
                 inflight = any(
                     bool(np.any(p.order >= 0)) for p in self._pools
@@ -996,6 +1396,10 @@ class StreamingBayesSplitEdge:
                     # only unreachable (muted) pools hold work — wait
                     # for the heartbeat verdict instead of busy-spinning
                     time.sleep(0.005)
+                elif pending:
+                    # every pool is in its failover backoff window —
+                    # wait it out instead of busy-spinning
+                    time.sleep(0.002)
                 elif not pending and self.arrivals is not None:
                     # idle server: sleep until the next arrival
                     t_next = (self.arrivals[self._n_pulled]
@@ -1030,9 +1434,12 @@ class StreamingBayesSplitEdge:
             deadline_hit_rate=(
                 c["deadline_hits"] / c["deadline_total"]
                 if c["deadline_total"] else 1.0),
+            max_pending=self.max_pending,
+            pool_widths=[p.width for p in self._pools],
             **dict(c),
             # bounded traces (the STATS_TRACE_CAP most recent entries)
-            lane_log=list(lane_log), queue_depth=list(queue_depth))
+            lane_log=list(lane_log), queue_depth=list(queue_depth),
+            resize_log=list(self._resize_log))
 
     def run(self) -> List[BOResult]:
         """Drain the whole feed; results in arrival order (the newly

@@ -92,7 +92,7 @@ def replay_arrivals(n: int, frame_period_s: float = 0.02) -> np.ndarray:
 def arrival_trace(kind: str = "poisson", n: int = 100, seed: int = 0,
                   budgets=(6, 10, 14, 20), archs=("vgg19", "resnet101"),
                   fading_std_db: float = 2.5, deadline_slack=None,
-                  **kw) -> dict:
+                  load: float = 1.0, **kw) -> dict:
     """One replayable arrival trace: ``kind`` picks the arrival process
     (``poisson``/``bursty``/``replay``), every arrival draws its channel
     state from the seeded mMobile-like gain trace (``gain_offset_db`` =
@@ -106,7 +106,14 @@ def arrival_trace(kind: str = "poisson", n: int = 100, seed: int = 0,
     replayable input of the deadline-hit-rate benchmark (EDF admission
     + hopeless-lane shedding vs FIFO). The field JSON round-trips like
     every other column; traces without it decode to deadline-free
-    requests."""
+    requests.
+
+    ``load`` scales the offered load: arrival times divide by it, so
+    ``load=4.0`` is the same request mix arriving 4x faster (the
+    overload-study knob — deadlines, drawn AFTER scaling, keep their
+    absolute slack)."""
+    if load <= 0:
+        raise ValueError(f"load must be positive, got {load}")
     if kind == "poisson":
         t = poisson_arrivals(n, seed=seed, **kw)
     elif kind == "bursty":
@@ -116,11 +123,12 @@ def arrival_trace(kind: str = "poisson", n: int = 100, seed: int = 0,
     else:
         raise ValueError(f"unknown arrival kind {kind!r} "
                          f"(one of {ARRIVAL_KINDS})")
+    t = t / load
     gains = synth_mmobile_trace(seed=seed, n_frames=max(n, 450),
                                 fading_std_db=fading_std_db)
     rng = np.random.default_rng(seed + 1)
     out = dict(
-        kind=kind, seed=seed, n=n,
+        kind=kind, seed=seed, n=n, load=float(load),
         t=[float(v) for v in t],
         gain_offset_db=[float(gains[i % len(gains)] - gains.mean())
                         for i in range(n)],

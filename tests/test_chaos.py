@@ -262,6 +262,123 @@ def test_mixed_deadlines_no_wedge_and_custom_policy():
     assert sorted(r.index for r in got2) == list(range(6))
 
 
+# -- chaos event log: determinism, JSON round-trip, replay ---------------------
+
+def test_delay_event_logged_and_harmless():
+    """delay_at is a timing-only fault: the event is logged with its
+    pool and duration, and an order-driven feed's results are bitwise
+    the fault-free run's."""
+    ref = _by_index(StreamingBayesSplitEdge(
+        _reqs(6), n_lanes=4, warm_start=False).serve())
+    ch = FaultInjector(seed=5, delay_at=[2], delay_s=0.01)
+    eng = StreamingBayesSplitEdge(
+        _reqs(6), n_lanes=4, warm_start=False, chaos=ch)
+    got = _by_index(eng.serve())
+    evs = [ev for ev in ch.events if ev["kind"] == "delay"]
+    assert len(evs) == 1
+    assert evs[0]["round"] == 2 and evs[0]["delay_s"] == 0.01
+    assert "pool" in evs[0]
+    _assert_match(got, ref, bitwise=True)
+
+
+def test_storm_event_floods_the_pull():
+    """storm_at collapses the next storm_n arrival times to "now": the
+    storm round's pull sees them all, and every request still emits
+    exactly once."""
+    tr = arrival_trace("poisson", n=12, seed=0, budgets=(6, 10),
+                       rate_hz=5.0)
+    ch = FaultInjector(seed=6, storm_at=[2], storm_n=6)
+    eng = StreamingBayesSplitEdge(
+        requests_from_trace(tr), n_lanes=4, arrivals=tr["t"],
+        time_scale=0.05, chaos=ch)
+    got = list(eng.serve())
+    evs = [ev for ev in ch.events if ev["kind"] == "storm"]
+    assert len(evs) == 1 and evs[0]["n"] >= 1
+    # the storm zeroed those arrival times in place
+    lo = evs[0]["first"]
+    assert all(t == 0.0 for t in eng.arrivals[lo:lo + evs[0]["n"]])
+    assert sorted(r.index for r in got) == list(range(12))
+
+
+def test_storm_without_arrivals_is_skipped():
+    ch = FaultInjector(seed=6, storm_at=[1])
+    eng = StreamingBayesSplitEdge(_reqs(4), n_lanes=4, chaos=ch)
+    list(eng.serve())
+    assert any(ev["kind"] == "storm_skipped" for ev in ch.events)
+
+
+def test_flap_event_mutes_then_unmutes():
+    """flap_at silences a pool's heartbeat for flap_rounds rounds and
+    the unflap is logged when the window expires; without a monitor a
+    muted pool is dropped immediately, so the flap test arms one with
+    a timeout the flap never reaches."""
+    ch = FaultInjector(seed=4, flap_at=[2], flap_rounds=2)
+    eng = StreamingBayesSplitEdge(
+        _reqs(10), n_lanes=8, n_shards=2, warm_start=False, chaos=ch,
+        heartbeat_timeout_s=30.0, route_max_retries=50)
+    got = _by_index(eng.serve())
+    kinds = [ev["kind"] for ev in ch.events]
+    assert "flap" in kinds
+    flap = next(ev for ev in ch.events if ev["kind"] == "flap")
+    assert flap["until"] == flap["round"] + 2
+    if "unflap" in kinds:   # serve may drain before the window expires
+        unflap = next(ev for ev in ch.events if ev["kind"] == "unflap")
+        assert unflap["pool"] == flap["pool"]
+        assert unflap["round"] >= flap["until"]
+    assert sorted(got) == list(range(10))
+
+
+def test_slow_pool_event_slows_dispatches():
+    """slow_pool_at arms a persistent straggler: the event records the
+    pool, window, and per-dispatch cost, and serving still emits every
+    request exactly once."""
+    ch = FaultInjector(seed=7, slow_pool_at=[2], slow_s=0.005,
+                       slow_rounds=3)
+    eng = StreamingBayesSplitEdge(
+        _reqs(10), n_lanes=8, n_shards=2, warm_start=False, chaos=ch)
+    got = _by_index(eng.serve())
+    evs = [ev for ev in ch.events if ev["kind"] == "slow_pool"]
+    assert len(evs) == 1
+    assert evs[0]["until"] == evs[0]["round"] + 3
+    assert evs[0]["slow_s"] == 0.005
+    assert sorted(got) == list(range(10))
+
+
+def test_event_log_roundtrips_and_replays(tmp_path):
+    """The CI artifact contract: save_events/load_events round-trip the
+    {seed, events} log as JSON, and re-running the same (seed,
+    schedule) on the same feed reproduces the event log AND the same
+    admission decisions (per-request pool placement)."""
+    from repro.runtime.chaos import load_events
+
+    def one_run():
+        # no monitor on purpose: the failover ladder's backoff windows
+        # are wall-clock state, while this test pins the round-driven
+        # schedule — a muted (flapped) pool is then dropped at the next
+        # round top, which is deterministic in rounds
+        ch = FaultInjector(seed=9, delay_at=[2], flap_at=[3],
+                           slow_pool_at=[4], flap_rounds=2,
+                           slow_s=0.001)
+        eng = StreamingBayesSplitEdge(
+            _reqs(12), n_lanes=8, n_shards=2, warm_start=False,
+            chaos=ch)
+        got = _by_index(eng.serve())
+        return ch, got
+
+    ch1, got1 = one_run()
+    ch2, got2 = one_run()
+    assert ch1.events == ch2.events, "chaos schedule must be seed-pure"
+    assert sorted(got1) == sorted(got2) == list(range(12))
+    for i in got1:
+        assert got1[i].pool == got2[i].pool, f"request {i} placement"
+    _assert_match(got2, got1, bitwise=True)
+    path = str(tmp_path / "events.json")
+    ch1.save_events(path)
+    back = load_events(path)
+    assert back["seed"] == 9
+    assert back["events"] == ch1.events
+
+
 # -- soak: seeded fault matrix ------------------------------------------------
 
 @pytest.mark.soak

@@ -109,6 +109,52 @@ def test_sigterm_force_save(tmp_path):
         t["pools"]["0"]["order"])
 
 
+def test_save_retries_transient_oserror(tmp_path, monkeypatch):
+    """A flaky disk that fails the first two write attempts must not
+    lose the snapshot: save() rebuilds the staging dir and retries with
+    backoff, and the third attempt commits normally."""
+    import numpy as onp
+    fails = {"left": 2}
+    real_savez = onp.savez
+
+    def flaky_savez(path, **kw):
+        if fails["left"] > 0:
+            fails["left"] -= 1
+            raise OSError("injected transient I/O failure")
+        return real_savez(path, **kw)
+
+    monkeypatch.setattr("repro.checkpoint.ckpt.np.savez", flaky_savez)
+    save(str(tmp_path), 4, _pool_tree(), retries=3,
+         retry_backoff_s=0.001)
+    assert fails["left"] == 0
+    assert latest_step(str(tmp_path)) == 4
+    np.testing.assert_array_equal(
+        unflatten(load_flat(str(tmp_path), 4))["pools"]["0"]["order"],
+        _pool_tree()["pools"]["0"]["order"])
+
+
+def test_save_gives_up_with_warning_no_torn_manifest(tmp_path, monkeypatch):
+    """Persistent I/O failure: save() warns instead of raising (a
+    serving run must not die for one snapshot), leaves no partial
+    commit behind, and latest_step still returns the previous intact
+    commit."""
+    save(str(tmp_path), 3, _pool_tree())          # the previous commit
+
+    def always_fail(path, **kw):
+        raise OSError("injected permanent I/O failure")
+
+    monkeypatch.setattr("repro.checkpoint.ckpt.np.savez", always_fail)
+    with pytest.warns(RuntimeWarning, match="gave up after 2 attempts"):
+        save(str(tmp_path), 7, _pool_tree(), retries=2,
+             retry_backoff_s=0.001)
+    # no torn state: no committed step_7, no leftover staging dir
+    assert latest_step(str(tmp_path)) == 3
+    assert not os.path.exists(str(tmp_path / "step_00000007"))
+    assert not os.path.exists(str(tmp_path / "step_00000007.tmp"))
+    # the previous commit is untouched and loadable
+    assert load_manifest(str(tmp_path), 3)["step"] == 3
+
+
 def test_streaming_resume_rejects_wrong_geometry(tmp_path):
     """End-to-end: a drained server's forced snapshot refuses to
     restore onto a different pool geometry with an error that names the

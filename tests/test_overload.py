@@ -1,0 +1,412 @@
+"""Overload-tolerant elastic serving: elastic lane pools, bounded-queue
+backpressure, and cross-pool failover routing.
+
+The contract extends the established streaming-equivalence contract:
+
+* elastic runs (pools grow/shrink between dispatches) replay-match a
+  fixed-width run on the same feed — bitwise under cold fits, within
+  the studied warm tolerance warm: a resize is a pure re-scheduling of
+  unchanged per-lane programs;
+* the admission queue never exceeds ``max_pending``, whatever the
+  overload policy, and every accepted request still emits exactly one
+  (possibly degraded) result;
+* the ``"score"`` routing policy reduces exactly to the historical
+  most-free/round-robin placement on a healthy fleet, and the failover
+  ladder (backoff -> rebalance -> drop) engages before the hard
+  heartbeat timeout on flapping/slow pools.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.batch_bo import scenario_from_request
+from repro.distributed.sharding import (next_admission_shard,
+                                        route_admission_shard)
+from repro.runtime.chaos import FaultInjector, SimulatedCrash
+from repro.runtime.stream import (StreamingBayesSplitEdge, dedup_results,
+                                  requests_from_trace)
+from repro.wireless.traces import arrival_trace, bursty_arrivals, save_trace
+
+
+def _reqs(n=8, budgets=(10, 14)):
+    return [scenario_from_request("vgg19", (-1) ** i * 1.5,
+                                  budgets[i % len(budgets)], i)
+            for i in range(n)]
+
+
+def _by_index(results):
+    return {r.index: r for r in results}
+
+
+def _assert_match(got, ref, bitwise=True, tol=0.5):
+    assert sorted(got) == sorted(ref), "request set mismatch (wedge?)"
+    for i in ref:
+        if bitwise:
+            assert np.array_equal(
+                np.asarray(got[i].result.utilities),
+                np.asarray(ref[i].result.utilities)), f"request {i}"
+            assert (got[i].result.best_utility
+                    == ref[i].result.best_utility), f"request {i}"
+        else:
+            a = np.asarray(got[i].result.incumbent_trace)
+            b = np.asarray(ref[i].result.incumbent_trace)
+            m = min(a.size, b.size)
+            assert np.max(np.abs(a[:m] - b[:m])) <= tol, f"request {i}"
+
+
+# -- elastic pool sizing --------------------------------------------------------
+
+def test_elastic_grow_replay_matches_fixed_cold():
+    """An elastic server that starts at 2 lanes and grows under queue
+    pressure emits bitwise the results of the fixed 2-lane server on
+    the same feed (cold fits): resizes are pure re-scheduling."""
+    feed = _reqs(12)
+    ref = _by_index(StreamingBayesSplitEdge(
+        feed, n_lanes=2, warm_start=False).serve())
+    eng = StreamingBayesSplitEdge(
+        _reqs(12), n_lanes=2, warm_start=False,
+        elastic=True, n_lanes_min=2, n_lanes_max=8)
+    got = _by_index(eng.serve())
+    st = eng.stream_stats()
+    assert st["n_grows"] >= 1, "feed never pressured the pool to grow"
+    assert st["resize_log"], "grow events must land in the stats trace"
+    assert max(st["pool_widths"]) <= 8
+    _assert_match(got, ref, bitwise=True)
+
+
+def test_elastic_warm_within_tolerance_of_fixed():
+    ref = _by_index(StreamingBayesSplitEdge(
+        _reqs(10), n_lanes=2).serve())
+    eng = StreamingBayesSplitEdge(
+        _reqs(10), n_lanes=2, elastic=True, n_lanes_min=2, n_lanes_max=8)
+    got = _by_index(eng.serve())
+    assert eng.stream_stats()["n_grows"] >= 1
+    _assert_match(got, ref, bitwise=False, tol=0.5)
+
+
+def test_elastic_controller_hysteresis_and_cooldown():
+    """Controller unit semantics, no dispatches needed: sustained queue
+    pressure grows the pool only after GROW_PATIENCE rounds, a resize
+    opens a cooldown window, and a sustained idle pool shrinks back to
+    the floor after SHRINK_PATIENCE rounds."""
+    eng = StreamingBayesSplitEdge(
+        _reqs(2), n_lanes=4, elastic=True, n_lanes_min=2, n_lanes_max=16)
+    p = eng._pools[0]
+    assert p.width == 4
+    eng._elastic_step(50)
+    assert p.width == 4 and p.hot == 1     # patience not yet reached
+    eng._elastic_step(50)
+    assert p.width == 8                    # grow fires, one doubling
+    assert p.cool == eng.ELASTIC_COOLDOWN and p.hot == 0
+    for _ in range(eng.ELASTIC_COOLDOWN):  # pressure ignored in cooldown
+        eng._elastic_step(50)
+    assert p.width == 8
+    eng._elastic_step(50)
+    eng._elastic_step(50)
+    assert p.width == 16                   # second doubling, at the cap
+    eng._elastic_step(50)
+    eng._elastic_step(50)
+    assert p.width == 16                   # never past n_lanes_max
+    p.cool = 0
+    for _ in range(eng.ELASTIC_SHRINK_PATIENCE):
+        eng._elastic_step(0)
+    assert p.width == 2                    # empty pool snaps to the floor
+    for _ in range(eng.ELASTIC_COOLDOWN + eng.ELASTIC_SHRINK_PATIENCE):
+        eng._elastic_step(0)
+    assert p.width == 2                    # never below n_lanes_min
+    st_counters = eng._counters
+    assert st_counters["n_grows"] == 2 and st_counters["n_shrinks"] == 1
+    assert len(eng._resize_log) == 3
+
+
+def test_elastic_resize_preserves_occupied_lanes():
+    """Mid-run grow/shrink at the pool level: occupied lanes ride along
+    (order/gen/lane ids and device rows), tail lanes come up free with
+    fresh ids, and draining the pool afterwards emits every request."""
+    eng = StreamingBayesSplitEdge(_reqs(2), n_lanes=2, warm_start=False)
+    ref = _by_index(StreamingBayesSplitEdge(
+        _reqs(2), n_lanes=2, warm_start=False).serve())
+    p = eng._pools[0]
+    feed = _reqs(2)
+    eng._requests = {0: feed[0], 1: feed[1]}
+    p.admit([(0, feed[0]), (1, feed[1])])
+    order0, gen0, ids0 = p.order.copy(), p.gen.copy(), p.lane_ids.copy()
+    p.resize_to(8)
+    assert p.width == 8
+    np.testing.assert_array_equal(p.order[:2], order0)
+    np.testing.assert_array_equal(p.order[2:], -1)
+    np.testing.assert_array_equal(p.gen[:2], gen0)
+    np.testing.assert_array_equal(p.gen[2:], 0)
+    assert len(set(p.lane_ids.tolist())) == 8, "lane ids must not collide"
+    assert not np.asarray(p.state["active"])[2:].any()
+    with pytest.raises(ValueError):
+        p.resize_to(1)                     # 2 occupants can't fit 1 lane
+    p.resize_to(2)                         # shrink back
+    np.testing.assert_array_equal(p.order, order0)
+    np.testing.assert_array_equal(p.lane_ids, ids0)
+    got = []
+    while p.live_count() > 0:
+        p.dispatch(draining=True)
+        got += p.collect()[0]
+    got += p.collect()[0]
+    _assert_match(_by_index(got), ref, bitwise=True)
+
+
+def test_elastic_geometry_roundtrips_through_resume(tmp_path):
+    """Kill an elastic server after it grew; resume() restores each
+    pool at its checkpointed width and the merged deduped stream is
+    bitwise the fixed-width fault-free run."""
+    ref = _by_index(StreamingBayesSplitEdge(
+        _reqs(12), n_lanes=2, warm_start=False).serve())
+    ch = FaultInjector(seed=0, kill_at=[5])
+    eng = StreamingBayesSplitEdge(
+        _reqs(12), n_lanes=2, warm_start=False, chaos=ch,
+        elastic=True, n_lanes_min=2, n_lanes_max=8,
+        ckpt_dir=str(tmp_path), ckpt_every=1)
+    got = []
+    with pytest.raises(SimulatedCrash):
+        for r in eng.serve():
+            got.append(r)
+    grown = [p.width for p in eng._pools]
+    resumed = StreamingBayesSplitEdge.resume(
+        str(tmp_path), _reqs(12), warm_start=False)
+    assert resumed.elastic and resumed.n_lanes_max == 8
+    assert [p.width for p in resumed._pools] == grown
+    got2 = list(resumed.serve())
+    merged = _by_index(dedup_results(got + got2))
+    _assert_match(merged, ref, bitwise=True)
+
+
+def test_elastic_validation():
+    with pytest.raises(ValueError, match="n_lanes_min"):
+        StreamingBayesSplitEdge(_reqs(2), n_lanes=4, elastic=True,
+                                n_lanes_min=3, n_lanes_max=8)
+    with pytest.raises(ValueError, match="n_lanes_min <= n_lanes"):
+        StreamingBayesSplitEdge(_reqs(2), n_lanes=2, elastic=True,
+                                n_lanes_min=4, n_lanes_max=8)
+
+
+# -- bounded admission queue ----------------------------------------------------
+
+def _flood(n=10, budgets=(10, 12)):
+    """n requests all arriving at t=0: the worst-case flash crowd."""
+    return _reqs(n, budgets), [0.0] * n
+
+
+@pytest.mark.parametrize("overload", ["block", "reject", "shed-oldest"])
+def test_bounded_queue_holds_the_line(overload):
+    """Whatever the policy, pending never exceeds ``max_pending`` and
+    every request emits exactly one result."""
+    feed, arrivals = _flood(10)
+    eng = StreamingBayesSplitEdge(
+        feed, n_lanes=2, arrivals=arrivals, max_pending=3,
+        overload=overload)
+    got = list(eng.serve())
+    st = eng.stream_stats()
+    assert st["max_pending"] == 3
+    assert st["queue_depth_max"] <= 3
+    assert sorted(r.index for r in got) == list(range(10))
+    if overload == "block":
+        assert st["n_rejected"] == 0 and st["n_overflow_shed"] == 0
+        assert not any(r.degraded for r in got)
+
+
+def test_overload_reject_emits_degraded_results():
+    feed, arrivals = _flood(10)
+    eng = StreamingBayesSplitEdge(
+        feed, n_lanes=2, arrivals=arrivals, max_pending=2,
+        overload="reject")
+    got = list(eng.serve())
+    st = eng.stream_stats()
+    rejected = [r for r in got if r.degraded]
+    assert st["n_rejected"] == len(rejected) >= 1
+    assert all(r.reason == "rejected" and r.result.n_evals == 0
+               for r in rejected)
+    assert sorted(r.index for r in got) == list(range(10))
+
+
+def test_overload_shed_oldest_prefers_hopeless():
+    """"shed-oldest" evicts a queued request per excess arrival —
+    hopeless-first when deadlines are in play — and both the evicted
+    and the admitted request emit exactly once."""
+    feed, arrivals = _flood(10)
+    # give the flood deadlines: some queued requests are already
+    # hopeless when the queue overflows, and the eviction must prefer
+    # them (they'd be shed by the deadline triage anyway)
+    feed = [scenario_from_request("vgg19", (-1) ** i * 1.5,
+                                  (10, 12)[i % 2], i,
+                                  deadline_s=(-1.0 if i in (0, 1)
+                                              else 1e9))
+            for i in range(10)]
+    eng = StreamingBayesSplitEdge(
+        feed, n_lanes=2, arrivals=arrivals, max_pending=2,
+        overload="shed-oldest")
+    got = list(eng.serve())
+    st = eng.stream_stats()
+    assert st["queue_depth_max"] <= 2
+    assert st["n_overflow_shed"] >= 1
+    shed = [r for r in got if r.degraded]
+    assert all(r.reason == "shed" for r in shed)
+    # the hopeless (already-expired) requests are evicted first
+    assert {0, 1} <= {r.index for r in shed}
+    assert sorted(r.index for r in got) == list(range(10))
+
+
+def test_block_policy_is_pure_backpressure_no_loss():
+    """Blocked arrivals wait in the feed and are served later: results
+    match the unbounded server's bitwise (cold fits)."""
+    feed, arrivals = _flood(8)
+    ref = _by_index(StreamingBayesSplitEdge(
+        _reqs(8, (10, 12)), n_lanes=2, arrivals=list(arrivals),
+        warm_start=False).serve())
+    eng = StreamingBayesSplitEdge(
+        feed, n_lanes=2, arrivals=arrivals, warm_start=False,
+        max_pending=2, overload="block")
+    got = _by_index(eng.serve())
+    _assert_match(got, ref, bitwise=True)
+
+
+def test_max_pending_validation():
+    with pytest.raises(ValueError, match="max_pending"):
+        StreamingBayesSplitEdge(_reqs(2), n_lanes=2, max_pending=0)
+    with pytest.raises(ValueError, match="overload"):
+        StreamingBayesSplitEdge(_reqs(2), n_lanes=2, overload="panic")
+    with pytest.raises(ValueError, match="routing"):
+        StreamingBayesSplitEdge(_reqs(2), n_lanes=2, routing="magic")
+
+
+# -- failover routing -----------------------------------------------------------
+
+def test_route_healthy_fleet_reduces_to_most_free_rr():
+    """Without health signals every score is the integer free-lane
+    count: route_admission_shard picks exactly next_admission_shard's
+    pool for any (free, rr) configuration."""
+    for free in ([3, 3, 3], [0, 2, 1], [1, 0, 0], [0, 0, 0],
+                 [2, 2, 0], [5, 1, 5]):
+        for rr in range(3):
+            feats = [dict(free=f) for f in free]
+            assert (route_admission_shard(feats, rr)
+                    == next_admission_shard(free, rr)), (free, rr)
+
+
+def test_route_skips_backoff_and_discounts_slow_stale():
+    # a pool in its backoff window is never placed on
+    assert route_admission_shard(
+        [dict(free=4, backoff=True), dict(free=1)], 0) == 1
+    # all pools unavailable -> None
+    assert route_admission_shard(
+        [dict(free=0), dict(free=3, backoff=True)], 0) is None
+    # a flagged straggler (EWMA wall >> fleet median) loses a free-lane
+    # tie to the healthy pool
+    assert route_admission_shard(
+        [dict(free=2, ewma_wall_s=9.0), dict(free=2)], 0,
+        wall_ref=1.0) == 1
+    # heartbeat staleness discounts the same way
+    assert route_admission_shard(
+        [dict(free=2, stale_frac=3.0), dict(free=2)], 0) == 1
+    # ...but a big enough capacity edge still wins over the discount
+    assert route_admission_shard(
+        [dict(free=16, stale_frac=0.5), dict(free=1)], 0) == 0
+
+
+def test_score_routing_matches_rr_on_healthy_fleet_end_to_end():
+    """Engine-level determinism guard: with no monitor and no faults,
+    routing="score" (the default) produces the exact same placement as
+    the historical round-robin path."""
+    a = _by_index(StreamingBayesSplitEdge(
+        _reqs(10), n_lanes=8, n_shards=2, warm_start=False,
+        routing="rr").serve())
+    b = _by_index(StreamingBayesSplitEdge(
+        _reqs(10), n_lanes=8, n_shards=2, warm_start=False,
+        routing="score").serve())
+    _assert_match(b, a, bitwise=True)
+    for i in a:
+        assert a[i].pool == b[i].pool and a[i].lane == b[i].lane
+
+
+def test_failover_ladder_drops_muted_pool_before_heartbeat_timeout():
+    """A permanently muted pool walks the whole ladder — backoff
+    strikes, a rebalance of its in-flight work at strike 2, then the
+    established drop-pool path — long before the (30 s) heartbeat
+    timeout, and the stream still replay-matches the fault-free run."""
+    ref = _by_index(StreamingBayesSplitEdge(
+        _reqs(10), n_lanes=8, n_shards=2, warm_start=False).serve())
+    ch = FaultInjector(seed=4, mute_pool_at=[2])
+    # near-zero backoff windows + a short ladder so all three rungs
+    # land within the run: strike 1 backs off, strike 2 rebalances,
+    # strike 3 (> route_max_retries) drops the pool
+    eng = StreamingBayesSplitEdge(
+        _reqs(10), n_lanes=8, n_shards=2, warm_start=False, chaos=ch,
+        heartbeat_timeout_s=30.0, route_backoff_s=0.001,
+        route_max_retries=2)
+    got = _by_index(eng.serve())
+    st = eng.stream_stats()
+    assert st["n_backoffs"] >= 2
+    assert st["n_rebalanced"] >= 1
+    assert st["n_pool_drops"] == 1
+    assert sorted(got) == list(range(10))
+    _assert_match(got, ref, bitwise=True)
+
+
+def test_flapping_pool_backs_off_and_recovers_without_drop():
+    """A pool that flaps (mutes then recovers within the flap window)
+    takes backoff strikes but is NOT dropped when the ladder is given
+    retry headroom — and every request still emits exactly once."""
+    ch = FaultInjector(seed=4, flap_at=[2], flap_rounds=2)
+    eng = StreamingBayesSplitEdge(
+        _reqs(10), n_lanes=8, n_shards=2, warm_start=False, chaos=ch,
+        heartbeat_timeout_s=30.0, route_backoff_s=0.2,
+        route_max_retries=50)
+    got = _by_index(eng.serve())
+    st = eng.stream_stats()
+    kinds = [ev["kind"] for ev in ch.events]
+    assert "flap" in kinds
+    assert st["n_backoffs"] >= 1
+    assert st["n_pool_drops"] == 0
+    assert sorted(got) == list(range(10))
+
+
+# -- soak: bursty overload at 4x nominal load -----------------------------------
+
+@pytest.mark.soak
+def test_soak_overload_bursty_4x(tmp_path):
+    """The CI overload job: a deadlined bursty trace at 4x nominal
+    load through a bounded-queue elastic server vs the same feed
+    through the fixed-width server. Invariants: the queue never
+    exceeds the bound, every request emits exactly once, and elastic
+    serving does not lose deadline hit rate. On failure the arrival
+    trace and the queue-depth log are the replay artifacts."""
+    seed = int(os.environ.get("CHAOS_SEED", "0"))
+    art_dir = os.environ.get("SOAK_ARTIFACT_DIR", str(tmp_path))
+    tr = arrival_trace("bursty", n=60, seed=seed, budgets=(6, 10, 14),
+                       deadline_slack=(1.0, 6.0), load=4.0)
+    save_trace(tr, os.path.join(art_dir, "overload_trace.json"))
+    stats = {}
+    try:
+        for label, elastic in (("fixed", False), ("elastic", True)):
+            eng = StreamingBayesSplitEdge(
+                requests_from_trace(tr), n_lanes=8, arrivals=tr["t"],
+                admission_policy="edf", shed_hopeless=True,
+                max_pending=16, overload="shed-oldest",
+                elastic=elastic, n_lanes_min=4 if elastic else None,
+                n_lanes_max=32 if elastic else None)
+            got = list(eng.serve())
+            st = eng.stream_stats()
+            stats[label] = st
+            assert sorted(r.index for r in got) == list(range(60)), label
+            assert st["queue_depth_max"] <= 16, label
+    finally:
+        import json
+        with open(os.path.join(art_dir, "overload_queue_depth.json"),
+                  "w") as f:
+            json.dump({k: dict(queue_depth=v.get("queue_depth"),
+                               resize_log=v.get("resize_log"),
+                               deadline_hit_rate=v.get(
+                                   "deadline_hit_rate"))
+                       for k, v in stats.items()}, f)
+    assert stats["elastic"]["n_grows"] >= 1
+    # elastic capacity must not LOSE deadlines vs the fixed pool
+    # (generous slack: wall-clock noise moves individual hits)
+    assert (stats["elastic"]["deadline_hit_rate"]
+            >= stats["fixed"]["deadline_hit_rate"] - 0.25)

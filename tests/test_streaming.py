@@ -213,19 +213,26 @@ def test_stream_ledger_rows_match_offline_per_scenario():
 
 
 def test_request_over_budget_max_rejected():
+    # oversized requests degrade instead of killing the feed: one
+    # result, reason "rejected", zero evaluations
     eng = StreamingBayesSplitEdge(
         [Scenario(default_vgg19_problem(), budget=30)], n_lanes=1,
         budget_max=20, l_pad=37)
-    with pytest.raises(ValueError):
-        eng.run()
+    res = list(eng.serve())
+    assert len(res) == 1
+    assert res[0].degraded and res[0].reason == "rejected"
+    assert res[0].result.n_evals == 0
+    assert eng.stream_stats()["n_rejected"] == 1
 
 
 def test_request_arch_exceeding_l_pad_rejected():
     eng = StreamingBayesSplitEdge(
         [Scenario(default_vgg19_problem(), budget=10)], n_lanes=1,
         budget_max=12, l_pad=20)
-    with pytest.raises(ValueError):
-        eng.run()
+    res = list(eng.serve())
+    assert len(res) == 1
+    assert res[0].degraded and res[0].reason == "rejected"
+    assert res[0].result.n_evals == 0
 
 
 def test_iterator_feed_requires_static_shapes():

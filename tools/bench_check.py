@@ -55,7 +55,23 @@ gate breaks:
     result;
   * quarantine_never_wedges — a lane driven past every repair rung
     retires with a degraded best-effort answer instead of wedging the
-    server (every request still emits exactly once).
+    server (every request still emits exactly once);
+  * elastic_matches_fixed — an elastic server (grow/shrink between
+    dispatches, hysteresis controller) replay-matches the fixed-width
+    server on the same feed (bitwise cold, within the studied trace
+    tolerance warm) while actually resizing (n_grows >= 1);
+  * overload_bounded_queue — under a bursty trace at 4x nominal load
+    the admission queue never exceeds max_pending and every request
+    still emits exactly one (possibly degraded) result;
+  * failover_routing_hit_rate — under a flapped then slowed pool,
+    score routing's deadline hit rate does not lose to round-robin
+    (wall-clock paced: best of <=3 attempts like deadline_hit_rate)
+    and both schedules emit exactly once;
+  * trend_deadline_hit_rate / trend_streaming_throughput — the two
+    serving headline numbers (EDF deadline hit rate, streaming
+    arrivals/s) must not regress more than 10% against the median of
+    the last 5 bench_history.jsonl records (skipped until the history
+    holds 5 comparable records or with --no-history).
 
 The gate outcome is also emitted as ONE machine-readable line::
 
@@ -191,6 +207,59 @@ def main() -> int:
     gate("quarantine_never_wedges", c["quarantine_no_wedge"],
          n_quarantined=c["n_quarantined"],
          poison_n_requeued=c["poison_n_requeued"])
+    # overload tolerance: elastic pools, bounded queue, failover routing
+    o = r["overload"]
+    gate("elastic_matches_fixed", o["elastic_matches_fixed"],
+         elastic_cold_bitwise=o["elastic_cold_bitwise"],
+         elastic_warm_within_tol=o["elastic_warm_within_tol"],
+         n_grows=o["elastic_n_grows"], n_shrinks=o["elastic_n_shrinks"],
+         elastic_overhead=o["elastic_overhead"],
+         resize_log=o["elastic_resize_log"])
+    gate("overload_bounded_queue",
+         o["queue_bounded"] and o["overload_exactly_once"],
+         queue_depth_max=o["queue_depth_max"],
+         max_pending=o["max_pending"],
+         n_overflow_shed=o["n_overflow_shed"],
+         overload_hit_rate=o["overload_hit_rate"],
+         exactly_once=o["overload_exactly_once"])
+    gate("failover_routing_hit_rate",
+         (o["routing_hit_rate"] >= o["rr_hit_rate"]
+          and o["failover_exactly_once"]),
+         routing_hit_rate=o["routing_hit_rate"],
+         rr_hit_rate=o["rr_hit_rate"], failover=o["failover"])
+
+    # perf trend: the serving headline numbers must not regress >10%
+    # against the median of the last 5 recorded runs. The history is
+    # read BEFORE this run's record is appended, so the gate compares
+    # against prior runs only; with fewer than 5 comparable records
+    # (or --no-history) the trend gates are skipped, not failed.
+    hist = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        os.pardir, "benchmarks", "artifacts",
+                        "bench_history.jsonl")
+    prior = []
+    if args.history and os.path.exists(hist):
+        with open(hist) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    try:
+                        prior.append(json.loads(line))
+                    except ValueError:
+                        continue
+
+    def trend(name: str, current: float, key: str) -> None:
+        vals = [rec[key] for rec in prior
+                if isinstance(rec.get(key), (int, float))][-5:]
+        if len(vals) < 5:
+            return
+        med = sorted(vals)[2]
+        gate(name, current >= 0.9 * med, current=current,
+             median_of_last_5=med, last_5=vals)
+
+    trend("trend_deadline_hit_rate", c["edf_hit_rate"],
+          "chaos_edf_hit_rate")
+    trend("trend_streaming_throughput", s["arrivals_per_s"],
+          "streaming_arrivals_per_s")
 
     sharded = ("n/a" if r["sharded_s"] is None
                else f"{r['sharded_s']:.2f}s/{r['n_devices']}dev")
@@ -211,15 +280,16 @@ def main() -> int:
           f"chaos replay-match={r['chaos_replay_match']} "
           f"(recovery {c['recovery_overhead']}x, "
           f"edf {c['edf_hit_rate']} vs fifo {c['fifo_hit_rate']}), "
+          f"overload elastic-match={o['elastic_matches_fixed']} "
+          f"queue {o['queue_depth_max']}/{o['max_pending']} "
+          f"routing {o['routing_hit_rate']} vs rr {o['rr_hit_rate']}, "
           f"zero-rejits={r['zero_rejits_after_warmup']}")
     print("BENCH_CHECK_SUMMARY " + json.dumps(gates, sort_keys=True))
 
     if args.history:
         # one JSONL record per CI run — the cross-PR perf trajectory
-        # (uploaded as a workflow artifact by .github/workflows/ci.yml)
-        hist = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                            os.pardir, "benchmarks", "artifacts",
-                            "bench_history.jsonl")
+        # (uploaded as a workflow artifact by .github/workflows/ci.yml;
+        # appended AFTER the trend gates read the prior records)
         os.makedirs(os.path.dirname(hist), exist_ok=True)
         record = dict(
             ts=int(time.time()),
@@ -234,6 +304,10 @@ def main() -> int:
             chaos_recovery_overhead=c["recovery_overhead"],
             chaos_edf_hit_rate=c["edf_hit_rate"],
             chaos_fifo_hit_rate=c["fifo_hit_rate"],
+            overload_elastic_overhead=o["elastic_overhead"],
+            overload_queue_depth_max=o["queue_depth_max"],
+            overload_routing_hit_rate=o["routing_hit_rate"],
+            overload_rr_hit_rate=o["rr_hit_rate"],
             gates=gates)
         with open(hist, "a") as f:
             f.write(json.dumps(record, sort_keys=True) + "\n")
