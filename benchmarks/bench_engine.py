@@ -12,7 +12,10 @@ queue depth and lane occupancy over time), a crash-safety section
 the EDF-vs-FIFO deadline A/B) and an overload-tolerance section
 (``run_overload``: elastic-pool replay parity, bounded-queue
 backpressure at 4x load, score-vs-round-robin failover routing under
-a flapped+slowed pool). Emits the canonical artifact
+a flapped+slowed pool) and a transfer-learning section
+(``run_transfer``: prior-bank warm-vs-cold evals-to-target A/B on a
+held-out mMobile replay slice, per surrogate family, plus the bitwise
+cold-fallback check). Emits the canonical artifact
 ``benchmarks/artifacts/BENCH_bo_engine.json`` with wall-clock, speedups,
 per-iteration compile counts (must be flat after warmup => zero re-jits
 in the BO loop), warm-start fit-step accounting, candidates/sec,
@@ -656,6 +659,96 @@ def run_overload(repeats: int = 1, n_lanes: int = 4) -> dict:
     )
 
 
+def run_transfer(repeats: int = 1) -> dict:
+    """Transfer-learned prior bank A/B on a held-out slice of an
+    mMobile replay trace, per surrogate family (PR 8).
+
+    A bank is populated on the trace's training slice, frozen (a pure
+    scenario -> prior function), and the held-out slice is run cold vs
+    bank-warmed through the whole-run engine. Two gates feed off the
+    report:
+
+    * ``warmprior_matches_cold_off`` — a never-hitting (frozen empty)
+      bank reproduces the ``bank=None`` run bitwise on every surrogate
+      (the cold-fallback contract);
+    * ``warmprior_fewer_evals`` — evaluations-to-target (first incumbent
+      index reaching the cold run's final best utility) is strictly
+      smaller on at least one held-out workload and never larger on any.
+    """
+    from repro.core.engine_config import EngineConfig
+    from repro.core.priorbank import PriorBank
+    from repro.core.surrogate import RandomFeatureSurrogate
+    from repro.runtime.stream import requests_from_trace
+    from repro.wireless.traces import arrival_trace
+
+    tr = arrival_trace("replay", n=24, seed=0, budgets=(6, 8, 10),
+                       archs=("vgg19",))
+    reqs = requests_from_trace(tr)
+    train, held = reqs[:18], reqs[18:]
+
+    def evals_to(res, target, tol=1e-9):
+        inc = np.asarray(res.incumbent_trace)
+        hit = np.flatnonzero(inc >= target - tol)
+        return int(hit[0]) + 1 if hit.size else len(inc) + 1
+
+    surrogates = dict(gp=None, rff=RandomFeatureSurrogate())
+    per_surrogate = {}
+    for name, surr in surrogates.items():
+        cfg = EngineConfig(warm_start=False, surrogate=surr)
+        cold = WholeRunBayesSplitEdge(held, cfg).run()
+        # bitwise-off contract: a frozen empty bank never hits and
+        # never records — the run must be the bank=None program exactly
+        off = WholeRunBayesSplitEdge(
+            held, cfg, bank=PriorBank(frozen=True)).run()
+        matches_off = _bitwise_results(cold, off)
+
+        # populate on the training slice (2 dB gain buckets so the
+        # held-out frames land on seen keys), then freeze for the A/B
+        bank = PriorBank(gain_quantum_db=2.0)
+        t0 = time.time()
+        WholeRunBayesSplitEdge(train, cfg, bank=bank).run()
+        populate_s = time.time() - t0
+        bank.freeze()
+        h0 = bank.stats()["hits"]
+        warm = WholeRunBayesSplitEdge(held, cfg, bank=bank).run()
+        hits = bank.stats()["hits"] - h0
+
+        cold_e = [evals_to(c, c.best_utility) for c in cold]
+        warm_e = [evals_to(w, c.best_utility)
+                  for c, w in zip(cold, warm)]
+        per_surrogate[name] = dict(
+            matches_cold_off=bool(matches_off),
+            heldout_hit_rate=round(hits / len(held), 3),
+            bank_keys=len(bank),
+            populate_s=round(populate_s, 4),
+            cold_evals_to_target=cold_e,
+            warm_evals_to_target=warm_e,
+            cold_evals_total=int(np.sum(cold_e)),
+            warm_evals_total=int(np.sum(warm_e)),
+            never_more=bool(all(w <= c
+                                for w, c in zip(warm_e, cold_e))),
+            strictly_fewer_on=int(sum(w < c
+                                      for w, c in zip(warm_e, cold_e))),
+            warm_never_worse_utility=bool(all(
+                w.best_utility >= c.best_utility - 1e-9
+                for c, w in zip(cold, warm))),
+        )
+
+    return dict(
+        n_train=len(train), n_heldout=len(held),
+        trace_kind=tr["kind"], budgets=sorted(set(tr["budget"])),
+        surrogates=per_surrogate,
+        matches_cold_off=bool(all(v["matches_cold_off"]
+                                  for v in per_surrogate.values())),
+        fewer_evals=bool(
+            all(v["never_more"] for v in per_surrogate.values())
+            and any(v["strictly_fewer_on"] >= 1
+                    for v in per_surrogate.values())),
+        warm_never_worse=bool(all(v["warm_never_worse_utility"]
+                                  for v in per_surrogate.values())),
+    )
+
+
 def run_mixed(budget: int = 12, seeds=(0, 1), repeats: int = 1) -> dict:
     """Mixed-architecture batch (VGG19 + ResNet101, max-L padded layout):
     times one heterogeneous batch through both engines and checks it
@@ -703,7 +796,8 @@ def run(n_scenarios: int = 16, budget: int = 20, repeats: int = 1,
         n_legacy: int | None = None, save: bool = True,
         mixed: bool = True, compaction: bool = True,
         hetero: bool = True, streaming: bool = True,
-        chaos: bool = True, overload: bool = True) -> dict:
+        chaos: bool = True, overload: bool = True,
+        transfer: bool = True) -> dict:
     mon = CompileMonitor()
 
     # -- seed baseline: per-iteration recompiling sequential loop ------------
@@ -821,6 +915,8 @@ def run(n_scenarios: int = 16, budget: int = 20, repeats: int = 1,
     chaos_report = run_chaos(repeats=repeats) if chaos else None
     # -- overload tolerance: elastic pools, bounded queue, failover routing --
     overload_report = run_overload(repeats=repeats) if overload else None
+    # -- transfer-learned prior bank: held-out warm-vs-cold A/B --------------
+    transfer_report = run_transfer(repeats=repeats) if transfer else None
 
     n_cand = 64 * 64 + scs[0].problem.L + 45
     evals = sum(r.n_evals for r in bat_results)
@@ -936,6 +1032,15 @@ def run(n_scenarios: int = 16, budget: int = 20, repeats: int = 1,
             None if overload_report is None
             else bool(overload_report["queue_bounded"]
                       and overload_report["overload_exactly_once"])),
+        # transfer-learned prior bank: warm-vs-cold evals-to-target on a
+        # held-out mMobile replay slice, per surrogate family
+        transfer=transfer_report,
+        warmprior_matches_cold_off=(
+            None if transfer_report is None
+            else transfer_report["matches_cold_off"]),
+        warmprior_fewer_evals=(
+            None if transfer_report is None
+            else transfer_report["fewer_evals"]),
         compile_counters=compile_counters(),
     )
     if save:
@@ -979,11 +1084,17 @@ def main():
                     help="run the overload-tolerance section (elastic "
                          "pool parity, bounded-queue backpressure, "
                          "failover routing A/B; --no-overload disables)")
+    ap.add_argument("--transfer", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="run the transfer-learned prior-bank section "
+                         "(held-out warm-vs-cold evals-to-target A/B "
+                         "per surrogate; --no-transfer disables)")
     args = ap.parse_args()
     r = run(args.scenarios, args.budget, args.repeats, args.legacy,
             mixed=args.mixed_arch, compaction=args.compaction,
             hetero=args.hetero, streaming=args.streaming,
-            chaos=args.chaos, overload=args.overload)
+            chaos=args.chaos, overload=args.overload,
+            transfer=args.transfer)
     seed_s = r["sequential_seed_s"]
     print(f"seed-sequential {'n/a' if seed_s is None else f'{seed_s:.2f}s'}"
           f"  sequential {r['sequential_s']:.2f}s"
@@ -1045,6 +1156,15 @@ def main():
               f"{o['queue_depth_max']}/{o['max_pending']} bounded "
               f"{o['queue_bounded']}, routing hit-rate score "
               f"{o['routing_hit_rate']} vs rr {o['rr_hit_rate']}")
+    if r["transfer"] is not None:
+        t = r["transfer"]
+        per = ", ".join(
+            f"{k}: {v['warm_evals_total']}/{v['cold_evals_total']} evals "
+            f"(hit {v['heldout_hit_rate']})"
+            for k, v in t["surrogates"].items())
+        print(f"transfer bank {t['n_train']} train / {t['n_heldout']} "
+              f"held-out: cold-off bitwise {t['matches_cold_off']}, "
+              f"fewer-evals {t['fewer_evals']} [{per}]")
     print(f"matern-score {r['matern_score_candidates_per_sec']:,} cand/s  "
           f"BO loop {r['bo_candidates_per_sec']:,} cand/s")
     return r

@@ -147,6 +147,33 @@ def load_flat(ckpt_dir: str, step: int) -> dict:
     return {k: npz[k] for k in npz.files}
 
 
+def load_named(ckpt_dir: str, kind: str,
+               version: Optional[int] = None) -> tuple:
+    """Load the latest committed checkpoint written FOR a specific
+    consumer: the manifest's ``metadata["kind"]`` must equal ``kind``
+    (and ``metadata["version"]`` must equal ``version`` when given)
+    before any array bytes are read — a directory holding some other
+    consumer's snapshots (or an incompatible format revision) is
+    rejected with a clear error instead of silently misinterpreted.
+    Returns ``(step, tree, metadata)`` with the nested-dict tree
+    rebuilt via :func:`unflatten`; raises ``FileNotFoundError`` when
+    the directory holds no committed step and ``ValueError`` on a
+    kind/version mismatch. The prior bank's restore path."""
+    step = latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no committed checkpoint under {ckpt_dir}")
+    meta = load_manifest(ckpt_dir, step).get("metadata", {})
+    if meta.get("kind") != kind:
+        raise ValueError(
+            f"checkpoint at {ckpt_dir} step {step} has kind "
+            f"{meta.get('kind')!r}, expected {kind!r}")
+    if version is not None and meta.get("version") != version:
+        raise ValueError(
+            f"checkpoint at {ckpt_dir} step {step} has {kind} version "
+            f"{meta.get('version')!r}, expected {version!r}")
+    return step, unflatten(load_flat(ckpt_dir, step)), meta
+
+
 def unflatten(flat: dict) -> dict:
     """Rebuild the nested-dict tree from a flat ``{a/b/c: leaf}`` dict
     (inverse of the dict part of the save-time flatten)."""

@@ -61,14 +61,20 @@ def ucb(mu, sigma, beta):
 
 
 def hybrid_scores(gp, cand, best_feasible, penalties, lam_base, lam_g,
-                  lam_p, beta, y_scale):
+                  lam_p, beta, y_scale, surrogate=None):
     """Vectorized hybrid acquisition over candidates.
 
     cand: (N,2); penalties: (N,) raw constraint violations (Eq. 11).
     EI/UCB/grad terms operate on the standardized scale (divide by the
     GP's y std) so the weights are problem-scale independent.
+    ``surrogate`` dispatches the posterior through a pluggable
+    :class:`repro.core.surrogate.Surrogate`; ``None`` is the exact-GP
+    fast path (bitwise-historical).
     """
-    mu, sigma, g = gpm.posterior_with_grad_batch(gp, cand)
+    if surrogate is None:
+        mu, sigma, g = gpm.posterior_with_grad_batch(gp, cand)
+    else:
+        mu, sigma, g = surrogate.posterior_with_grad(gp, cand)
     # safe norm: d||g||/dg at g=0 is NaN otherwise (differentiated again
     # during acquisition refinement)
     gn = jnp.sqrt(jnp.sum(jnp.square(g), axis=-1) + 1e-12) / y_scale
@@ -163,7 +169,8 @@ def assemble_candidates(problem, grid: np.ndarray,
 
 
 def _maximize_core(gp, params, cand, best_feasible, lam_base, lam_g, lam_p,
-                   beta, refine_lr, refine_steps, penalties=None):
+                   beta, refine_lr, refine_steps, penalties=None,
+                   surrogate=None):
     """Grid-argmax + projected-gradient refinement, all on device.
 
     Returns (best_a, best_score, grid_scores). The penalty at the moved
@@ -176,12 +183,13 @@ def _maximize_core(gp, params, cand, best_feasible, lam_base, lam_g, lam_p,
     if penalties is None:
         penalties = jax_cost.penalty(params, cand)
     scores = hybrid_scores(gp, cand, best_feasible, penalties, lam_base,
-                           lam_g, lam_p, beta, y_scale)
+                           lam_g, lam_p, beta, y_scale, surrogate)
     a0 = cand[jnp.argmax(scores)]
 
     def score1(a, pen_const):
         return hybrid_scores(gp, a[None], best_feasible, pen_const[None],
-                             lam_base, lam_g, lam_p, beta, y_scale)[0]
+                             lam_base, lam_g, lam_p, beta, y_scale,
+                             surrogate)[0]
 
     vag1 = jax.value_and_grad(score1)
 
@@ -208,20 +216,25 @@ def _maximize_core(gp, params, cand, best_feasible, lam_base, lam_g, lam_p,
             jnp.where(better, s_f, best_s), scores)
 
 
-_maximize_jit = jax.jit(_maximize_core, static_argnames=("refine_steps",))
+_maximize_jit = jax.jit(_maximize_core,
+                        static_argnames=("refine_steps", "surrogate"))
 
 
-@partial(jax.jit, static_argnames=("refine_steps",))
+@partial(jax.jit, static_argnames=("refine_steps", "surrogate"))
 def maximize_batch(gps, params_b, cand_b, best_feasible_b, lam_base_b,
-                   lam_g_b, lam_p, beta, refine_lr, refine_steps):
+                   lam_g_b, lam_p, beta, refine_lr, refine_steps,
+                   surrogate=None):
     """One vmapped dispatch maximizing S scenarios' acquisitions at once.
 
     gps / params_b / cand_b / *_b carry a leading S axis; lam_p, beta and
     refine_lr are shared scalars. Returns (best_a (S,2), best_s (S,)).
+    ``surrogate`` (static — a frozen dataclass) dispatches the posterior
+    through a pluggable surrogate; ``None`` is the exact GP.
     """
     def one(gp, params, cand, bf, lb, lg):
         a, s, _ = _maximize_core(gp, params, cand, bf, lb, lg, lam_p, beta,
-                                 refine_lr, refine_steps)
+                                 refine_lr, refine_steps,
+                                 surrogate=surrogate)
         return a, s
 
     return jax.vmap(one)(gps, params_b, cand_b, best_feasible_b,

@@ -21,15 +21,17 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, List, Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import gp as gpm
 from repro.core import jax_cost
-from repro.core.acquisition import (REFINE_LR, REFINE_STEPS, AcqWeights,
+from repro.core.acquisition import (REFINE_LR, REFINE_STEPS,
                                     assemble_candidates, candidate_grid,
                                     maximize_batch, schedule)
 from repro.core.bo import BOResult, ScenarioState
+from repro.core.engine_config import EngineConfig, resolve_config
 from repro.core.problem import SplitInferenceProblem
 
 
@@ -57,12 +59,12 @@ class BatchedBayesSplitEdge:
 
     name = "Batched-Bayes-Split-Edge"
 
-    def __init__(self, scenarios: Sequence[Scenario], n_init: int = 9,
-                 n_max_repeat: int = 5, weights: AcqWeights = AcqWeights(),
-                 gp_cfg: gpm.GPConfig = gpm.GPConfig(), grid_n: int = 64,
-                 constraint_aware: bool = True, use_grad_term: bool = True,
-                 use_schedules: bool = True, l_pad: Optional[int] = None,
-                 pack: bool = False):
+    def __init__(self, scenarios: Sequence[Scenario],
+                 config: Optional[EngineConfig] = None, **kw):
+        config = resolve_config(config, kw, "BatchedBayesSplitEdge")
+        if kw:
+            raise TypeError(f"BatchedBayesSplitEdge() got unexpected "
+                            f"keyword arguments {sorted(kw)}")
         if not scenarios:
             raise ValueError("need at least one scenario")
         scenarios = list(scenarios)
@@ -72,7 +74,7 @@ class BatchedBayesSplitEdge:
         # order; only `_staged` (the batch layout) sorts
         self._pack_order = None
         self._staged = scenarios
-        if pack:
+        if config.pack:
             from repro.distributed.sharding import pack_order
             self._pack_order = pack_order(scenarios)
             self._staged = [scenarios[i] for i in self._pack_order]
@@ -80,23 +82,26 @@ class BatchedBayesSplitEdge:
         # batch-wide L_max (a single-arch batch pads to its own L, which
         # is the bit-identical unpadded layout)
         l_max = max(sc.problem.L for sc in scenarios)
-        self.l_pad = l_max if l_pad is None else l_pad
+        self.l_pad = l_max if config.l_pad is None else config.l_pad
         if self.l_pad < l_max:
-            raise ValueError(f"l_pad={l_pad} < batch L_max={l_max}")
+            raise ValueError(f"l_pad={config.l_pad} < batch "
+                             f"L_max={l_max}")
+        self.config = config
         self.scenarios = scenarios
-        self.n_init = n_init
-        self.n_max_repeat = n_max_repeat
-        w = weights
-        if not use_grad_term:
-            w = dataclasses.replace(w, lam_g0=0.0, lam_gT=1e-9)
-        if not constraint_aware:
-            w = dataclasses.replace(w, lam_p=0.0)
-        self.weights = w
-        self.gp_cfg = gp_cfg
-        self.grid = candidate_grid(grid_n)
-        self.constraint_aware = constraint_aware
-        self.use_schedules = use_schedules
-        self.gp_feasible_only = constraint_aware
+        self.n_init = config.n_init
+        self.n_max_repeat = config.n_max_repeat
+        self.weights = config.acq_weights()
+        self.gp_cfg = config.gp_cfg
+        self.grid = candidate_grid(config.grid_n)
+        self.constraint_aware = config.constraint_aware
+        self.use_schedules = config.use_schedules
+        self.gp_feasible_only = config.constraint_aware
+        # pluggable surrogate (None = the exact GP through the jitted
+        # historical gp.fit_batch — bitwise). A custom surrogate's
+        # batched fit jits once here (frozen dataclass => hashable)
+        self.surrogate = config.surrogate
+        self._fit_jit = (None if config.surrogate is None
+                         else jax.jit(lambda d: config.surrogate.fit(d)))
 
     # -- device-side helpers -------------------------------------------------
     def _stacked_data(self, states) -> dict:
@@ -153,7 +158,10 @@ class BatchedBayesSplitEdge:
             params_b = params_cache[key]
 
             # two dispatches for the whole bucket: fit_batch + maximize_batch
-            gps = gpm.fit_batch(self._stacked_data(batch), cfg)
+            if self._fit_jit is None:
+                gps = gpm.fit_batch(self._stacked_data(batch), cfg)
+            else:
+                gps, _ = self._fit_jit(self._stacked_data(batch))
 
             cand, bf, lb, lg = [], [], [], []
             for st in batch:
@@ -174,7 +182,8 @@ class BatchedBayesSplitEdge:
                 jnp.asarray(lb, jnp.float32),
                 jnp.asarray(lg, jnp.float32),
                 jnp.float32(w.lam_p), jnp.float32(w.beta),
-                jnp.float32(REFINE_LR), REFINE_STEPS)
+                jnp.float32(REFINE_LR), REFINE_STEPS,
+                surrogate=self.surrogate)
             a_b = np.asarray(a_b, dtype=np.float64)
 
             # -- host bookkeeping (early-stop masking, probes, ledger) ------

@@ -84,9 +84,24 @@ def add_point(data, x, y):
     ), n + 1
 
 
-def _standardize(y, mask):
+def _standardize(y, mask, prior=None):
+    """Target standardization with an optional transfer-learned mean prior.
+
+    ``prior`` is a dict with scalars ``mu0``/``n0``: ``n0`` pseudo-
+    observations at ``mu0`` shrink the centering mean toward the prior
+    (conjugate-normal style), so an empty dataset centers exactly at the
+    historical mean and the GP posterior reverts to it far from data.
+    ``prior=None`` — and, by the same arithmetic, ``n0 == 0`` — keeps the
+    historical data-only standardization bitwise (the prior-bank miss /
+    ``bank=None`` fallback contract).
+    """
     n = jnp.maximum(mask.sum(), 1)
-    mu = jnp.sum(jnp.where(mask, y, 0.0)) / n
+    if prior is None:
+        mu = jnp.sum(jnp.where(mask, y, 0.0)) / n
+    else:
+        ns = mask.sum() + prior["n0"]
+        mu = (jnp.sum(jnp.where(mask, y, 0.0)) + prior["n0"] * prior["mu0"]
+              ) / jnp.maximum(ns, 1.0)
     var = jnp.sum(jnp.where(mask, jnp.square(y - mu), 0.0)) / n
     std = jnp.sqrt(jnp.maximum(var, 1e-8))
     return (y - mu) * mask / std, mu, std
@@ -134,18 +149,18 @@ def _adam_update(theta, opt, g, lr, t):
     return theta, dict(m=m, v=v)
 
 
-def _posterior_cache(theta, data, cfg: GPConfig, y_mu, y_sigma):
+def _posterior_cache(theta, data, cfg: GPConfig, y_mu, y_sigma, prior=None):
     K = _masked_kernel(data["x"], data["mask"], theta, cfg.jitter)
     L = jnp.linalg.cholesky(K)
     alpha = jax.scipy.linalg.cho_solve(
-        (L, True), _standardize(data["y"], data["mask"])[0])
+        (L, True), _standardize(data["y"], data["mask"], prior)[0])
     return dict(theta=theta, L=L, alpha=alpha, y_mu=y_mu, y_sigma=y_sigma,
                 x=data["x"], mask=data["mask"])
 
 
-def _fit_core(data, cfg: GPConfig):
+def _fit_core(data, cfg: GPConfig, prior=None):
     """Returns fitted (theta, posterior-cache). Pure-JAX Adam on the MLL."""
-    y_std, y_mu, y_sigma = _standardize(data["y"], data["mask"])
+    y_std, y_mu, y_sigma = _standardize(data["y"], data["mask"], prior)
     theta = init_theta(cfg)
     opt = dict(m=jax.tree.map(jnp.zeros_like, theta),
                v=jax.tree.map(jnp.zeros_like, theta))
@@ -158,10 +173,11 @@ def _fit_core(data, cfg: GPConfig):
 
     (theta, _), _ = jax.lax.scan(step, (theta, opt),
                                  jnp.arange(cfg.fit_steps, dtype=jnp.float32))
-    return _posterior_cache(theta, data, cfg, y_mu, y_sigma)
+    return _posterior_cache(theta, data, cfg, y_mu, y_sigma, prior)
 
 
-def _fit_core_from(data, cfg: GPConfig, theta0, max_steps: int, gtol: float):
+def _fit_core_from(data, cfg: GPConfig, theta0, max_steps: int, gtol: float,
+                   prior=None):
     """Warm refit: Adam from ``theta0``, stopping adaptively once the MLL
     gradient norm drops below ``gtol`` (or after ``max_steps``).
 
@@ -169,7 +185,7 @@ def _fit_core_from(data, cfg: GPConfig, theta0, max_steps: int, gtol: float):
     runs until every lane converges with per-lane masked updates, so
     ``steps_used`` stays exact per scenario.
     """
-    y_std, y_mu, y_sigma = _standardize(data["y"], data["mask"])
+    y_std, y_mu, y_sigma = _standardize(data["y"], data["mask"], prior)
     opt = dict(m=jax.tree.map(jnp.zeros_like, theta0),
                v=jax.tree.map(jnp.zeros_like, theta0))
     g_fn = jax.grad(_neg_mll)
@@ -193,7 +209,7 @@ def _fit_core_from(data, cfg: GPConfig, theta0, max_steps: int, gtol: float):
 
     theta, _, steps, _ = jax.lax.while_loop(
         cond, body, (theta0, opt, jnp.int32(0), jnp.bool_(False)))
-    return _posterior_cache(theta, data, cfg, y_mu, y_sigma), steps
+    return _posterior_cache(theta, data, cfg, y_mu, y_sigma, prior), steps
 
 
 def theta_finite(theta) -> jax.Array:
@@ -228,15 +244,20 @@ fit = jax.jit(_fit_core, static_argnames=("cfg",))
 
 
 @partial(jax.jit, static_argnames=("cfg",))
-def fit_batch(data, cfg: GPConfig):
+def fit_batch(data, cfg: GPConfig, prior=None):
     """Fit S independent GPs in one dispatch.
 
     ``data`` is the batched-dataset layout: ``x (S, max_points, d)``,
     ``y (S, max_points)``, ``mask (S, max_points)``. Returns the fitted
     posterior-cache pytree with a leading S axis on every leaf — exactly
     ``vmap`` of :func:`fit`, compiled once for the whole scenario batch.
+    ``prior`` optionally carries per-scenario mean-prior statistics
+    (``mu0 (S,)``, ``n0 (S,)`` — see :func:`_standardize`); ``None`` is
+    the historical prior-free program.
     """
-    return jax.vmap(lambda d: _fit_core(d, cfg))(data)
+    if prior is None:
+        return jax.vmap(lambda d: _fit_core(d, cfg))(data)
+    return jax.vmap(lambda d, pr: _fit_core(d, cfg, pr))(data, prior)
 
 
 def take_lanes(tree, idx):

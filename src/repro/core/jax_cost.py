@@ -176,6 +176,15 @@ def seen_key(p):
     return jnp.round(p * 1000.0) / 1000.0
 
 
+def quantize_key(x, quantum: float) -> float:
+    """Host mirror of :func:`seen_key`'s half-to-even quantization for an
+    arbitrary quantum — the prior-bank key derivation: two scenarios that
+    differ by less than ``quantum/2`` in a keyed feature hash to the same
+    bank bucket regardless of the order they were seen in (``np.round``
+    is half-to-even, matching ``jnp.round``/``round``)."""
+    return float(np.round(np.float64(x) / quantum) * quantum)
+
+
 def utility(params, li, p):
     """The calibrated deterministic oracle (DESIGN.md §6), device-side.
 

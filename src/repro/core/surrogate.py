@@ -1,0 +1,234 @@
+"""Pluggable surrogate models behind one small protocol.
+
+The BO engines historically called ``gp.fit_batch`` / ``gp._fit_core`` /
+``gp.posterior_with_grad_batch`` directly, hard-wiring the exact Matérn
+GP into every loop body. This module extracts the surface those callers
+actually need into a :class:`Surrogate` protocol so lanes can trade
+fidelity for speed:
+
+* :class:`GPSurrogate` — the exact zero-mean Matérn-5/2 GP of
+  ``core/gp.py``; the default, and bitwise-identical to the historical
+  inline calls (it delegates to the very same jit-traced functions).
+* :class:`RandomFeatureSurrogate` — Matérn-5/2 random Fourier features +
+  closed-form Bayesian linear regression: no Adam/MLL optimization at
+  all (``fit`` is one D x D Cholesky), so a refit costs O(m D^2 + D^3)
+  with zero iterative steps — the cheap high-throughput lane surrogate.
+  Equivalence-tested against the exact GP on small datasets
+  (``tests/test_surrogate.py``).
+
+Implementations are **frozen dataclasses**: hashable, so a surrogate can
+ride inside ``WholeRunConfig`` as a static (trace-time) argument of the
+jitted whole-run programs.
+
+Conventions shared by every implementation:
+
+* ``fit``/``fit_from`` are *batched* (leading S lane axis on ``data``,
+  ``theta0`` and ``prior``) and return ``(model, steps)`` where
+  ``steps (S,) int32`` is the per-lane iterative-fit cost (0 for
+  closed-form fits) — the whole-run fit accounting.
+* ``posterior_with_grad(model, A)`` takes ONE lane's model (callers
+  ``vmap`` over lanes) and returns ``(mu (N,), sigma (N,), dmu (N,d))``
+  on the raw utility scale.
+* The model is a plain dict pytree with at least ``theta`` (the
+  warm-start carry — same leaves as :func:`gp.init_theta`) and
+  ``y_sigma`` (the acquisition's score normalizer). Models and thetas
+  are positionless along the lane axis, so ``gp.take_lanes``-style lane
+  gathers/scatters (compaction, admission, elastic resize) apply
+  unchanged.
+* ``prior`` is ``None`` or a per-lane mean-prior dict (``mu0 (S,)``,
+  ``n0 (S,)``) from the transfer-learned prior bank; ``None`` and
+  all-zero priors reproduce the prior-free fit bitwise
+  (``gp._standardize``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+from typing import Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gp as gpm
+
+
+@runtime_checkable
+class Surrogate(Protocol):
+    """What the BO engines need from a surrogate family (see module
+    docstring for the batching/shape conventions)."""
+
+    name: str
+
+    def init_theta(self) -> dict:
+        """Cold-start hyperparameter leaves (the warm-start carry)."""
+        ...
+
+    def fit(self, data, prior=None):
+        """Batched cold fit -> ``(model, steps (S,) int32)``."""
+        ...
+
+    def fit_from(self, data, theta0, prior=None):
+        """Batched warm refit from per-lane ``theta0`` ->
+        ``(model, steps)``."""
+        ...
+
+    def posterior_with_grad(self, model, A):
+        """One lane: ``A (N,d) -> (mu, sigma, dmu)``, raw scale."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class GPSurrogate:
+    """The exact Matérn-5/2 GP (``core/gp.py``) behind the protocol.
+
+    Pure delegation: every method calls the same ``gp`` functions the
+    engines used to call inline, so an engine built with
+    ``GPSurrogate(cfg)`` traces to the bitwise-identical program as one
+    built with ``surrogate=None``.
+    """
+
+    cfg: gpm.GPConfig = gpm.GPConfig()
+
+    name = "gp"
+
+    def init_theta(self) -> dict:
+        return gpm.init_theta(self.cfg)
+
+    def fit(self, data, prior=None):
+        s = data["y"].shape[0]
+        if prior is None:
+            model = jax.vmap(lambda d: gpm._fit_core(d, self.cfg))(data)
+        else:
+            model = jax.vmap(
+                lambda d, pr: gpm._fit_core(d, self.cfg, pr))(data, prior)
+        return model, jnp.full((s,), self.cfg.fit_steps, jnp.int32)
+
+    def fit_from(self, data, theta0, prior=None):
+        c = self.cfg
+        if prior is None:
+            return jax.vmap(lambda d, t0: gpm._fit_core_from(
+                d, c, t0, c.warm_steps, c.warm_gtol))(data, theta0)
+        return jax.vmap(lambda d, t0, pr: gpm._fit_core_from(
+            d, c, t0, c.warm_steps, c.warm_gtol, prior=pr))(
+                data, theta0, prior)
+
+    def posterior(self, model, A):
+        return gpm.posterior_batch(model, A)
+
+    def posterior_with_grad(self, model, A):
+        return gpm.posterior_with_grad_batch(model, A)
+
+
+@lru_cache(maxsize=32)
+def _rff_basis(n_features: int, seed: int, dim: int):
+    """Fixed Matérn-5/2 spectral sample (host numpy -> jit constants).
+
+    The Matérn-nu spectral density is a multivariate t with 2*nu dof:
+    ``w = z * sqrt(2 nu / u)`` with ``z ~ N(0, I)``, ``u ~ chi2_{2 nu}``
+    (nu = 5/2 here), divided by the lengthscale at evaluation time.
+    Deterministic per (n_features, seed): the basis is part of the
+    surrogate's identity, so refits/replays are reproducible.
+    """
+    rng = np.random.default_rng(seed)
+    z = rng.standard_normal((n_features, dim))
+    u = rng.chisquare(5.0, n_features)
+    w = z * np.sqrt(5.0 / u)[:, None]
+    b = rng.uniform(0.0, 2.0 * np.pi, n_features)
+    return w.astype(np.float32), b.astype(np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomFeatureSurrogate:
+    """Random-Fourier-feature Bayesian linear regression (Matérn-5/2).
+
+    ``phi(x) = sqrt(2 sv / D) cos(W x / ls + b)`` with ``W`` drawn once
+    from the Matérn-5/2 spectral density; the posterior over feature
+    weights is conjugate-normal, so the "fit" is a single D x D Cholesky
+    (``A = Phi^T Phi + nv I``) — no hyperparameter optimization, zero
+    iterative steps. Hyperparameters come from the warm-start carry
+    (``fit_from``) or the cold init: with a transfer-learned bank theta
+    the surrogate inherits historical lengthscales for free.
+    """
+
+    n_features: int = 512
+    seed: int = 0
+    cfg: gpm.GPConfig = gpm.GPConfig()
+
+    name = "rff"
+
+    def init_theta(self) -> dict:
+        return gpm.init_theta(self.cfg)
+
+    # -- feature map --------------------------------------------------------
+    def _project(self, x, theta):
+        w0, b = _rff_basis(self.n_features, self.seed, x.shape[-1])
+        ls = jnp.exp(theta["log_ls"])
+        return x @ (jnp.asarray(w0).T / ls) + jnp.asarray(b)       # (N, D)
+
+    def _fit_one(self, data, theta, prior):
+        y_std, y_mu, y_sigma = gpm._standardize(data["y"], data["mask"],
+                                                prior)
+        sv = jnp.exp(theta["log_sv"])
+        nv = jnp.exp(theta["log_nv"]) + self.cfg.jitter
+        scale = jnp.sqrt(2.0 * sv / self.n_features)
+        phi = scale * jnp.cos(self._project(data["x"], theta))
+        phi = phi * data["mask"][:, None]                          # (m, D)
+        A = phi.T @ phi + nv * jnp.eye(self.n_features)
+        L = jnp.linalg.cholesky(A)
+        coef = jax.scipy.linalg.cho_solve((L, True), phi.T @ y_std)
+        return dict(theta=theta, coef=coef, L=L, y_mu=y_mu, y_sigma=y_sigma)
+
+    def fit(self, data, prior=None):
+        s = data["y"].shape[0]
+        th0 = jax.tree.map(
+            lambda v: jnp.broadcast_to(jnp.asarray(v, jnp.float32), (s,)),
+            self.init_theta())
+        return self.fit_from(data, th0, prior)
+
+    def fit_from(self, data, theta0, prior=None):
+        s = data["y"].shape[0]
+        if prior is None:
+            model = jax.vmap(
+                lambda d, t0: self._fit_one(d, t0, None))(data, theta0)
+        else:
+            model = jax.vmap(self._fit_one)(data, theta0, prior)
+        return model, jnp.zeros((s,), jnp.int32)
+
+    # -- posterior ----------------------------------------------------------
+    def posterior(self, model, A):
+        mu, sigma, _ = self.posterior_with_grad(model, A)
+        return mu, sigma
+
+    def posterior_with_grad(self, model, A):
+        theta = model["theta"]
+        w0, b = _rff_basis(self.n_features, self.seed, A.shape[-1])
+        ls = jnp.exp(theta["log_ls"])
+        sv = jnp.exp(theta["log_sv"])
+        nv = jnp.exp(theta["log_nv"]) + self.cfg.jitter
+        w = jnp.asarray(w0) / ls                                   # (D, d)
+        proj = A @ w.T + jnp.asarray(b)                            # (N, D)
+        scale = jnp.sqrt(2.0 * sv / self.n_features)
+        phi = scale * jnp.cos(proj)
+        mu_std = phi @ model["coef"]                               # (N,)
+        # latent var: nv * phi A^-1 phi^T == nv |L^-1 phi^T|^2 — the
+        # weight-space mirror of sv - |L^-1 ks|^2 (matches the GP's
+        # noise-free latent variance as D -> inf)
+        v = jax.scipy.linalg.solve_triangular(model["L"], phi.T, lower=True)
+        var = jnp.maximum(nv * jnp.sum(jnp.square(v), axis=0), 1e-12)
+        # analytic mean gradient: d phi / d a = -scale sin(proj) W
+        dmu_std = ((-scale * jnp.sin(proj)) * model["coef"][None, :]) @ w
+        return (mu_std * model["y_sigma"] + model["y_mu"],
+                jnp.sqrt(var) * model["y_sigma"],
+                dmu_std * model["y_sigma"])
+
+
+def default_surrogate(gp_cfg: gpm.GPConfig) -> GPSurrogate:
+    """The engine default: the exact GP at the given config."""
+    return GPSurrogate(gp_cfg)
+
+
+def resolve(surrogate: Optional[Surrogate],
+            gp_cfg: gpm.GPConfig) -> Surrogate:
+    """``None`` -> the default exact GP (the bitwise-historical path)."""
+    return default_surrogate(gp_cfg) if surrogate is None else surrogate

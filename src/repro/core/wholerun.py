@@ -64,11 +64,14 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
 from repro.compat import shard_map
 from repro.core import gp as gpm
 from repro.core import jax_cost as jc
+from repro.core import surrogate as smod
 from repro.core.acquisition import (REFINE_LR, REFINE_STEPS, AcqWeights,
                                     _maximize_core, assemble_candidates_dev,
                                     candidate_grid)
 from repro.core.batch_bo import Scenario
 from repro.core.bo import BOResult, _init_grid
+from repro.core.engine_config import EngineConfig, resolve_config
+from repro.core.priorbank import PriorBank, stage_prior
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +96,13 @@ class WholeRunConfig:
     # warm refit diverges organically (historically survivable
     # deterministic garbage), so it is opt-in.
     fault_on_divergence: bool = False
+    # pluggable surrogate (None -> the exact GP, bitwise-historical) and
+    # the transfer-learned prior plumbing: with use_prior the per-lane
+    # (prior_mu, prior_n0) state feeds the fit's mean-prior shrinkage and
+    # bank-hit lanes enter seeded with their banked theta. Both are
+    # static: a frozen-dataclass surrogate keeps the config hashable
+    surrogate: Optional[smod.Surrogate] = None
+    use_prior: bool = False
 
 
 def _sched(w0, wT, t):
@@ -118,7 +128,7 @@ def _init_state(s: int, cfg: WholeRunConfig, dim: int = 2):
     m, t = cfg.gp.max_points, cfg.budget_max
     q = t + 2                    # probe queue can never outgrow the budget
     f32, i32 = jnp.float32, jnp.int32
-    th0 = gpm.init_theta(cfg.gp)
+    th0 = smod.resolve(cfg.surrogate, cfg.gp).init_theta()
     return dict(
         # GP dataset (feasible-only gated numpy mirror of ScenarioState)
         x=jnp.zeros((s, m, dim), f32), y=jnp.zeros((s, m), f32),
@@ -155,6 +165,12 @@ def _init_state(s: int, cfg: WholeRunConfig, dim: int = 2):
         theta=jax.tree.map(lambda v: jnp.broadcast_to(v, (s,)).astype(f32),
                            th0),
         fit_steps=jnp.zeros((s,), i32), fit_calls=jnp.zeros((s,), i32),
+        # transfer-learned mean prior (per-lane): n0 pseudo-observations
+        # at mu0 shrink the fit's target centering (gp._standardize).
+        # Zeros — the default, and every bank miss — reproduce the
+        # prior-free arithmetic bitwise; the arrays ride the compaction
+        # gathers / admission scatters / checkpoints like any lane state
+        prior_mu=jnp.zeros((s,), f32), prior_n0=jnp.zeros((s,), f32),
     )
 
 
@@ -269,20 +285,24 @@ def _make_body(run_data, grid, wvec, cfg: WholeRunConfig, m: int):
     params = run_data["params"]
     s = run_data["budget"].shape[0]
     pen_static = run_data["pen"]
-
-    def cold_fit(data, _theta0):
-        gp = jax.vmap(lambda d: gpm._fit_core(d, cfg.gp))(data)
-        return gp, jnp.full((s,), cfg.gp.fit_steps, jnp.int32)
-
-    def warm_fit(data, theta0):
-        return jax.vmap(lambda d, t0: gpm._fit_core_from(
-            d, cfg.gp, t0, cfg.gp.warm_steps,
-            cfg.gp.warm_gtol))(data, theta0)
+    surr = smod.resolve(cfg.surrogate, cfg.gp)
 
     def body(carry):
         st, it = carry
         data = gpm.slice_data(
             dict(x=st["x"], y=st["y"], mask=st["mask"]), m)
+        # transfer-learned mean prior: per-lane (mu0, n0) pseudo-
+        # observations from the bank. Gated statically — with
+        # use_prior=False (bank=None) the fit programs are the exact
+        # historical traces
+        prior = (dict(mu0=st["prior_mu"], n0=st["prior_n0"])
+                 if cfg.use_prior else None)
+
+        def cold_fit(data_, _theta0):
+            return surr.fit(data_, prior)
+
+        def warm_fit(data_, theta0_):
+            return surr.fit_from(data_, theta0_, prior)
         # a lane is cold-seeded on its FIRST post-init body iteration —
         # the per-lane generalization of the old global iteration-0
         # flag (for a static batch every lane is unseeded exactly at
@@ -354,7 +374,7 @@ def _make_body(run_data, grid, wvec, cfg: WholeRunConfig, m: int):
                 a, _, _ = _maximize_core(
                     gp, p1, c, bf1, lb1, lg1, wvec["lam_p"],
                     wvec["beta"], jnp.float32(REFINE_LR), REFINE_STEPS,
-                    penalties=pen1)
+                    penalties=pen1, surrogate=cfg.surrogate)
                 return a
             a_acq = jax.vmap(one_max)(gp_b, params, cand_b, bf,
                                       lam_b, lam_g, pen_b)
@@ -438,14 +458,11 @@ def _whole_run(stacked, grid, wvec, cfg: WholeRunConfig):
     live-lane occupancy accounting (every step computes all S lanes).
     """
     params = stacked["params"]
-    s = stacked["budget"].shape[0]
 
-    state = jax.vmap(lambda st1, p1, pts, b: _one_init(st1, p1, pts, b, cfg))(
-        _init_state(s, cfg), params, stacked["init_pts"], stacked["budget"])
+    state, pen = _init_run_core(stacked, grid, cfg)
 
     run_data = dict(params=params, boundary=stacked["boundary"],
-                    budget=stacked["budget"],
-                    pen=_pen_static(params, grid, stacked["boundary"]))
+                    budget=stacked["budget"], pen=pen)
 
     m_final = _final_bucket(cfg)
     phases = [b for b in gpm.DATASET_BUCKETS if b < m_final] + [m_final]
@@ -464,7 +481,12 @@ def _whole_run(stacked, grid, wvec, cfg: WholeRunConfig):
         carry = jax.lax.while_loop(cond, _make_body(run_data, grid, wvec,
                                                     cfg, m), carry)
     state, n_iters = carry
-    return {k: state[k] for k in _OUT_KEYS}, n_iters
+    out = {k: state[k] for k in _OUT_KEYS}
+    # the final warm-start carry rides along for the prior bank's lane-
+    # retirement recording (a nested dict leaf — result_from_row and the
+    # _OUT_KEYS consumers ignore it)
+    out["theta"] = state["theta"]
+    return out, n_iters
 
 
 whole_run = jax.jit(_whole_run, static_argnames=("cfg",))
@@ -472,11 +494,34 @@ whole_run = jax.jit(_whole_run, static_argnames=("cfg",))
 
 # -- lane-compaction phase programs (host-driven dispatch sequence) ----------
 
+def _apply_stacked_prior(state, stacked, cfg: WholeRunConfig):
+    """Install the staged prior-bank payload into freshly initialized
+    lanes: the per-lane mean prior always, and — on the warm-start path —
+    the banked theta as the warm carry of hit lanes, which enter
+    ``seeded`` so their first fit is a warm refit from the transferred
+    hyperparameters instead of a cold MLL climb. Miss lanes (and
+    ``use_prior=False`` programs, structurally) keep the cold path
+    bitwise."""
+    if not cfg.use_prior or "prior_n0" not in stacked:
+        return state
+    state = dict(state,
+                 prior_mu=stacked["prior_mu"].astype(jnp.float32),
+                 prior_n0=stacked["prior_n0"].astype(jnp.float32))
+    if cfg.warm_start:
+        hit = stacked["bank_hit"]
+        theta = jax.tree.map(
+            lambda t0, t: _sel(hit, t0.astype(t.dtype), t),
+            stacked["theta0"], state["theta"])
+        state = dict(state, theta=theta, seeded=state["seeded"] | hit)
+    return state
+
+
 def _init_run_core(stacked, grid, cfg: WholeRunConfig):
     params = stacked["params"]
     s = stacked["budget"].shape[0]
     state = jax.vmap(lambda st1, p1, pts, b: _one_init(st1, p1, pts, b, cfg))(
         _init_state(s, cfg), params, stacked["init_pts"], stacked["budget"])
+    state = _apply_stacked_prior(state, stacked, cfg)
     return state, _pen_static(params, grid, stacked["boundary"])
 
 
@@ -502,14 +547,29 @@ def admit_init(stacked, grid, cfg: WholeRunConfig, seed_theta: bool):
     tolerance by the same argument as warm refits themselves."""
     state, pen = _init_run_core(stacked, grid, cfg)
     if seed_theta:
+        surr = smod.resolve(cfg.surrogate, cfg.gp)
         m = gpm.bucket_size(min(cfg.n_init, cfg.gp.max_points),
                             cfg.gp.max_points)
         data = gpm.slice_data(
             dict(x=state["x"], y=state["y"], mask=state["mask"]), m)
-        gp = jax.vmap(lambda d: gpm._fit_core(d, cfg.gp))(data)
+        prior = (dict(mu0=state["prior_mu"], n0=state["prior_n0"])
+                 if cfg.use_prior else None)
+        if cfg.use_prior and cfg.warm_start and "bank_hit" in stacked:
+            # bank-hit lanes seed with a warm refit FROM the banked
+            # theta (installed by _apply_stacked_prior) — the transfer
+            # path; misses pay the historical cold seed
+            hit = stacked["bank_hit"]
+            model_c, steps_c = surr.fit(data, prior)
+            model_w, steps_w = surr.fit_from(data, state["theta"], prior)
+            theta = jax.tree.map(partial(_sel, hit),
+                                 model_w["theta"], model_c["theta"])
+            steps = jnp.where(hit, steps_w, steps_c)
+        else:
+            model, steps = surr.fit(data, prior)
+            theta = model["theta"]
         state = dict(
-            state, theta=gp["theta"],
-            fit_steps=state["fit_steps"] + cfg.gp.fit_steps,
+            state, theta=theta,
+            fit_steps=state["fit_steps"] + steps,
             fit_calls=state["fit_calls"] + 1,
             seeded=jnp.ones_like(state["seeded"]))
     return state, pen
@@ -695,7 +755,7 @@ def quarantine_lanes(state, lanes, cfg: WholeRunConfig, scrub: bool):
     The lanes reactivate with ``fault`` cleared and their early-stop
     counter reset; ledger, incumbent and generation are untouched (the
     same occupant continues)."""
-    th0 = gpm.init_theta(cfg.gp)
+    th0 = smod.resolve(cfg.surrogate, cfg.gp).init_theta()
     k = lanes.shape[0]
     state = dict(state)
     state["theta"] = jax.tree.map(
@@ -719,14 +779,24 @@ def quarantine_lanes(state, lanes, cfg: WholeRunConfig, scrub: bool):
 # -- host-side input staging (shared by the offline and streaming engines) ---
 
 def stage_scenario(sc: Scenario, l_pad: int, n_init: int,
-                   constraint_aware: bool, fill: np.ndarray) -> dict:
+                   constraint_aware: bool, fill: np.ndarray,
+                   bank: Optional[PriorBank] = None) -> dict:
     """Host staging of ONE scenario into the padded-lane layout: device
     constraint params (at the scenario's own ``L`` — :func:`jax_cost
     .stack_params` pads to the batch ``l_pad``), the seeded init design,
     and the boundary candidate block padded to ``l_pad`` rows with
     ``fill``. The single staging path for offline batches and streaming
     admissions, so an admitted lane is bitwise the lane an offline
-    batch would have staged."""
+    batch would have staged.
+
+    With a prior ``bank`` the staging additionally queries the
+    transfer-learned store: on a hit the staged dict carries the banked
+    (theta, mean-prior) payload and — with incumbent seeding on — the
+    FIRST init-design point is replaced by the historical incumbent
+    (projected feasible for this scenario's channel), so the warm run
+    evaluates near the banked optimum immediately. A miss (or
+    ``bank=None``) stages the bitwise-historical layout with a zeroed
+    prior payload."""
     pb = sc.problem
     if pb.L > l_pad:
         raise ValueError(f"scenario L={pb.L} exceeds the engine l_pad="
@@ -735,6 +805,12 @@ def stage_scenario(sc: Scenario, l_pad: int, n_init: int,
     pts = _init_grid(n_init, rng)
     if constraint_aware:
         pts = np.stack([pb.project_feasible(a) for a in pts])
+    prior_row, seed_a = stage_prior(sc, bank)
+    if seed_a is not None:
+        if constraint_aware:
+            seed_a = pb.project_feasible(seed_a)
+        pts = pts.copy()
+        pts[0] = np.clip(seed_a, 0.0, 1.0)
     bpad = np.repeat(fill, l_pad, axis=0)
     if constraint_aware:
         b = pb.boundary_candidates()
@@ -742,7 +818,7 @@ def stage_scenario(sc: Scenario, l_pad: int, n_init: int,
             bpad = bpad.copy()
             bpad[:len(b)] = b[:pb.L]
     return dict(params=pb.jax_params(), budget=sc.budget, init_pts=pts,
-                boundary=bpad)
+                boundary=bpad, **prior_row)
 
 
 def stack_staged(staged: Sequence[dict], l_pad: int, pad_to: int) -> dict:
@@ -761,6 +837,17 @@ def stack_staged(staged: Sequence[dict], l_pad: int, pad_to: int) -> dict:
                              jnp.float32),
         boundary=jnp.asarray(np.stack([st["boundary"] for st in staged]),
                              jnp.float32),
+        # prior-bank payload (zeros on miss / bank=None — staged dicts
+        # from older callers without the keys default to the cold path)
+        prior_mu=jnp.asarray(np.asarray(
+            [st.get("prior_mu", 0.0) for st in staged]), jnp.float32),
+        prior_n0=jnp.asarray(np.asarray(
+            [st.get("prior_n0", 0.0) for st in staged]), jnp.float32),
+        bank_hit=jnp.asarray(np.asarray(
+            [st.get("bank_hit", False) for st in staged]), bool),
+        theta0={k: jnp.asarray(np.asarray(
+            [st.get("theta0", {}).get(k, 0.0) for st in staged]),
+            jnp.float32) for k in ("log_ls", "log_sv", "log_nv")},
     )
 
 
@@ -850,13 +937,14 @@ class WholeRunBayesSplitEdge:
 
     name = "WholeRun-Bayes-Split-Edge"
 
-    def __init__(self, scenarios: Sequence[Scenario], n_init: int = 9,
-                 n_max_repeat: int = 5, weights: AcqWeights = AcqWeights(),
-                 gp_cfg: gpm.GPConfig = gpm.GPConfig(), grid_n: int = 64,
-                 constraint_aware: bool = True, use_grad_term: bool = True,
-                 use_schedules: bool = True, warm_start: bool = True,
-                 mesh: Optional[Mesh] = None, l_pad: Optional[int] = None,
-                 compact: bool = True, pack: bool = False):
+    def __init__(self, scenarios: Sequence[Scenario],
+                 config: Optional[EngineConfig] = None, *,
+                 mesh: Optional[Mesh] = None,
+                 bank: Optional[PriorBank] = None, **kw):
+        config = resolve_config(config, kw, "WholeRunBayesSplitEdge")
+        if kw:
+            raise TypeError(f"WholeRunBayesSplitEdge() got unexpected "
+                            f"keyword arguments {sorted(kw)}")
         if not scenarios:
             raise ValueError("need at least one scenario")
         scenarios = list(scenarios)
@@ -865,7 +953,7 @@ class WholeRunBayesSplitEdge:
         # caller's order; only `_staged` (the device lane layout) sorts
         self._pack_order = None
         self._staged = scenarios
-        if pack:
+        if config.pack:
             from repro.distributed.sharding import pack_order
             self._pack_order = pack_order(scenarios)
             self._staged = [scenarios[i] for i in self._pack_order]
@@ -873,26 +961,27 @@ class WholeRunBayesSplitEdge:
         # batch-wide L_max (a single-arch batch pads to its own L, which
         # is the bit-identical unpadded layout)
         l_max = max(sc.problem.L for sc in scenarios)
-        self.l_pad = l_max if l_pad is None else l_pad
+        self.l_pad = l_max if config.l_pad is None else config.l_pad
         if self.l_pad < l_max:
-            raise ValueError(f"l_pad={l_pad} < batch L_max={l_max}")
+            raise ValueError(f"l_pad={config.l_pad} < batch "
+                             f"L_max={l_max}")
+        self.config = config
         self.scenarios = scenarios
-        self.n_init = n_init
-        self.n_max_repeat = n_max_repeat
-        w = weights
-        if not use_grad_term:
-            w = dataclasses.replace(w, lam_g0=0.0, lam_gT=1e-9)
-        if not constraint_aware:
-            w = dataclasses.replace(w, lam_p=0.0)
-        self.weights = w
-        self.gp_cfg = gp_cfg
-        self.grid = candidate_grid(grid_n)
-        self.constraint_aware = constraint_aware
-        self.use_schedules = use_schedules
-        self.warm_start = warm_start
+        self.n_init = config.n_init
+        self.n_max_repeat = config.n_max_repeat
+        self.weights = config.acq_weights()
+        self.gp_cfg = config.gp_cfg
+        self.grid = candidate_grid(config.grid_n)
+        self.constraint_aware = config.constraint_aware
+        self.use_schedules = config.use_schedules
+        self.warm_start = config.warm_start
+        self.surrogate = config.surrogate
         self.mesh = mesh
-        self.compact = compact
-        self.gp_feasible_only = constraint_aware
+        self.compact = config.compact
+        self.gp_feasible_only = config.constraint_aware
+        # transfer-learned prior bank: queried at staging, recorded into
+        # at run exit (None keeps every program bitwise-historical)
+        self.bank = bank
 
     # -- input staging -------------------------------------------------------
     def _pad_to(self) -> int:
@@ -908,7 +997,8 @@ class WholeRunBayesSplitEdge:
 
     def _stacked(self) -> dict:
         staged = [stage_scenario(sc, self.l_pad, self.n_init,
-                                 self.constraint_aware, self.grid[:1])
+                                 self.constraint_aware, self.grid[:1],
+                                 bank=self.bank)
                   for sc in self._staged]
         return stack_staged(staged, self.l_pad, self._pad_to())
 
@@ -943,12 +1033,16 @@ class WholeRunBayesSplitEdge:
         def flush(st, rows):
             """Inverse scatter for retiring lanes: device-gather just the
             given rows and write them into their original scenario slots
-            (lanes still running are flushed once, at exit)."""
+            (lanes still running are flushed once, at exit). The final
+            warm-start carry rides along for the prior bank's
+            retirement recording."""
             rows = [r for r in rows if order[r] >= 0]
             if not rows:
                 return
             idx = jnp.asarray(np.asarray(rows))
             sub = {k: np.asarray(st[k][idx]) for k in _OUT_KEYS}
+            for tk in ("log_ls", "log_sv", "log_nv"):
+                sub["theta/" + tk] = np.asarray(st["theta"][tk][idx])
             for k, v in sub.items():
                 if k not in final:
                     final[k] = np.zeros((n_real,) + v.shape[1:], v.dtype)
@@ -987,6 +1081,8 @@ class WholeRunBayesSplitEdge:
         self._lane_stats = dict(
             n_dispatches=len(lane_log), lane_slots=slots,
             lane_log=lane_log)
+        final["theta"] = {tk: final.pop("theta/" + tk)
+                          for tk in ("log_ls", "log_sv", "log_nv")}
         return final
 
     def run(self) -> List[BOResult]:
@@ -1001,7 +1097,8 @@ class WholeRunBayesSplitEdge:
             constraint_aware=self.constraint_aware,
             gp_feasible_only=self.gp_feasible_only,
             use_schedules=self.use_schedules, warm_start=self.warm_start,
-            gp=self.gp_cfg)
+            gp=self.gp_cfg, surrogate=self.surrogate,
+            use_prior=self.bank is not None)
         wvec = acq_wvec(self.weights)
         stacked = self._stacked()
         grid = jnp.asarray(self.grid, jnp.float32)
@@ -1029,9 +1126,23 @@ class WholeRunBayesSplitEdge:
         if self._pack_order is not None:
             rowmap = np.empty(len(self._pack_order), np.int64)
             rowmap[self._pack_order] = np.arange(len(self._pack_order))
-            self._last_raw = {k: v[rowmap] for k, v in out.items()}
+            # tree-aware: `out` holds nested leaves (the theta carry)
+            self._last_raw = jax.tree.map(lambda v: v[rowmap], out)
         else:
             self._last_raw = out
+        # fold retired runs into the transfer bank (frozen banks, runs
+        # without a feasible incumbent and non-finite fits are skipped
+        # inside record_result). Rows align with self._staged
+        if self.bank is not None:
+            th = out["theta"]
+            for i in range(len(self._staged)):
+                n = int(out["n"][i])
+                self.bank.record_result(
+                    self._staged[i],
+                    (th["log_ls"][i], th["log_sv"][i], th["log_nv"][i]),
+                    out["ev_u"][i][:n], out["ev_feas"][i][:n],
+                    out["best_a"][i], out["best_u"][i],
+                    bool(out["has_best"][i]))
 
         live = len(self.scenarios)
         if self._lane_stats:

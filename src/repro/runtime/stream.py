@@ -90,9 +90,11 @@ import numpy as np
 from repro.checkpoint import ckpt as ckptlib
 from repro.core import gp as gpm
 from repro.core import wholerun as wr
-from repro.core.acquisition import AcqWeights, candidate_grid
+from repro.core.acquisition import candidate_grid
 from repro.core.batch_bo import Scenario, scenario_from_request
 from repro.core.bo import BOResult
+from repro.core.engine_config import EngineConfig, resolve_config
+from repro.core.priorbank import PriorBank
 from repro.distributed.fault_tolerance import HeartbeatMonitor
 from repro.distributed.sharding import (ADMISSION_POLICIES, admission_order,
                                         next_admission_shard,
@@ -292,6 +294,10 @@ class _LanePool:
             idx = jnp.asarray(np.asarray(rows))
             sub = {k: np.asarray(self.state[k][idx])
                    for k in wr._OUT_KEYS}
+            bank = self.eng.bank
+            th = (None if bank is None else
+                  {k: np.asarray(self.state["theta"][k][idx])
+                   for k in ("log_ls", "log_sv", "log_nv")})
             for j, r in enumerate(rows):
                 req_idx = int(self.order[r])
                 # evict: a long-lived server must not accumulate every
@@ -299,6 +305,17 @@ class _LanePool:
                 sc = self.eng._requests.pop(req_idx)
                 raw = {k: sub[k][j] for k in wr._OUT_KEYS}
                 reason = self.eng._degraded.pop(req_idx, "")
+                if bank is not None and not reason:
+                    # fold the retired run into the transfer bank
+                    # (degraded answers — preempted/shed/quarantined —
+                    # must not teach the prior)
+                    n = int(sub["n"][j])
+                    bank.record_result(
+                        sc, (th["log_ls"][j], th["log_sv"][j],
+                             th["log_nv"][j]),
+                        sub["ev_u"][j][:n], sub["ev_feas"][j][:n],
+                        sub["best_a"][j], sub["best_u"][j],
+                        bool(sub["has_best"][j]))
                 out.append(StreamResult(
                     index=req_idx, scenario=sc,
                     result=wr.result_from_row(sub, j, sc),
@@ -458,18 +475,15 @@ class StreamingBayesSplitEdge:
     # — the monitor's MAD rule cannot fire on a 2-pool fleet)
     ROUTE_STRAGGLER_X = 3.0
 
-    def __init__(self, requests: Iterable[Scenario], n_lanes: int = 8,
-                 l_pad: Optional[int] = None,
+    def __init__(self, requests: Iterable[Scenario],
+                 config: Optional[EngineConfig] = None, *,
+                 n_lanes: int = 8, l_pad: Optional[int] = None,
                  budget_max: Optional[int] = None, n_shards: int = 1,
                  devices: Optional[Sequence] = None,
                  arrivals: Optional[Sequence[float]] = None,
                  time_scale: float = 1.0,
                  on_result: Optional[Callable[[StreamResult], None]] = None,
-                 n_init: int = 9, n_max_repeat: int = 5,
-                 weights: AcqWeights = AcqWeights(),
-                 gp_cfg: gpm.GPConfig = gpm.GPConfig(), grid_n: int = 64,
-                 constraint_aware: bool = True, use_grad_term: bool = True,
-                 use_schedules: bool = True, warm_start: bool = True,
+                 bank: Optional[PriorBank] = None,
                  admission_policy="fifo",
                  shed_hopeless: bool = False, shed_safety: float = 1.0,
                  quarantine: str = "requeue", max_requeues: int = 1,
@@ -484,7 +498,15 @@ class StreamingBayesSplitEdge:
                  overload: str = "block",
                  routing: str = "score",
                  route_backoff_s: float = 0.05,
-                 route_max_retries: int = 3):
+                 route_max_retries: int = 3, **kw):
+        # BO-engine knobs (n_init, gp_cfg, warm_start, ...) arrive via
+        # the shared EngineConfig; legacy keyword arguments fold over it
+        # through the deprecation shim. l_pad is a *serving* static here
+        # (the explicit parameter above), not the EngineConfig field.
+        config = resolve_config(config, kw, "StreamingBayesSplitEdge")
+        if kw:
+            raise TypeError(f"StreamingBayesSplitEdge() got unexpected "
+                            f"keyword arguments {sorted(kw)}")
         if n_lanes < 1 or n_shards < 1 or n_lanes % n_shards:
             raise ValueError("n_lanes must split evenly over n_shards")
         width = n_lanes // n_shards
@@ -552,26 +574,28 @@ class StreamingBayesSplitEdge:
                          else [float(t) for t in arrivals])
         self.time_scale = float(time_scale)
         self.on_result = on_result
-        self.n_init = n_init
-        w = weights
-        if not use_grad_term:
-            w = dataclasses.replace(w, lam_g0=0.0, lam_gT=1e-9)
-        if not constraint_aware:
-            w = dataclasses.replace(w, lam_p=0.0)
-        self.weights = w
-        self.wvec = wr.acq_wvec(w)
-        self.constraint_aware = constraint_aware
-        self.grid_np = candidate_grid(grid_n)
+        self.config = config
+        self.n_init = config.n_init
+        self.weights = config.acq_weights()
+        self.wvec = wr.acq_wvec(self.weights)
+        self.constraint_aware = config.constraint_aware
+        self.grid_np = candidate_grid(config.grid_n)
         self.grid = jnp.asarray(self.grid_np, jnp.float32)
+        # transfer-learned prior bank: queried at request staging,
+        # recorded into at lane retirement, checkpointed with the
+        # serving state (None keeps every program bitwise-historical)
+        self.bank = bank
         self.cfg = wr.WholeRunConfig(
-            n_init=n_init, n_max_repeat=n_max_repeat,
+            n_init=config.n_init, n_max_repeat=config.n_max_repeat,
             # like the offline engine: the ledger must hold the full
             # init design even for budgets below n_init
-            budget_max=max(budget_max, n_init), l_pad=l_pad,
-            constraint_aware=constraint_aware,
-            gp_feasible_only=constraint_aware,
-            use_schedules=use_schedules, warm_start=warm_start, gp=gp_cfg,
-            fault_on_divergence=fault_on_divergence)
+            budget_max=max(budget_max, config.n_init), l_pad=l_pad,
+            constraint_aware=config.constraint_aware,
+            gp_feasible_only=config.constraint_aware,
+            use_schedules=config.use_schedules,
+            warm_start=config.warm_start, gp=config.gp_cfg,
+            fault_on_divergence=fault_on_divergence,
+            surrogate=config.surrogate, use_prior=bank is not None)
         self._pools = [
             _LanePool(i, width, self,
                       None if self.devices is None
@@ -726,7 +750,8 @@ class StreamingBayesSplitEdge:
         st = self._staged.pop(idx, None)
         if st is None:
             st = wr.stage_scenario(sc, self.l_pad, self.n_init,
-                                   self.constraint_aware, self.grid_np[:1])
+                                   self.constraint_aware, self.grid_np[:1],
+                                   bank=self.bank)
         return st
 
     def _prestage(self, pending: deque) -> None:
@@ -736,7 +761,7 @@ class StreamingBayesSplitEdge:
             if idx not in self._staged:
                 self._staged[idx] = wr.stage_scenario(
                     sc, self.l_pad, self.n_init, self.constraint_aware,
-                    self.grid_np[:1])
+                    self.grid_np[:1], bank=self.bank)
 
     # -- fault handling ------------------------------------------------------
     def _handle_fault(self, pool: _LanePool, lane: int,
@@ -1001,6 +1026,7 @@ class StreamingBayesSplitEdge:
             n_lanes_max=self.n_lanes_max, max_pending=self.max_pending,
             overload=self.overload, routing=self.routing,
             pool_widths=[p.width for p in self._pools],
+            has_bank=self.bank is not None,
             round=self._round)
 
     def _ckpt_tree(self) -> dict:
@@ -1034,7 +1060,12 @@ class StreamingBayesSplitEdge:
             degraded_code=np.asarray(
                 [DEGRADED_REASONS.index(self._degraded[i]) for i in dg],
                 np.int64))
-        return dict(pools=pools, queue=queue)
+        tree = dict(pools=pools, queue=queue)
+        if self.bank is not None:
+            # the learned priors ride the serving snapshot: kill +
+            # resume carries the bank (tests/test_priorbank.py)
+            tree["bank"] = self.bank.state_tree()
+        return tree
 
     def checkpoint_now(self) -> int:
         """Force a snapshot of the full serving state (pool pytrees +
@@ -1090,9 +1121,16 @@ class StreamingBayesSplitEdge:
         if meta is None:
             raise ValueError(f"{ckpt_dir} step {step} is not a "
                              f"streaming-engine checkpoint")
-        static = ("n_lanes", "n_shards", "l_pad", "budget_max", "n_init")
+        static = ("n_lanes", "n_shards", "l_pad", "budget_max")
         bad = {k: (kw[k], meta[k]) for k in static
                if k in kw and kw[k] != meta[k]}
+        # n_init is a static shape too, but lives on the EngineConfig
+        # (or the legacy n_init= keyword the shim folds over it)
+        cfg_in = kw.get("config")
+        given_n_init = kw.get(
+            "n_init", None if cfg_in is None else cfg_in.n_init)
+        if given_n_init is not None and given_n_init != meta["n_init"]:
+            bad["n_init"] = (given_n_init, meta["n_init"])
         if bad:
             raise ValueError(
                 "checkpoint/engine config mismatch — the serving state "
@@ -1101,6 +1139,12 @@ class StreamingBayesSplitEdge:
                             for k, (g, c) in bad.items()))
         for k in static:
             kw.setdefault(k, meta[k])
+        if cfg_in is None and "n_init" not in kw:
+            kw["config"] = EngineConfig(n_init=meta["n_init"])
+        if meta.get("has_bank") and kw.get("bank") is None:
+            # the snapshot carries a prior bank: arm an empty one so the
+            # rebuilt programs keep use_prior and _install can refill it
+            kw["bank"] = PriorBank()
         kw.setdefault("time_scale", meta["time_scale"])
         kw.setdefault("quarantine", meta["quarantine"])
         kw.setdefault("max_requeues", meta["max_requeues"])
@@ -1141,6 +1185,8 @@ class StreamingBayesSplitEdge:
                        if p.device is not None else jnp.asarray)
                 p.state = jax.tree.map(put, pt["state"])
                 p.run_data = jax.tree.map(put, pt["run_data"])
+        if self.bank is not None and "bank" in t:
+            self.bank.load_state(t["bank"])
         q = t["queue"]
         self._emitted = set(int(i) for i in q["emitted"])
         self._qlevel = {int(i): int(n) for i, n in

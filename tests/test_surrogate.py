@@ -1,0 +1,209 @@
+"""Pluggable surrogates (core/surrogate.py) and the shared EngineConfig
+(core/engine_config.py): the PR 8 API-redesign contracts.
+
+* ``surrogate=None`` and an explicit ``GPSurrogate`` trace to the same
+  program — bitwise-identical engine results (the protocol extraction
+  changed no numerics);
+* the random-feature surrogate approximates the exact GP posterior at a
+  shared fixed theta and runs end-to-end in every engine;
+* one ``EngineConfig`` drives all three engines, and the legacy
+  per-kwarg surface still works bit-for-bit through the deprecation
+  shim (warning included).
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BatchedBayesSplitEdge, Scenario,
+                        WholeRunBayesSplitEdge, default_vgg19_problem)
+from repro.core import gp as gpm
+from repro.core import surrogate as smod
+from repro.core.engine_config import EngineConfig, resolve_config
+from repro.runtime.stream import StreamingBayesSplitEdge
+
+
+def _scens(seeds=(0, 1), budgets=(6, 8)):
+    return [Scenario(default_vgg19_problem(), seed=s, budget=b)
+            for s in seeds for b in budgets]
+
+
+def _assert_bitwise(res_a, res_b):
+    assert len(res_a) == len(res_b)
+    for a, b in zip(res_a, res_b):
+        assert a.n_evals == b.n_evals
+        assert a.utilities == b.utilities
+        assert a.incumbent_trace == b.incumbent_trace
+        assert a.best_utility == b.best_utility
+
+
+def _dataset(n=20, seed=0):
+    rng = np.random.default_rng(seed)
+    cfg = gpm.GPConfig()
+    data = gpm.empty_dataset(cfg)
+    for x in rng.random((n, 2)):
+        y = float(np.sin(3 * x[0]) + x[1] ** 2 + 0.01 * rng.standard_normal())
+        data, _ = gpm.add_point(data, jnp.asarray(x, jnp.float32),
+                                jnp.asarray(y, jnp.float32))
+    return cfg, data
+
+
+# ---------------------------------------------------------------------------
+# protocol conformance
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("surr", [smod.GPSurrogate(),
+                                  smod.RandomFeatureSurrogate()])
+def test_protocol_conformance(surr):
+    assert isinstance(surr, smod.Surrogate)
+    assert hash(surr) == hash(type(surr)())          # static-arg ready
+    th = surr.init_theta()
+    assert set(th) == {"log_ls", "log_sv", "log_nv"}
+
+
+def test_resolve_defaults_to_exact_gp():
+    cfg = gpm.GPConfig()
+    assert isinstance(smod.resolve(None, cfg), smod.GPSurrogate)
+    rff = smod.RandomFeatureSurrogate()
+    assert smod.resolve(rff, cfg) is rff
+
+
+# ---------------------------------------------------------------------------
+# RFF vs exact GP: posterior equivalence at a shared fixed theta
+# ---------------------------------------------------------------------------
+
+
+def test_rff_posterior_tracks_exact_gp():
+    cfg, data = _dataset(24)
+    gp = gpm.fit(data, cfg)
+    theta = gp["theta"]
+
+    rff = smod.RandomFeatureSurrogate(n_features=1024)
+    batched = jax.tree.map(lambda v: v[None], data)
+    th0 = jax.tree.map(lambda v: v[None], theta)
+    model, steps = rff.fit_from(batched, th0)
+    assert np.asarray(steps).tolist() == [0]          # closed-form fit
+    one = jax.tree.map(lambda v: v[0], model)
+
+    rng = np.random.default_rng(1)
+    A = jnp.asarray(rng.random((64, 2)), jnp.float32)
+    mu_g, sg_g = gpm.posterior_batch(gp, A)
+    mu_r, sg_r, dmu_r = rff.posterior_with_grad(one, A)
+    mu_g, mu_r = np.asarray(mu_g), np.asarray(mu_r)
+
+    # same theta, approximate kernel: means should be tightly correlated
+    # and close in scale (studied on this synthetic surface)
+    c = np.corrcoef(mu_g, mu_r)[0, 1]
+    assert c > 0.99, f"posterior-mean correlation {c}"
+    rmse = float(np.sqrt(np.mean((mu_g - mu_r) ** 2)))
+    spread = float(np.std(mu_g)) + 1e-9
+    assert rmse < 0.25 * spread, f"rmse {rmse} vs spread {spread}"
+    assert np.all(np.asarray(sg_r) > 0)
+
+    # analytic gradient matches autodiff of the RFF mean
+    def mean_one(a):
+        m, _, _ = rff.posterior_with_grad(one, a[None])
+        return m[0]
+
+    g_ad = jax.vmap(jax.grad(mean_one))(A[:8])
+    np.testing.assert_allclose(np.asarray(dmu_r[:8]), np.asarray(g_ad),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rff_basis_deterministic():
+    w1, b1 = smod._rff_basis(128, 7, 2)
+    w2, b2 = smod._rff_basis(128, 7, 2)
+    assert np.array_equal(w1, w2) and np.array_equal(b1, b2)
+    w3, _ = smod._rff_basis(128, 8, 2)
+    assert not np.array_equal(w1, w3)
+
+
+# ---------------------------------------------------------------------------
+# engines: explicit GPSurrogate is bitwise the surrogate=None default
+# ---------------------------------------------------------------------------
+
+
+def test_wholerun_gp_surrogate_bitwise_default():
+    cold = EngineConfig(warm_start=False)
+    base = WholeRunBayesSplitEdge(_scens(), cold).run()
+    expl = WholeRunBayesSplitEdge(
+        _scens(), dataclasses.replace(
+            cold, surrogate=smod.GPSurrogate(cold.gp_cfg))).run()
+    _assert_bitwise(base, expl)
+
+
+def test_batched_engine_rff_smoke():
+    cfg = EngineConfig(surrogate=smod.RandomFeatureSurrogate())
+    res = BatchedBayesSplitEdge(_scens(seeds=(0,), budgets=(6,)), cfg).run()
+    assert len(res) == 1 and np.isfinite(res[0].best_utility)
+
+
+def test_wholerun_rff_end_to_end():
+    cfg = EngineConfig(surrogate=smod.RandomFeatureSurrogate())
+    r1 = WholeRunBayesSplitEdge(_scens(), cfg).run()
+    r2 = WholeRunBayesSplitEdge(_scens(), cfg).run()
+    _assert_bitwise(r1, r2)                           # deterministic
+    assert all(np.isfinite(r.best_utility) for r in r1)
+    assert all(r.n_evals >= 1 for r in r1)
+
+
+def test_streaming_rff_end_to_end():
+    cfg = EngineConfig(surrogate=smod.RandomFeatureSurrogate(),
+                       warm_start=False)
+    res = StreamingBayesSplitEdge(_scens(), cfg, n_lanes=2).run()
+    assert len(res) == len(_scens())
+    assert all(np.isfinite(r.best_utility) for r in res)
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig: one config, three engines, deprecated kwargs shim
+# ---------------------------------------------------------------------------
+
+
+def test_engine_config_shared_across_engines():
+    cfg = EngineConfig(n_init=7, warm_start=False)
+    rb = BatchedBayesSplitEdge(_scens(seeds=(0,)), cfg)
+    rw = WholeRunBayesSplitEdge(_scens(seeds=(0,)), cfg)
+    rs = StreamingBayesSplitEdge(_scens(seeds=(0,)), cfg, n_lanes=2)
+    assert rb.n_init == rw.n_init == rs.n_init == 7
+    assert rb.config == rw.config == rs.config == cfg
+
+
+def test_legacy_kwargs_warn_and_match():
+    with pytest.warns(DeprecationWarning, match="EngineConfig"):
+        legacy = WholeRunBayesSplitEdge(_scens(), warm_start=False,
+                                        n_init=7).run()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        new = WholeRunBayesSplitEdge(
+            _scens(), EngineConfig(warm_start=False, n_init=7)).run()
+    _assert_bitwise(legacy, new)
+
+
+def test_legacy_kwargs_fold_over_config():
+    cfg = resolve_config(EngineConfig(n_init=5),
+                         {"warm_start": False}, "test")
+    assert cfg.n_init == 5 and cfg.warm_start is False
+
+
+def test_unknown_kwarg_raises():
+    with pytest.raises(TypeError):
+        WholeRunBayesSplitEdge(_scens(), not_a_knob=1)
+    with pytest.raises(TypeError):
+        BatchedBayesSplitEdge(_scens(), not_a_knob=1)
+    with pytest.raises(TypeError):
+        StreamingBayesSplitEdge(_scens(), not_a_knob=1)
+
+
+def test_acq_weights_ablation_toggles():
+    base = EngineConfig()
+    w = base.acq_weights()
+    assert w == base.weights
+    no_grad = EngineConfig(use_grad_term=False).acq_weights()
+    assert no_grad.lam_g0 == 0.0 and no_grad.lam_gT == 1e-9
+    no_con = EngineConfig(constraint_aware=False).acq_weights()
+    assert no_con.lam_p == 0.0

@@ -67,6 +67,14 @@ gate breaks:
     score routing's deadline hit rate does not lose to round-robin
     (wall-clock paced: best of <=3 attempts like deadline_hit_rate)
     and both schedules emit exactly once;
+  * warmprior_matches_cold_off — a never-hitting (frozen empty) prior
+    bank reproduces the bank=None run bitwise on every surrogate
+    family (the cold-fallback contract of the transfer-learned bank);
+  * warmprior_fewer_evals — on the held-out slice of an mMobile replay
+    trace, a bank warmed on the training slice reaches the cold run's
+    final best utility in strictly fewer evaluations on at least one
+    held-out workload and never more on any (and the warm incumbent is
+    never worse), per surrogate family;
   * trend_deadline_hit_rate / trend_streaming_throughput — the two
     serving headline numbers (EDF deadline hit rate, streaming
     arrivals/s) must not regress more than 10% against the median of
@@ -227,6 +235,22 @@ def main() -> int:
           and o["failover_exactly_once"]),
          routing_hit_rate=o["routing_hit_rate"],
          rr_hit_rate=o["rr_hit_rate"], failover=o["failover"])
+    # transfer-learned prior bank: cold-fallback bitwise + the transfer
+    # lever on a held-out mMobile replay slice, per surrogate family
+    t = r["transfer"]
+    gate("warmprior_matches_cold_off", t["matches_cold_off"],
+         per_surrogate={k: v["matches_cold_off"]
+                        for k, v in t["surrogates"].items()})
+    gate("warmprior_fewer_evals",
+         t["fewer_evals"] and t["warm_never_worse"],
+         warm_never_worse=t["warm_never_worse"],
+         per_surrogate={
+             k: dict(cold=v["cold_evals_total"],
+                     warm=v["warm_evals_total"],
+                     strictly_fewer_on=v["strictly_fewer_on"],
+                     never_more=v["never_more"],
+                     heldout_hit_rate=v["heldout_hit_rate"])
+             for k, v in t["surrogates"].items()})
 
     # perf trend: the serving headline numbers must not regress >10%
     # against the median of the last 5 recorded runs. The history is
@@ -283,6 +307,8 @@ def main() -> int:
           f"overload elastic-match={o['elastic_matches_fixed']} "
           f"queue {o['queue_depth_max']}/{o['max_pending']} "
           f"routing {o['routing_hit_rate']} vs rr {o['rr_hit_rate']}, "
+          f"transfer cold-off={t['matches_cold_off']} "
+          f"fewer-evals={t['fewer_evals']}, "
           f"zero-rejits={r['zero_rejits_after_warmup']}")
     print("BENCH_CHECK_SUMMARY " + json.dumps(gates, sort_keys=True))
 
@@ -308,6 +334,14 @@ def main() -> int:
             overload_queue_depth_max=o["queue_depth_max"],
             overload_routing_hit_rate=o["routing_hit_rate"],
             overload_rr_hit_rate=o["rr_hit_rate"],
+            transfer_cold_evals_total=sum(
+                v["cold_evals_total"] for v in t["surrogates"].values()),
+            transfer_warm_evals_total=sum(
+                v["warm_evals_total"] for v in t["surrogates"].values()),
+            transfer_heldout_hit_rate=round(
+                sum(v["heldout_hit_rate"]
+                    for v in t["surrogates"].values())
+                / max(len(t["surrogates"]), 1), 3),
             gates=gates)
         with open(hist, "a") as f:
             f.write(json.dumps(record, sort_keys=True) + "\n")
