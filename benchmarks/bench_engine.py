@@ -15,7 +15,10 @@ backpressure at 4x load, score-vs-round-robin failover routing under
 a flapped+slowed pool) and a transfer-learning section
 (``run_transfer``: prior-bank warm-vs-cold evals-to-target A/B on a
 held-out mMobile replay slice, per surrogate family, plus the bitwise
-cold-fallback check). Emits the canonical artifact
+cold-fallback check) and a fleet front-end section (``run_fleet``:
+multi-host request transport — zero-fault bitwise parity with the
+single-process engine, lossy-network exactly-once + deadline hit-rate
+vs the fault-free fleet). Emits the canonical artifact
 ``benchmarks/artifacts/BENCH_bo_engine.json`` with wall-clock, speedups,
 per-iteration compile counts (must be flat after warmup => zero re-jits
 in the BO loop), warm-start fit-step accounting, candidates/sec,
@@ -659,6 +662,81 @@ def run_overload(repeats: int = 1, n_lanes: int = 4) -> dict:
     )
 
 
+def run_fleet(repeats: int = 1, n_lanes: int = 4) -> dict:
+    """Fleet front end: multi-host request transport over the simulated
+    network (runtime/fleet.py).
+
+    Two contracts — (a) a zero-fault 2-worker fleet replay-matches the
+    single-process streaming engine bitwise on the canonical
+    heterogeneous batch (cold fits: fleet placement is pure
+    re-scheduling); (b) under a lossy network (5% drop + duplication +
+    reordering + one partition/heal cycle) over a bursty deadlined
+    trace, every request still emits exactly one post-dedup result and
+    the deadline hit rate stays within 0.9x of the fault-free fleet."""
+    from repro.core.engine_config import EngineConfig
+    from repro.runtime.chaos import NetworkChaos
+    from repro.runtime.fleet import sim_fleet
+    from repro.runtime.stream import StreamingBayesSplitEdge, requests_from_trace
+    from repro.wireless.traces import arrival_trace
+
+    mk = make_hetero_scenarios
+    cold = lambda: EngineConfig(warm_start=False)
+
+    # -- zero-fault parity: 2 x n_lanes fleet vs one 2*n_lanes host ----------
+    ref = StreamingBayesSplitEdge(mk(), n_lanes=2 * n_lanes,
+                                  warm_start=False).run()
+    t_f = []
+    for _ in range(repeats):
+        t0 = time.time()
+        rt0 = sim_fleet(mk(), n_workers=2, config=cold(), n_lanes=n_lanes)
+        fleet_res = rt0.run()
+        t_f.append(time.time() - t0)
+    fleet_s = float(np.min(t_f))
+    st0 = rt0.fleet_stats()
+    zero_fault_bitwise = _bitwise_results(fleet_res, ref)
+
+    # -- lossy network over a bursty deadlined trace -------------------------
+    # dt_s maps transport cycles to trace seconds, so retransmission
+    # latency eats real deadline slack; the fault-free fleet on the
+    # same trace is the hit-rate baseline.
+    tr = arrival_trace("bursty", n=16, seed=0, budgets=(6, 10, 14, 20),
+                       deadline_slack=(2.0, 8.0))
+    fleet_kw = dict(n_workers=2, config=cold(), n_lanes=n_lanes,
+                    dt_s=0.05, arrivals=tr["t"],
+                    request_timeout=24.0, max_attempts=5)
+    rt_ff = sim_fleet(requests_from_trace(tr), **fleet_kw)
+    rt_ff.run()
+    ff_hit = rt_ff.fleet_stats()["deadline_hit_rate"]
+    chaos = NetworkChaos(seed=3, drop_rate=0.05, dup_rate=0.05,
+                         reorder_rate=0.2, delay_max=2,
+                         partition_at=[(8, "w0", "router")],
+                         heal_at=[(24, "*", "*")])
+    rt_l = sim_fleet(requests_from_trace(tr), chaos=chaos, **fleet_kw)
+    seen = []
+    rt_l.on_result = seen.append
+    rt_l.run()
+    st_l = rt_l.fleet_stats()
+    lossy_once = sorted(r.index for r in seen) == list(range(int(tr["n"])))
+    lossy_hit = st_l["deadline_hit_rate"]
+
+    return dict(
+        n_requests=len(mk()), n_workers=2, n_lanes=n_lanes,
+        fleet_s=round(fleet_s, 4),
+        fleet_cycles=int(st0["cycles"]),
+        zero_fault_bitwise=bool(zero_fault_bitwise),
+        faultfree_hit_rate=round(float(ff_hit), 4),
+        lossy_hit_rate=round(float(lossy_hit), 4),
+        lossy_exactly_once=bool(lossy_once),
+        lossy_hit_rate_ok=bool(lossy_hit >= 0.9 * ff_hit),
+        lossy_n_retries=int(st_l["n_retries"]),
+        lossy_n_timeouts=int(st_l["n_timeouts"]),
+        lossy_n_dup_results=int(st_l["n_dup_results"]),
+        lossy_n_degraded=int(st_l["n_degraded"]),
+        lossy_transport=st_l["transport"],
+        chaos_events=len(chaos.events),
+    )
+
+
 def run_transfer(repeats: int = 1) -> dict:
     """Transfer-learned prior bank A/B on a held-out slice of an
     mMobile replay trace, per surrogate family (PR 8).
@@ -797,7 +875,7 @@ def run(n_scenarios: int = 16, budget: int = 20, repeats: int = 1,
         mixed: bool = True, compaction: bool = True,
         hetero: bool = True, streaming: bool = True,
         chaos: bool = True, overload: bool = True,
-        transfer: bool = True) -> dict:
+        transfer: bool = True, fleet: bool = True) -> dict:
     mon = CompileMonitor()
 
     # -- seed baseline: per-iteration recompiling sequential loop ------------
@@ -917,6 +995,8 @@ def run(n_scenarios: int = 16, budget: int = 20, repeats: int = 1,
     overload_report = run_overload(repeats=repeats) if overload else None
     # -- transfer-learned prior bank: held-out warm-vs-cold A/B --------------
     transfer_report = run_transfer(repeats=repeats) if transfer else None
+    # -- fleet front end: multi-host transport parity + lossy exactly-once ---
+    fleet_report = run_fleet(repeats=repeats) if fleet else None
 
     n_cand = 64 * 64 + scs[0].problem.L + 45
     evals = sum(r.n_evals for r in bat_results)
@@ -1041,6 +1121,16 @@ def run(n_scenarios: int = 16, budget: int = 20, repeats: int = 1,
         warmprior_fewer_evals=(
             None if transfer_report is None
             else transfer_report["fewer_evals"]),
+        # fleet front end: zero-fault bitwise parity with the
+        # single-process engine + lossy-network exactly-once/hit-rate
+        fleet=fleet_report,
+        fleet_matches_single_host=(
+            None if fleet_report is None
+            else fleet_report["zero_fault_bitwise"]),
+        fleet_lossy_exactly_once=(
+            None if fleet_report is None
+            else bool(fleet_report["lossy_exactly_once"]
+                      and fleet_report["lossy_hit_rate_ok"])),
         compile_counters=compile_counters(),
     )
     if save:
@@ -1089,12 +1179,17 @@ def main():
                     help="run the transfer-learned prior-bank section "
                          "(held-out warm-vs-cold evals-to-target A/B "
                          "per surrogate; --no-transfer disables)")
+    ap.add_argument("--fleet", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="run the fleet front-end section (multi-host "
+                         "transport zero-fault parity + lossy-network "
+                         "exactly-once/hit-rate; --no-fleet disables)")
     args = ap.parse_args()
     r = run(args.scenarios, args.budget, args.repeats, args.legacy,
             mixed=args.mixed_arch, compaction=args.compaction,
             hetero=args.hetero, streaming=args.streaming,
             chaos=args.chaos, overload=args.overload,
-            transfer=args.transfer)
+            transfer=args.transfer, fleet=args.fleet)
     seed_s = r["sequential_seed_s"]
     print(f"seed-sequential {'n/a' if seed_s is None else f'{seed_s:.2f}s'}"
           f"  sequential {r['sequential_s']:.2f}s"
@@ -1165,6 +1260,15 @@ def main():
         print(f"transfer bank {t['n_train']} train / {t['n_heldout']} "
               f"held-out: cold-off bitwise {t['matches_cold_off']}, "
               f"fewer-evals {t['fewer_evals']} [{per}]")
+    if r["fleet"] is not None:
+        f = r["fleet"]
+        print(f"fleet {f['n_workers']}x{f['n_lanes']} lanes: zero-fault "
+              f"bitwise {f['zero_fault_bitwise']} ({f['fleet_s']:.2f}s, "
+              f"{f['fleet_cycles']} cycles), lossy exactly-once "
+              f"{f['lossy_exactly_once']} hit-rate {f['lossy_hit_rate']} "
+              f"vs fault-free {f['faultfree_hit_rate']} "
+              f"({f['lossy_n_retries']} retries, "
+              f"{f['lossy_n_dup_results']} dup results)")
     print(f"matern-score {r['matern_score_candidates_per_sec']:,} cand/s  "
           f"BO loop {r['bo_candidates_per_sec']:,} cand/s")
     return r

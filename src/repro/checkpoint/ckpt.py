@@ -10,6 +10,14 @@ Arrays are written as the host-global view, so restoring onto a
 *different* mesh (elastic scale-up/down) is just device_put with the new
 sharding — the multi-host generalization shards arrays.npz per process
 and stitches via the manifest (process_index recorded for that purpose).
+
+Durability note: the commit is the ``os.rename`` of the staging dir to
+its final name, followed by an fsync of the *parent* directory — the
+rename alone only mutates the in-memory dentry cache, so a power cut
+shortly after could roll the commit back even though readers already saw
+it. The parent fsync is best-effort: platforms without directory file
+descriptors (notably Windows) skip it and keep the weaker
+rename-only guarantee.
 """
 from __future__ import annotations
 
@@ -42,6 +50,25 @@ def _unflatten_into(template, flat):
             str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
         return flat[key]
     return jax.tree_util.tree_map_with_path(fill, template)
+
+
+def _fsync_dir(path: str) -> None:
+    """Flush a directory's entry table to disk so a just-committed rename
+    survives power loss. Best-effort: platforms that cannot open
+    directories (no ``O_DIRECTORY``, e.g. Windows) or filesystems that
+    reject directory fsync keep the weaker rename-only guarantee."""
+    if not hasattr(os, "O_DIRECTORY"):
+        return
+    try:
+        fd = os.open(path, os.O_RDONLY | os.O_DIRECTORY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
 
 
 def save(ckpt_dir: str, step: int, tree: Any, *, metadata: Optional[dict] = None,
@@ -84,6 +111,7 @@ def save(ckpt_dir: str, step: int, tree: Any, *, metadata: Optional[dict] = None
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
+        _fsync_dir(ckpt_dir)
 
     def write():
         last = None

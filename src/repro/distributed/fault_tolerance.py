@@ -28,21 +28,33 @@ import numpy as np
 
 
 class HeartbeatMonitor:
+    """Liveness/straggler tracker.
+
+    Timestamps come from ``clock`` — ``time.monotonic`` by default. Wall
+    clocks (``time.time``) are wrong here: an NTP step or operator
+    ``date`` call jumps ``now`` past ``dead_timeout_s`` and falsely
+    flags every host dead at once. Callers that need deterministic
+    timelines (tests, the simulated fleet transport) inject their own
+    clock instead of passing explicit ``now=`` everywhere.
+    """
+
     def __init__(self, n_hosts: int, window: int = 20,
-                 straggler_sigma: float = 3.0, dead_timeout_s: float = 60.0):
+                 straggler_sigma: float = 3.0, dead_timeout_s: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic):
         self.n_hosts = n_hosts
         self.window = window
         self.sigma = straggler_sigma
         self.dead_timeout_s = dead_timeout_s
+        self.clock = clock
         self.step_times: Dict[int, List[float]] = {h: [] for h in range(n_hosts)}
-        self.last_seen: Dict[int, float] = {h: time.time() for h in range(n_hosts)}
+        self.last_seen: Dict[int, float] = {h: self.clock() for h in range(n_hosts)}
 
     def report(self, host: int, step_time_s: float, now: Optional[float] = None):
         ts = self.step_times[host]
         ts.append(step_time_s)
         if len(ts) > self.window:
             ts.pop(0)
-        self.last_seen[host] = now if now is not None else time.time()
+        self.last_seen[host] = now if now is not None else self.clock()
 
     def heartbeat(self, host: int, now: Optional[float] = None):
         """Liveness-only ping: refresh ``last_seen`` without recording a
@@ -51,10 +63,10 @@ class HeartbeatMonitor:
         step-time window with zeros — that would mask it from
         :meth:`stragglers`, whose whole point is catching alive-but-slow
         hosts."""
-        self.last_seen[host] = now if now is not None else time.time()
+        self.last_seen[host] = now if now is not None else self.clock()
 
     def _silent(self, now: Optional[float]) -> set:
-        now = now if now is not None else time.time()
+        now = now if now is not None else self.clock()
         return {h for h, t in self.last_seen.items()
                 if now - t > self.dead_timeout_s}
 

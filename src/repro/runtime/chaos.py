@@ -45,6 +45,14 @@ Every random choice (which pool, which lane) comes from one
 schedule is fully determined by ``(seed, schedule)`` and a failing run
 replays exactly: :func:`FaultInjector.save_events` /
 :func:`load_events` round-trip the event log as JSON for CI artifacts.
+
+The fleet transport layer (``runtime/fleet.py``) has its own fault
+model, :class:`NetworkChaos`: per-message drop/duplicate/reorder/bounded
+delay plus scheduled one-way link partitions and heals, all drawn from
+one seeded rng in send order so a network-failure scenario is as
+replayable as the engine faults above. ``kill_router_at`` raises
+:class:`SimulatedCrash` inside the router's serve loop — the
+router-death model for its checkpoint/resume contract.
 """
 from __future__ import annotations
 
@@ -262,6 +270,141 @@ class FaultInjector:
         """Dump the injected-fault event log as JSON — uploaded next to
         the arrival trace by the CI chaos job so a failing soak run
         replays with the exact same fault schedule."""
+        d = os.path.dirname(os.path.abspath(path))
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(dict(seed=self.seed, events=self.events), f,
+                      sort_keys=True)
+
+
+class NetworkChaos:
+    """Seed-deterministic link-fault model for the fleet transport
+    (``runtime/fleet.py`` ``SimTransport``).
+
+    Per-message faults (drawn from one rng stream in send order, so the
+    whole network history is determined by ``(seed, rates, schedule)``):
+
+    * ``drop_rate`` — the message vanishes (logged, never delivered).
+    * ``dup_rate`` — a second copy is delivered independently (the
+      at-least-once dedup exercise).
+    * ``delay_max`` — each copy waits an extra uniform 0..delay_max
+      cycles before delivery.
+    * ``reorder_rate`` — a cycle's ready-to-deliver batch for an
+      endpoint is shuffled instead of kept in send order.
+
+    Scheduled link events (fired by :meth:`step` when the transport's
+    cycle clock reaches them):
+
+    * ``partition_at`` — ``(cycle, src, dst)`` one-way cuts; ``"*"``
+      wildcards either endpoint (so ``(c, "w0", "*")`` silences a host's
+      egress while its ingress still works — the classic asymmetric
+      partition).
+    * ``heal_at`` — ``(cycle, src, dst)`` removes matching cuts;
+      ``(cycle, "*", "*")`` heals everything.
+    * ``kill_router_at`` — serve-loop cycles at which
+      :meth:`maybe_kill` raises :class:`SimulatedCrash` (after the
+      router's checkpoint, mirroring ``FaultInjector.kill_at``).
+
+    Partitioned sends are logged as ``partition_drop`` events and count
+    toward the transport's undelivered-envelope table — at-least-once
+    retransmission above the transport is what recovers them.
+    """
+
+    def __init__(self, seed: int = 0,
+                 drop_rate: float = 0.0,
+                 dup_rate: float = 0.0,
+                 reorder_rate: float = 0.0,
+                 delay_max: int = 0,
+                 partition_at: Iterable[tuple] = (),
+                 heal_at: Iterable[tuple] = (),
+                 kill_router_at: Iterable[int] = ()):
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)
+        self.drop_rate = float(drop_rate)
+        self.dup_rate = float(dup_rate)
+        self.reorder_rate = float(reorder_rate)
+        self.delay_max = int(delay_max)
+        self.partition_at = sorted((int(c), str(s), str(d))
+                                   for c, s, d in partition_at)
+        self.heal_at = sorted((int(c), str(s), str(d))
+                              for c, s, d in heal_at)
+        self.kill_router_at = set(int(c) for c in kill_router_at)
+        self.cuts: set = set()          # live one-way (src, dst) cuts
+        self.events: list = []
+
+    def _log(self, kind: str, cycle: int, **detail) -> dict:
+        ev = dict(kind=kind, cycle=cycle, **detail)
+        self.events.append(ev)
+        return ev
+
+    # -- schedule ------------------------------------------------------------
+    def step(self, cycle: int) -> None:
+        """Apply every partition/heal whose cycle has arrived (``<=`` so
+        a transport that skips cycles still converges to the scheduled
+        link state)."""
+        while self.partition_at and self.partition_at[0][0] <= cycle:
+            c, s, d = self.partition_at.pop(0)
+            self.cuts.add((s, d))
+            self._log("partition", cycle, src=s, dst=d, scheduled=c)
+        while self.heal_at and self.heal_at[0][0] <= cycle:
+            c, s, d = self.heal_at.pop(0)
+            if (s, d) == ("*", "*"):
+                healed = sorted(self.cuts)
+                self.cuts.clear()
+            else:
+                healed = sorted(cut for cut in self.cuts
+                                if cut == (s, d))
+                self.cuts -= set(healed)
+            self._log("heal", cycle, src=s, dst=d, scheduled=c,
+                      healed=[list(h) for h in healed])
+
+    def blocked(self, src: str, dst: str) -> bool:
+        """Is the one-way ``src -> dst`` link currently cut?"""
+        return any((cs in ("*", src)) and (cd in ("*", dst))
+                   for cs, cd in self.cuts)
+
+    # -- per-message fate ----------------------------------------------------
+    def fate(self, cycle: int, src: str, dst: str, seq: int) -> list:
+        """Delivery fate of one send: a list of extra delays (in cycles),
+        one per delivered copy — ``[]`` means dropped, ``[0]`` is clean
+        delivery, ``[2, 0]`` is a delayed original plus a prompt
+        duplicate. Exactly three rng draws per call regardless of
+        outcome, so the stream stays aligned across replays."""
+        u_drop = self.rng.random()
+        u_dup = self.rng.random()
+        delays = self.rng.integers(0, self.delay_max + 1, size=2)
+        if u_drop < self.drop_rate:
+            self._log("drop", cycle, src=src, dst=dst, seq=seq)
+            return []
+        copies = [int(delays[0])]
+        if u_dup < self.dup_rate:
+            copies.append(int(delays[1]))
+            self._log("duplicate", cycle, src=src, dst=dst, seq=seq)
+        return copies
+
+    def deliver_order(self, cycle: int, endpoint: str, k: int):
+        """Delivery order for an endpoint's k ready messages this cycle:
+        a permutation when the reorder fault fires, else None (keep
+        arrival order). One rng draw always; the permutation draw only
+        when it fires."""
+        if k > 1 and self.rng.random() < self.reorder_rate:
+            self._log("reorder", cycle, endpoint=endpoint, n=k)
+            return self.rng.permutation(k)
+        return None
+
+    def maybe_kill(self, cycle: int) -> None:
+        """Raise :class:`SimulatedCrash` if a router kill is scheduled
+        for this serve-loop cycle (one-shot, like ``kill_at``)."""
+        if cycle in self.kill_router_at:
+            self.kill_router_at.discard(cycle)
+            self._log("kill_router", cycle)
+            raise SimulatedCrash(cycle)
+
+    # -- artifacts -----------------------------------------------------------
+    def save_events(self, path: str) -> None:
+        """JSON event log, same artifact contract as
+        :meth:`FaultInjector.save_events`."""
         d = os.path.dirname(os.path.abspath(path))
         if d:
             os.makedirs(d, exist_ok=True)

@@ -101,8 +101,10 @@ from repro.distributed.sharding import (ADMISSION_POLICIES, admission_order,
                                         route_admission_shard)
 
 # vocabulary of degraded-result reasons (checkpointed as codes — the
-# tuple is APPEND-ONLY: existing checkpoints store indices into it)
-DEGRADED_REASONS = ("quarantine", "preempted", "shed", "rejected")
+# tuple is APPEND-ONLY: existing checkpoints store indices into it;
+# "undeliverable" is the fleet router's retry-budget-exhausted verdict)
+DEGRADED_REASONS = ("quarantine", "preempted", "shed", "rejected",
+                    "undeliverable")
 
 QUARANTINE_POLICIES = ("requeue", "repair")
 
@@ -160,6 +162,28 @@ def dedup_results(results: Iterable[StreamResult]) -> List[StreamResult]:
             seen.add(r.index)
             out.append(r)
     return out
+
+
+def host_degraded_result(idx: int, sc: Scenario, now_trace: float,
+                         reason: str) -> StreamResult:
+    """Degraded answer produced host-side, no lane ever consumed: the
+    feasible projection of the search-space center. Module-level so
+    both the streaming engine (shed/reject/preempt bookkeeping in
+    ``_host_result``) and the fleet router (``runtime/fleet.py``
+    oversized rejection and retry-budget exhaustion) emit the identical
+    payload for the same request."""
+    a = sc.problem.project_feasible(np.array([0.5, 0.5]))
+    feas = sc.problem.feasible(a)
+    u = float(sc.problem.evaluate(a, record=False))
+    acc = float(sc.problem._accuracy(*sc.problem.denormalize(a))[1])
+    res = BOResult(
+        np.asarray(a, np.float64) if feas else None,
+        u if feas else -np.inf, acc if feas else 0.0,
+        0, [], [], [], [])
+    return StreamResult(index=idx, scenario=sc, result=res,
+                        pool=-1, lane=-1, gen=-1, raw={},
+                        degraded=True, reason=reason,
+                        emit_s=now_trace)
 
 
 class _LanePool:
@@ -835,20 +859,9 @@ class StreamingBayesSplitEdge:
         the feasible projection of the search-space center. Shared by
         queue shedding (``reason="shed"``), overload rejection and
         oversized-request rejection (``reason="rejected"``)."""
-        a = sc.problem.project_feasible(np.array([0.5, 0.5]))
-        feas = sc.problem.feasible(a)
-        u = float(sc.problem.evaluate(a, record=False))
-        acc = float(sc.problem._accuracy(*sc.problem.denormalize(a))[1])
-        res = BOResult(
-            np.asarray(a, np.float64) if feas else None,
-            u if feas else -np.inf, acc if feas else 0.0,
-            0, [], [], [], [])
         self._requests.pop(idx, None)
         self._staged.pop(idx, None)
-        return StreamResult(index=idx, scenario=sc, result=res,
-                            pool=-1, lane=-1, gen=-1, raw={},
-                            degraded=True, reason=reason,
-                            emit_s=now_trace)
+        return host_degraded_result(idx, sc, now_trace, reason)
 
     def _preempt(self, now_trace: float) -> None:
         """Retire in-flight lanes whose deadlines are unmeetable; the
@@ -1006,7 +1019,7 @@ class StreamingBayesSplitEdge:
                 f["ewma_wall_s"] = p.ewma_wall
             if self.monitor is not None and not p.dead:
                 grace = 0.5 * self.monitor.dead_timeout_s
-                stale = time.time() - self.monitor.last_seen[p.pool_id]
+                stale = self.monitor.clock() - self.monitor.last_seen[p.pool_id]
                 if stale > grace > 0:
                     f["stale_frac"] = stale / grace - 1.0
             feats.append(f)

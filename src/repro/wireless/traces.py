@@ -145,6 +145,67 @@ def arrival_trace(kind: str = "poisson", n: int = 100, seed: int = 0,
     return out
 
 
+_PER_ARRIVAL_KEYS = ("t", "gain_offset_db", "budget", "arch", "init_seed",
+                     "deadline_s")
+
+
+def split_trace(trace: dict, n_hosts: int, seed: int = 0) -> list:
+    """Deterministically split one arrival trace into ``n_hosts``
+    per-host sub-traces (the fleet benchmark's ingest shards: each host
+    replays its own sub-trace while the union is exactly the single-host
+    workload). Every arrival is assigned to one host by a seeded draw;
+    each sub-trace keeps its arrivals in global time order and records
+    the original arrival indices in ``src_index``, so
+    :func:`merge_traces` recomposes the original trace exactly and the
+    per-request ``init_seed`` identity survives re-sharding. Sub-traces
+    carry only JSON-native types and round-trip through
+    :func:`save_trace`/:func:`load_trace`."""
+    if n_hosts < 1:
+        raise ValueError(f"n_hosts must be >= 1, got {n_hosts}")
+    n = int(trace["n"])
+    rng = np.random.default_rng(seed)
+    host_of = rng.integers(0, n_hosts, size=n)
+    subs = []
+    for h in range(n_hosts):
+        idx = [i for i in range(n) if host_of[i] == h]
+        sub = {k: v for k, v in trace.items() if k not in _PER_ARRIVAL_KEYS}
+        sub.update(
+            n=len(idx), host=h, n_hosts=n_hosts, split_seed=int(seed),
+            src_index=[int(i) for i in idx],
+        )
+        for k in _PER_ARRIVAL_KEYS:
+            if k in trace:
+                sub[k] = [trace[k][i] for i in idx]
+        subs.append(sub)
+    return subs
+
+
+def merge_traces(subs: list) -> dict:
+    """Inverse of :func:`split_trace`: recompose per-host sub-traces
+    into the original trace (``merge_traces(split_trace(tr, k, s)) ==
+    tr`` for any ``k``, ``s``). Raises if the sub-traces do not cover a
+    contiguous ``0..n-1`` arrival-index range exactly once."""
+    if not subs:
+        raise ValueError("no sub-traces to merge")
+    rows = []
+    for sub in subs:
+        for j, i in enumerate(sub["src_index"]):
+            rows.append((int(i), sub, j))
+    rows.sort()
+    idxs = [r[0] for r in rows]
+    if idxs != list(range(len(rows))):
+        raise ValueError(
+            f"sub-traces do not partition 0..n-1: got indices {idxs[:8]}...")
+    out = {k: v for k, v in subs[0].items()
+           if k not in _PER_ARRIVAL_KEYS
+           and k not in ("host", "n_hosts", "split_seed", "src_index", "n")}
+    out["n"] = len(rows)
+    for k in _PER_ARRIVAL_KEYS:
+        if k in subs[0]:
+            out[k] = [sub[k][j] for _, sub, j in rows]
+    return out
+
+
 def save_trace(trace: dict, path: str) -> None:
     """Dump an arrival trace as JSON — the replay artifact a failing
     soak run uploads so the exact arrival sequence is reproducible."""

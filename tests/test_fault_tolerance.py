@@ -195,3 +195,30 @@ def test_data_pipeline_determinism_and_prefetch():
     p3 = SyntheticTokenPipeline(1000, 8, 16, seed=5, shard=1, n_shards=2)
     assert not np.array_equal(p3.batch_at(3)["tokens"],
                               p2.batch_at(3)["tokens"])
+
+
+def test_heartbeat_monitor_injectable_clock_survives_wall_jump():
+    """Regression: HeartbeatMonitor timestamps come from an injectable
+    monotonic clock, not time.time(). With a fake clock the timeline is
+    fully deterministic, and a wall-clock step (the NTP/date-jump
+    hazard that motivated the monotonic switch) cannot flag hosts dead
+    because the monitor never consults the wall clock."""
+    t = [100.0]
+    mon = HeartbeatMonitor(n_hosts=2, dead_timeout_s=10.0,
+                           clock=lambda: t[0])
+    assert mon.last_seen == {0: 100.0, 1: 100.0}
+    t[0] = 105.0
+    mon.heartbeat(0)                       # host 0 pings via the clock
+    assert mon.last_seen[0] == 105.0
+    t[0] = 109.0                           # 9 s of host-1 silence: alive
+    assert mon.dead() == []
+    t[0] = 111.0                           # 11 s of silence: dead
+    assert mon.dead() == [1]
+    mon.report(1, 1.0)                     # report() also uses the clock
+    assert mon.last_seen[1] == 111.0 and mon.dead() == []
+
+
+def test_heartbeat_monitor_default_clock_is_monotonic():
+    import time as _time
+    mon = HeartbeatMonitor(n_hosts=1)
+    assert mon.clock is _time.monotonic

@@ -1,0 +1,353 @@
+"""Fleet front end: the multi-host transport's robustness invariants.
+
+* Zero-fault fleet runs replay-match the single-process streaming
+  engine **bitwise** (cold fits): workers admit through the identical
+  staging path and a lane's trajectory is a function of its own request
+  only, so cross-host placement is pure re-scheduling.
+* Under seeded drop/duplicate/reorder/delay/partition chaos the run
+  terminates with exactly-once post-dedup results — no wedged router,
+  no silent loss: a request the fleet cannot serve emits a degraded
+  ``"undeliverable"`` result.
+* A killed-then-resumed router (``ckpt_every=1``) never double-emits:
+  the watermark/in-flight snapshot is taken before any emission of the
+  crashing cycle.
+"""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.batch_bo import scenario_from_request
+from repro.core.engine_config import EngineConfig
+from repro.runtime.chaos import NetworkChaos, SimulatedCrash, load_events
+from repro.runtime.fleet import (ROUTER, Envelope, FleetRouter, FleetWorker,
+                                 SimTransport, _LinkDedup, dedup_results,
+                                 sim_fleet, socket_fleet)
+from repro.runtime.stream import StreamingBayesSplitEdge, requests_from_trace
+from repro.wireless.traces import (arrival_trace, load_trace, merge_traces,
+                                   save_trace, split_trace)
+
+COLD = EngineConfig(warm_start=False)
+
+
+def _reqs(n=10, budgets=(6, 8, 10)):
+    return [scenario_from_request("vgg19", (-1) ** i * 1.5,
+                                  budgets[i % len(budgets)], i)
+            for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def ref10():
+    """Single-process cold reference for the standard 10-request feed."""
+    return StreamingBayesSplitEdge(_reqs(10), COLD, n_lanes=8).run()
+
+
+def _assert_bitwise(got, ref):
+    assert len(got) == len(ref)
+    for i, (a, b) in enumerate(zip(got, ref)):
+        assert a.n_evals == b.n_evals, f"request {i}: n_evals"
+        assert np.array_equal(np.asarray(a.utilities),
+                              np.asarray(b.utilities)), f"request {i}"
+        assert np.array_equal(np.asarray(a.incumbent_trace),
+                              np.asarray(b.incumbent_trace)), f"request {i}"
+
+
+# -- envelope / transport units ----------------------------------------------
+
+def test_link_dedup_laws():
+    d = _LinkDedup()
+    assert d.fresh(0) and d.fresh(1)
+    assert not d.fresh(0) and not d.fresh(1)      # duplicates collapse
+    assert d.fresh(4) and d.fresh(3)              # reordered arrivals pass
+    assert not d.fresh(4)
+    assert d.fresh(2)
+    # watermark advanced over the contiguous prefix: the sparse set is
+    # empty again (bounded memory on a long-lived link)
+    assert d.lo == 5 and not d.seen
+    assert not d.fresh(1)
+
+
+def _scripted_send(chaos):
+    """Send a fixed envelope script through a SimTransport and return
+    (delivery trace, event log)."""
+    t = SimTransport([ROUTER, "w0", "w1"], chaos=chaos)
+    trace = []
+    seq = {w: 0 for w in ("w0", "w1")}
+    for cyc in range(12):
+        for w in ("w0", "w1"):
+            t.send(Envelope(seq=seq[w], src=ROUTER, dst=w, kind="req",
+                            index=cyc))
+            seq[w] += 1
+        t.tick()
+        for w in ("w0", "w1"):
+            trace.append((cyc, w, [e.seq for e in t.recv(w)]))
+    return trace, None if chaos is None else list(chaos.events), t
+
+
+def test_sim_transport_deterministic():
+    mk = lambda: NetworkChaos(seed=13, drop_rate=0.2, dup_rate=0.2,
+                              reorder_rate=0.5, delay_max=2,
+                              partition_at=[(5, ROUTER, "w1")],
+                              heal_at=[(9, "*", "*")])
+    tr1, ev1, _ = _scripted_send(mk())
+    tr2, ev2, _ = _scripted_send(mk())
+    assert tr1 == tr2, "delivery must be seed-pure"
+    assert ev1 == ev2, "event log must be seed-pure"
+    assert any(e["kind"] == "partition_drop" for e in ev1)
+    # no chaos -> lossless in-order FIFO, one cycle of latency
+    tr0, _, t0 = _scripted_send(None)
+    assert all(seqs == [c] for c, _, seqs in tr0)
+    assert t0.stats["dropped"] == 0 and not t0.undelivered_table()
+
+
+def test_network_chaos_partition_wildcards_and_artifacts(tmp_path):
+    ch = NetworkChaos(seed=0, partition_at=[(1, "w0", "*"), (1, "*", "w0")],
+                      heal_at=[(4, "*", "*")])
+    ch.step(1)
+    assert ch.blocked("w0", ROUTER) and ch.blocked(ROUTER, "w0")
+    assert not ch.blocked("w1", ROUTER)
+    ch.step(4)
+    assert not ch.blocked("w0", ROUTER)
+    path = str(tmp_path / "net_events.json")
+    ch.save_events(path)
+    back = load_events(path)
+    assert back["seed"] == 0 and back["events"] == ch.events
+    kinds = [e["kind"] for e in ch.events]
+    assert kinds.count("partition") == 2 and kinds.count("heal") == 1
+
+
+def test_undelivered_table_accounts_losses():
+    ch = NetworkChaos(seed=1, drop_rate=1.0)
+    t = SimTransport([ROUTER, "w0"], chaos=ch)
+    t.send(Envelope(seq=0, src=ROUTER, dst="w0", kind="req", index=7))
+    rows = t.undelivered_table()
+    assert [r["fate"] for r in rows] == ["lost"]
+    assert rows[0]["index"] == 7 and rows[0]["msg"] == "req"
+
+
+# -- the replay-match contract ------------------------------------------------
+
+def test_zero_fault_fleet_matches_single_host_bitwise(ref10):
+    rt = sim_fleet(_reqs(10), n_workers=2, config=COLD, n_lanes=4)
+    _assert_bitwise(rt.run(), ref10)
+    st = rt.fleet_stats()
+    assert st["n_retries"] == 0 and st["n_degraded"] == 0
+    assert st["transport"]["dropped"] == 0
+
+
+def test_lossy_exactly_once_and_bitwise(ref10):
+    """5%+ drop, duplication, reordering and bounded delay: every
+    request still emits exactly one post-dedup result, bitwise equal to
+    the fault-free reference (re-execution is deterministic)."""
+    ch = NetworkChaos(seed=3, drop_rate=0.15, dup_rate=0.1,
+                      reorder_rate=0.3, delay_max=2)
+    rt = sim_fleet(_reqs(10), n_workers=2, config=COLD, n_lanes=4,
+                   chaos=ch, request_timeout=24.0, max_attempts=5)
+    seen = []
+    rt.on_result = seen.append
+    got = rt.run()
+    assert sorted(r.index for r in seen) == list(range(10))  # exactly-once
+    _assert_bitwise(got, ref10)
+    assert rt.fleet_stats()["transport"]["dropped"] > 0  # faults did fire
+
+
+def test_partition_heal_drains_and_reconciles(ref10):
+    """One-way egress cut on w0: the router re-dispatches its in-flight
+    work; w0 keeps draining locally and its retransmitted results
+    reconcile through dedup on heal. Exactly-once, bitwise."""
+    ch = NetworkChaos(seed=5, partition_at=[(3, "w0", ROUTER)],
+                      heal_at=[(30, "*", "*")])
+    rt = sim_fleet(_reqs(10), n_workers=2, config=COLD, n_lanes=4,
+                   chaos=ch, request_timeout=10.0, max_attempts=6)
+    got = rt.run()
+    _assert_bitwise(got, ref10)
+    st = rt.fleet_stats()
+    assert st["n_timeouts"] >= 1          # the cut was noticed
+    assert st["n_degraded"] == 0          # ... and fully recovered
+    kinds = [e["kind"] for e in ch.events]
+    assert "partition" in kinds
+
+
+def test_total_partition_degrades_never_silent():
+    """Both directions of the only worker cut forever: the retry budget
+    and heartbeat timeout exhaust, and every admitted request still
+    emits exactly one result — degraded ``undeliverable``, never
+    silence, never a wedge."""
+    ch = NetworkChaos(seed=7, partition_at=[(3, "w0", "*"), (3, "*", "w0")])
+    rt = sim_fleet(_reqs(6), n_workers=1, config=COLD, n_lanes=4,
+                   chaos=ch, request_timeout=6.0, max_attempts=3,
+                   hb_timeout=8.0)
+    seen = []
+    rt.on_result = seen.append
+    got = rt.run()
+    assert len(got) == 6
+    assert sorted(r.index for r in seen) == list(range(6))
+    st = rt.fleet_stats()
+    assert st["n_undeliverable"] >= 1
+    assert st["n_worker_dead"] == 1
+    und = [r for r in seen if r.degraded]
+    assert und and all(r.reason == "undeliverable" for r in und)
+
+
+def test_worker_loss_heartbeat_requeues_to_survivor(ref10):
+    """w0 silenced in both directions permanently: the heartbeat
+    monitor declares it dead, its in-flight work requeues onto w1, and
+    the whole feed completes non-degraded, bitwise."""
+    ch = NetworkChaos(seed=9, partition_at=[(2, "w0", "*"), (2, "*", "w0")])
+    rt = sim_fleet(_reqs(10), n_workers=2, config=COLD, n_lanes=4,
+                   chaos=ch, request_timeout=50.0, max_attempts=6,
+                   hb_timeout=6.0)
+    got = rt.run()
+    _assert_bitwise(got, ref10)
+    st = rt.fleet_stats()
+    assert st["workers_dead"] == ["w0"]
+    assert st["n_degraded"] == 0
+
+
+def test_router_kill_resume_never_double_emits(tmp_path, ref10):
+    """ckpt_every=1 + a chaos router kill: the resumed router's stream
+    is disjoint from the pre-crash stream (strictly no duplicate
+    indices — the snapshot precedes any emission of its cycle), and the
+    merged results replay-match the reference."""
+    d = str(tmp_path / "ckpt")
+    ch = NetworkChaos(seed=11, kill_router_at=[4])
+    rt = sim_fleet(_reqs(10), n_workers=2, config=COLD, n_lanes=4,
+                   chaos=ch, ckpt_dir=d, ckpt_every=1)
+    pre = []
+    with pytest.raises(SimulatedCrash):
+        for r in rt.serve():
+            pre.append(r)
+    assert pre, "the kill must land after some emissions"
+    names = ["w0", "w1"]
+    t2 = SimTransport([ROUTER] + names)
+    ws = [FleetWorker(n, t2, COLD, l_pad=rt.l_pad,
+                      budget_max=rt.budget_max, n_lanes=4)
+          for n in names]
+    rt2 = FleetRouter.resume(d, _reqs(10), t2, ws,
+                             l_pad=rt.l_pad, budget_max=rt.budget_max)
+    post = list(rt2.serve())
+    pre_idx = {r.index for r in pre}
+    post_idx = [r.index for r in post]
+    assert len(post_idx) == len(set(post_idx))
+    assert not (pre_idx & set(post_idx)), "resumed router double-emitted"
+    merged = {r.index: r.result for r in dedup_results(pre + post)}
+    assert sorted(merged) == list(range(10))
+    _assert_bitwise([merged[i] for i in sorted(merged)], ref10)
+
+
+def test_resume_rejects_wrong_fleet_and_foreign_checkpoints(tmp_path):
+    d = str(tmp_path / "ckpt")
+    ch = NetworkChaos(seed=11, kill_router_at=[2])
+    rt = sim_fleet(_reqs(4, budgets=(6,)), n_workers=2, config=COLD,
+                   n_lanes=4, chaos=ch, ckpt_dir=d, ckpt_every=1)
+    with pytest.raises(SimulatedCrash):
+        list(rt.serve())
+    t2 = SimTransport([ROUTER, "w0"])
+    w = FleetWorker("w0", t2, COLD, l_pad=rt.l_pad,
+                    budget_max=rt.budget_max, n_lanes=4)
+    with pytest.raises(ValueError, match="does not match"):
+        FleetRouter.resume(d, _reqs(4, budgets=(6,)), t2, [w])
+    with pytest.raises(FileNotFoundError):
+        FleetRouter.resume(str(tmp_path / "nope"), _reqs(4), t2, [w])
+
+
+def test_oversized_requests_reject_degraded():
+    rs = _reqs(4, budgets=(6,)) + _reqs(1, budgets=(40,))
+    rt = sim_fleet(rs, n_workers=1, config=COLD, n_lanes=4,
+                   budget_max=10)
+    seen = []
+    rt.on_result = seen.append
+    got = rt.run()
+    assert len(got) == 5
+    by = {r.index: r for r in seen}
+    assert by[4].degraded and by[4].reason == "rejected"
+    assert not any(by[i].degraded for i in range(4))
+
+
+# -- the real-network adapter -------------------------------------------------
+
+def test_socket_loopback_smoke():
+    reqs = _reqs(4, budgets=(6,))
+    ref = StreamingBayesSplitEdge(reqs, COLD, n_lanes=4).run()
+    rt_t, w_ts = socket_fleet(1)
+    try:
+        w = FleetWorker("w0", w_ts[0], COLD,
+                        l_pad=max(s.problem.L for s in reqs),
+                        budget_max=6, n_lanes=4, resend_after=0.5)
+        th = threading.Thread(target=w.run_loop, daemon=True)
+        th.start()
+        rt = FleetRouter(reqs, rt_t, ["w0"], capacity={"w0": 4},
+                         request_timeout=60.0, max_attempts=3)
+        got = rt.run()
+        th.join(timeout=20)
+        assert w._stopped, "worker must see the stop envelope"
+        _assert_bitwise(got, ref)
+    finally:
+        rt_t.close()
+        for t in w_ts:
+            t.close()
+
+
+# -- fleet trace sharding (wireless/traces.py) --------------------------------
+
+def test_split_trace_roundtrips_and_recomposes(tmp_path):
+    tr = arrival_trace("bursty", n=23, seed=4, deadline_slack=(0.5, 2.0))
+    subs = split_trace(tr, 3, seed=1)
+    assert [s["host"] for s in subs] == [0, 1, 2]
+    assert sum(s["n"] for s in subs) == 23
+    # deterministic: same (trace, n_hosts, seed) -> identical shards
+    assert split_trace(tr, 3, seed=1) == subs
+    assert split_trace(tr, 3, seed=2) != subs
+    # JSON round-trip per shard
+    back = []
+    for s in subs:
+        p = str(tmp_path / f"shard{s['host']}.json")
+        save_trace(s, p)
+        back.append(load_trace(p))
+    assert back == subs
+    # recomposition is exact, and the decoded request feed is identical
+    merged = merge_traces(back)
+    assert merged == tr
+    assert len(requests_from_trace(merged)) == len(requests_from_trace(tr))
+    # degenerate split
+    assert merge_traces(split_trace(tr, 1, seed=0)) == tr
+    with pytest.raises(ValueError):
+        merge_traces(subs[:2])
+
+
+# -- soak: seeded network-fault matrix ---------------------------------------
+
+@pytest.mark.soak
+def test_soak_fleet_chaos_matrix(tmp_path):
+    """The CI fleet-chaos job: a seeded drop/duplicate/partition
+    schedule over the bursty trace. Invariants: termination,
+    exactly-once post-dedup emission of every request. On failure the
+    transport event log and undelivered-envelope table are the replay
+    artifacts."""
+    seed = int(os.environ.get("CHAOS_SEED", "0"))
+    art_dir = os.environ.get("SOAK_ARTIFACT_DIR", str(tmp_path))
+    tr = arrival_trace("bursty", n=32, seed=seed, budgets=(6, 10, 14),
+                       deadline_slack=(1.0, 6.0))
+    save_trace(tr, os.path.join(art_dir, "fleet_trace.json"))
+    ch = NetworkChaos(seed=seed, drop_rate=0.08, dup_rate=0.05,
+                      reorder_rate=0.2, delay_max=2,
+                      partition_at=[(12, "w0", ROUTER)],
+                      heal_at=[(40, "*", "*")])
+    rt = sim_fleet(requests_from_trace(tr), n_workers=3, config=COLD,
+                   n_lanes=4, chaos=ch, dt_s=0.05,
+                   arrivals=tr["t"], request_timeout=16.0,
+                   max_attempts=5, hb_timeout=60.0)
+    seen = []
+    rt.on_result = seen.append
+    try:
+        rt.run()
+    finally:
+        ch.save_events(os.path.join(art_dir, "fleet_net_events.json"))
+        tbl = rt.transport.undelivered_table()
+        import json
+        with open(os.path.join(art_dir, "fleet_undelivered.json"),
+                  "w") as f:
+            json.dump(tbl, f, sort_keys=True)
+    merged = dedup_results(seen)
+    assert sorted(r.index for r in merged) == list(range(32))

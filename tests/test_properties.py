@@ -240,3 +240,52 @@ def test_poisson_and_bursty_rates_differ():
     gaps = np.diff(tb)
     assert gaps.max() > 10 * np.median(gaps)
     assert abs(np.mean(np.diff(tp)) - 0.02) < 0.02
+
+
+# -- dedup_results: the exactly-once algebra ---------------------------------
+#
+# The fleet front end (runtime/fleet.py) gets exactly-once semantics by
+# composing at-least-once delivery with first-wins dedup. That only
+# works if dedup is (a) idempotent and (b) invariant under the noise
+# the transport introduces: duplication and reordering of the tail.
+
+def _sr(i, tag=0):
+    """A minimal StreamResult — dedup reads only ``.index``; the tag
+    distinguishes first-seen from later duplicates."""
+    from repro.runtime.stream import StreamResult
+    return StreamResult(index=i, scenario=None, result=tag, pool=0,
+                        lane=0, gen=0, raw={})
+
+
+@given(st.lists(st.integers(0, 30), max_size=40), st.integers(0, 9))
+@settings(deadline=None, max_examples=60)
+def test_dedup_results_idempotent_and_duplication_invariant(idxs, seed):
+    from repro.runtime.stream import dedup_results
+    xs = [_sr(i) for i in idxs]
+    base = dedup_results(xs)
+    # idempotence: a deduped stream passes through unchanged
+    assert dedup_results(base) == base
+    # duplication/permutation invariance on the appended tail:
+    # dedup(xs ++ shuffle(dup(xs))) == dedup(xs). Duplicates are
+    # tagged so we can see that the FIRST occurrence always wins.
+    rng = np.random.default_rng(seed)
+    noise = [_sr(r.index, tag=1) for r in xs for _ in range(2)]
+    rng.shuffle(noise)
+    out = dedup_results(xs + noise)
+    assert out == base
+    assert all(r.tag == 0 if hasattr(r, "tag") else True for r in out)
+    assert [r.result for r in out] == [0] * len(base)  # first wins
+    # the law also holds when the tail alone is deduped first
+    assert dedup_results(base + noise) == base
+
+
+@given(st.lists(st.integers(0, 10), min_size=1, max_size=20))
+@settings(deadline=None, max_examples=40)
+def test_dedup_results_keeps_first_seen_order(idxs):
+    from repro.runtime.stream import dedup_results
+    out = dedup_results([_sr(i) for i in idxs])
+    firsts = []
+    for i in idxs:
+        if i not in firsts:
+            firsts.append(i)
+    assert [r.index for r in out] == firsts

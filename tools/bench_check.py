@@ -75,6 +75,16 @@ gate breaks:
     final best utility in strictly fewer evaluations on at least one
     held-out workload and never more on any (and the warm incumbent is
     never worse), per surrogate family;
+  * fleet_matches_single_host — a zero-fault 2-worker fleet
+    (runtime/fleet.py over the simulated transport) bitwise-matches
+    the single-process streaming engine on the canonical
+    heterogeneous batch (cold fits: fleet placement is pure
+    re-scheduling);
+  * fleet_lossy_exactly_once — under a lossy network (5% drop +
+    duplication + reordering + one partition/heal cycle) over a
+    bursty deadlined trace, every request emits exactly one
+    post-dedup result and the deadline hit rate stays within 0.9x of
+    the fault-free fleet on the same trace;
   * trend_deadline_hit_rate / trend_streaming_throughput — the two
     serving headline numbers (EDF deadline hit rate, streaming
     arrivals/s) must not regress more than 10% against the median of
@@ -252,6 +262,21 @@ def main() -> int:
                      heldout_hit_rate=v["heldout_hit_rate"])
              for k, v in t["surrogates"].items()})
 
+    # fleet front end: multi-host transport parity + lossy exactly-once
+    fl = r["fleet"]
+    gate("fleet_matches_single_host", r["fleet_matches_single_host"],
+         n_workers=fl["n_workers"], n_lanes=fl["n_lanes"],
+         fleet_s=fl["fleet_s"], fleet_cycles=fl["fleet_cycles"])
+    gate("fleet_lossy_exactly_once", r["fleet_lossy_exactly_once"],
+         lossy_exactly_once=fl["lossy_exactly_once"],
+         lossy_hit_rate=fl["lossy_hit_rate"],
+         faultfree_hit_rate=fl["faultfree_hit_rate"],
+         hit_rate_ok=fl["lossy_hit_rate_ok"],
+         n_retries=fl["lossy_n_retries"],
+         n_dup_results=fl["lossy_n_dup_results"],
+         n_degraded=fl["lossy_n_degraded"],
+         transport=fl["lossy_transport"])
+
     # perf trend: the serving headline numbers must not regress >10%
     # against the median of the last 5 recorded runs. The history is
     # read BEFORE this run's record is appended, so the gate compares
@@ -309,6 +334,9 @@ def main() -> int:
           f"routing {o['routing_hit_rate']} vs rr {o['rr_hit_rate']}, "
           f"transfer cold-off={t['matches_cold_off']} "
           f"fewer-evals={t['fewer_evals']}, "
+          f"fleet match={r['fleet_matches_single_host']} "
+          f"lossy-once={r['fleet_lossy_exactly_once']} "
+          f"(hit {fl['lossy_hit_rate']} vs {fl['faultfree_hit_rate']}), "
           f"zero-rejits={r['zero_rejits_after_warmup']}")
     print("BENCH_CHECK_SUMMARY " + json.dumps(gates, sort_keys=True))
 
@@ -342,6 +370,9 @@ def main() -> int:
                 sum(v["heldout_hit_rate"]
                     for v in t["surrogates"].values())
                 / max(len(t["surrogates"]), 1), 3),
+            fleet_s=fl["fleet_s"],
+            fleet_lossy_hit_rate=fl["lossy_hit_rate"],
+            fleet_faultfree_hit_rate=fl["faultfree_hit_rate"],
             gates=gates)
         with open(hist, "a") as f:
             f.write(json.dumps(record, sort_keys=True) + "\n")
