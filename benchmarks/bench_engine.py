@@ -18,7 +18,11 @@ held-out mMobile replay slice, per surrogate family, plus the bitwise
 cold-fallback check) and a fleet front-end section (``run_fleet``:
 multi-host request transport — zero-fault bitwise parity with the
 single-process engine, lossy-network exactly-once + deadline hit-rate
-vs the fault-free fleet). Emits the canonical artifact
+vs the fault-free fleet) and an LM-decoder section (``run_lm``: the
+hetero/packed benchmark rerun on the mixed CNN+LM request mix where L
+actually varies 24..61 — per-arch bitwise parity through the wholerun
+AND streaming engines, shard packing's padding win, packed-vs-unpacked
+wall clock; ``--no-lm`` disables). Emits the canonical artifact
 ``benchmarks/artifacts/BENCH_bo_engine.json`` with wall-clock, speedups,
 per-iteration compile counts (must be flat after warmup => zero re-jits
 in the BO loop), warm-start fit-step accounting, candidates/sec,
@@ -870,12 +874,94 @@ def run_mixed(budget: int = 12, seeds=(0, 1), repeats: int = 1) -> dict:
         matches_per_arch=bool(matches))
 
 
+def run_lm(repeats: int = 1, n_shards: int = 2) -> dict:
+    """LM-decoder scenarios: the hetero/packed benchmark rerun on the
+    canonical mixed CNN+LM request mix (``MIXED_TRACE_ARCHS``), where L
+    actually varies 24..61 (qwen2-moe 24 -> kimi-k2 61) instead of the
+    CNN pair's 36..37 — the workload arch-aware shard packing was built
+    for, with a non-zero padding win.
+
+    Verifies the two lm gates: the mixed batch is bitwise equal to
+    per-arch runs through the wholerun AND streaming engines (cold
+    fits), and shard packing's padding waste is strictly below the
+    global-pad layout; then times packed vs unpacked wall clock."""
+    from repro.distributed.sharding import pack_scenarios
+    from repro.runtime.stream import StreamingBayesSplitEdge
+    from repro.wireless.traces import MIXED_TRACE_ARCHS
+
+    def mk():
+        return make_hetero_scenarios(seeds=(0,), budgets=(6, 12),
+                                     archs=MIXED_TRACE_ARCHS)
+
+    scs = mk()
+    budgets = [sc.budget for sc in scs]
+    l_values: dict = {}
+    for sc in scs:
+        l_values.setdefault(sc.problem.cm.profile.name, sc.problem.L)
+
+    # per-arch bitwise parity (cold fits): mixed batch == per-arch runs
+    r_mix = WholeRunBayesSplitEdge(mk(), warm_start=False,
+                                   compact=False).run()
+    groups: dict = {}
+    for i, sc in enumerate(scs):
+        groups.setdefault(sc.problem.cm.profile.name, []).append(i)
+    per = [None] * len(scs)
+    for idxs in groups.values():
+        sub = mk()
+        for i, r in zip(idxs, WholeRunBayesSplitEdge(
+                [sub[i] for i in idxs], warm_start=False,
+                compact=False).run()):
+            per[i] = r
+    wholerun_bitwise = _bitwise_results(r_mix, per)
+    r_stream = StreamingBayesSplitEdge(mk(), n_lanes=8,
+                                       warm_start=False).run()
+    streaming_bitwise = _bitwise_results(list(r_stream), per)
+    r_packed = run_packed_shards(mk(), n_shards=n_shards, warm_start=False)
+    packing_bitwise = _bitwise_results(r_packed, per)
+
+    # the padding win: shard-local vs global-pad padding waste
+    waste_global = _padding_waste([scs])
+    waste_packed = _padding_waste(pack_scenarios(scs, n_shards)[0])
+
+    # packed-vs-unpacked wall clock (warm; compiles amortized first)
+    WholeRunBayesSplitEdge(mk()).run()
+    run_packed_shards(mk(), n_shards=n_shards)
+    t_g, t_p = [], []
+    for _ in range(repeats):
+        t0 = time.time()
+        WholeRunBayesSplitEdge(mk()).run()
+        t_g.append(time.time() - t0)
+        t0 = time.time()
+        run_packed_shards(mk(), n_shards=n_shards)
+        t_p.append(time.time() - t0)
+    g_s, p_s = float(np.min(t_g)), float(np.min(t_p))
+
+    return dict(
+        n_scenarios=len(scs), archs=sorted(groups),
+        budget_min=min(budgets), budget_max=max(budgets),
+        l_values=l_values, l_min=min(l_values.values()),
+        l_max=max(l_values.values()), n_shards=n_shards,
+        wholerun_s=round(g_s, 4),
+        wholerun_packed_s=round(p_s, 4),
+        packed_speedup=round(g_s / p_s, 2),
+        padding_waste_ratio=round(waste_global, 4),
+        padding_waste_ratio_packed=round(waste_packed, 4),
+        padding_win=bool(waste_packed < waste_global),
+        wholerun_bitwise_match=bool(wholerun_bitwise),
+        streaming_bitwise_match=bool(streaming_bitwise),
+        packing_bitwise_match=bool(packing_bitwise),
+        matches_per_arch=bool(wholerun_bitwise and streaming_bitwise
+                              and packing_bitwise),
+    )
+
+
 def run(n_scenarios: int = 16, budget: int = 20, repeats: int = 1,
         n_legacy: int | None = None, save: bool = True,
         mixed: bool = True, compaction: bool = True,
         hetero: bool = True, streaming: bool = True,
         chaos: bool = True, overload: bool = True,
-        transfer: bool = True, fleet: bool = True) -> dict:
+        transfer: bool = True, fleet: bool = True,
+        lm: bool = True) -> dict:
     mon = CompileMonitor()
 
     # -- seed baseline: per-iteration recompiling sequential loop ------------
@@ -997,6 +1083,8 @@ def run(n_scenarios: int = 16, budget: int = 20, repeats: int = 1,
     transfer_report = run_transfer(repeats=repeats) if transfer else None
     # -- fleet front end: multi-host transport parity + lossy exactly-once ---
     fleet_report = run_fleet(repeats=repeats) if fleet else None
+    # -- LM-decoder scenarios: mixed CNN+LM parity + the packing win ---------
+    lm_report = run_lm(repeats=repeats) if lm else None
 
     n_cand = 64 * 64 + scs[0].problem.L + 45
     evals = sum(r.n_evals for r in bat_results)
@@ -1131,6 +1219,14 @@ def run(n_scenarios: int = 16, budget: int = 20, repeats: int = 1,
             None if fleet_report is None
             else bool(fleet_report["lossy_exactly_once"]
                       and fleet_report["lossy_hit_rate_ok"])),
+        # LM-decoder scenarios: mixed CNN+LM batch (L 24..61) bitwise ==
+        # per-arch runs through wholerun/streaming/packed shards, and
+        # shard packing's padding waste strictly below global-pad
+        lm=lm_report,
+        lm_matches_per_arch=(None if lm_report is None
+                             else lm_report["matches_per_arch"]),
+        lm_packing_padding_win=(None if lm_report is None
+                                else lm_report["padding_win"]),
         compile_counters=compile_counters(),
     )
     if save:
@@ -1184,12 +1280,18 @@ def main():
                     help="run the fleet front-end section (multi-host "
                          "transport zero-fault parity + lossy-network "
                          "exactly-once/hit-rate; --no-fleet disables)")
+    ap.add_argument("--lm", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="run the LM-decoder section (mixed CNN+LM batch "
+                         "with L 24..61: per-arch bitwise parity through "
+                         "wholerun/streaming/packed shards + the shard-"
+                         "packing padding win; --no-lm disables)")
     args = ap.parse_args()
     r = run(args.scenarios, args.budget, args.repeats, args.legacy,
             mixed=args.mixed_arch, compaction=args.compaction,
             hetero=args.hetero, streaming=args.streaming,
             chaos=args.chaos, overload=args.overload,
-            transfer=args.transfer, fleet=args.fleet)
+            transfer=args.transfer, fleet=args.fleet, lm=args.lm)
     seed_s = r["sequential_seed_s"]
     print(f"seed-sequential {'n/a' if seed_s is None else f'{seed_s:.2f}s'}"
           f"  sequential {r['sequential_s']:.2f}s"
@@ -1269,6 +1371,18 @@ def main():
               f"vs fault-free {f['faultfree_hit_rate']} "
               f"({f['lossy_n_retries']} retries, "
               f"{f['lossy_n_dup_results']} dup results)")
+    if r["lm"] is not None:
+        lm = r["lm"]
+        print(f"lm {'+'.join(lm['archs'])} ({lm['n_scenarios']} scenarios, "
+              f"L {lm['l_min']}..{lm['l_max']}): wholerun "
+              f"{lm['wholerun_s']:.2f}s, packed {lm['wholerun_packed_s']:.2f}s"
+              f" ({lm['packed_speedup']}x), padding waste "
+              f"{lm['padding_waste_ratio']:.3f} -> "
+              f"{lm['padding_waste_ratio_packed']:.3f}, matches-per-arch "
+              f"{lm['matches_per_arch']} (wholerun "
+              f"{lm['wholerun_bitwise_match']}, streaming "
+              f"{lm['streaming_bitwise_match']}, packed "
+              f"{lm['packing_bitwise_match']})")
     print(f"matern-score {r['matern_score_candidates_per_sec']:,} cand/s  "
           f"BO loop {r['bo_candidates_per_sec']:,} cand/s")
     return r

@@ -3,7 +3,8 @@ wireless split inference (GP surrogate + hybrid acquisition + Algorithm 1),
 over the analytic cost substrate."""
 from repro.core.batch_bo import (  # noqa: F401
     BatchedBayesSplitEdge, Scenario, make_hetero_scenarios,
-    make_mixed_scenarios, make_vgg19_scenarios, run_packed_shards,
+    make_mixed_scenarios, make_vgg19_scenarios, request_archs,
+    run_packed_shards, scenario_from_request,
 )
 from repro.core.wholerun import WholeRunBayesSplitEdge  # noqa: F401
 from repro.core.bo import BasicBO, BayesSplitEdge, BOResult  # noqa: F401
@@ -12,6 +13,6 @@ from repro.core.cost_model import (  # noqa: F401
     profile_from_cnn,
 )
 from repro.core.problem import (  # noqa: F401
-    SplitInferenceProblem, UtilityParams, default_resnet101_problem,
-    default_vgg19_problem,
+    SplitInferenceProblem, UtilityParams, default_lm_problem,
+    default_resnet101_problem, default_vgg19_problem, derive_lm_budgets,
 )

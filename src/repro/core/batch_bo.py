@@ -241,24 +241,58 @@ def make_mixed_scenarios(seeds: Sequence[int] = (0, 1),
 
 
 def make_hetero_scenarios(seeds: Sequence[int] = (0, 1),
-                          budgets: Sequence[int] = (6, 10, 14, 20)
+                          budgets: Sequence[int] = (6, 10, 14, 20),
+                          archs: Sequence[str] = ("vgg19", "resnet101")
                           ) -> List[Scenario]:
-    """Heterogeneous-budget + mixed-architecture batch: VGG19 and
-    ResNet101 interleaved across a 6..20 eval-budget spread — the
-    canonical lane-compaction workload (budget-6 lanes die at the init
-    design, the rest retire in waves), used by bench_engine's hetero
-    section and bench_check's compaction gates."""
-    from repro.core.problem import (default_resnet101_problem,
-                                    default_vgg19_problem)
-
+    """Heterogeneous-budget + mixed-architecture batch: the given
+    ``archs`` (any :func:`scenario_from_request` registry name — the
+    two CNN backbones by default, or LM decoder archs with L 24..61)
+    interleaved across a 6..20 eval-budget spread — the canonical
+    lane-compaction workload (budget-6 lanes die at the init design,
+    the rest retire in waves), used by bench_engine's hetero and lm
+    sections and bench_check's compaction/packing gates."""
     out = []
     for seed in seeds:
         for budget in budgets:
-            out.append(Scenario(default_vgg19_problem(), seed=seed,
-                                budget=budget))
-            out.append(Scenario(default_resnet101_problem(), seed=seed,
-                                budget=budget))
+            for arch in archs:
+                out.append(scenario_from_request(arch, budget=budget,
+                                                 seed=seed))
     return out
+
+
+def request_archs() -> List[str]:
+    """Every architecture :func:`scenario_from_request` can decode: the
+    paper's two CNN backbones plus the full LM decoder config pool."""
+    from repro.configs import list_configs
+    return ["vgg19", "resnet101"] + list_configs()
+
+
+def _base_request_problem(arch: str):
+    """The calibrated base problem for one request architecture,
+    memoized per arch — requests of the same backbone share the cost
+    model/profile (the decoded per-request problem is a fresh
+    ``SplitInferenceProblem`` either way, so eval ledgers never mix)."""
+    from repro.core.problem import (default_lm_problem,
+                                    default_resnet101_problem,
+                                    default_vgg19_problem)
+
+    cache = _base_request_problem._cache
+    if arch not in cache:
+        if arch == "vgg19":
+            cache[arch] = default_vgg19_problem()
+        elif arch == "resnet101":
+            cache[arch] = default_resnet101_problem()
+        else:
+            from repro.configs import list_configs
+            if arch not in list_configs():
+                raise ValueError(
+                    f"unknown request architecture {arch!r}; "
+                    f"have {request_archs()}")
+            cache[arch] = default_lm_problem(arch)
+    return cache[arch]
+
+
+_base_request_problem._cache = {}
 
 
 def scenario_from_request(arch: str, gain_offset_db: float = 0.0,
@@ -269,19 +303,20 @@ def scenario_from_request(arch: str, gain_offset_db: float = 0.0,
     problem for that backbone, with the request's channel expressed as
     a dB offset from the calibrated operating point (e.g. a fading
     frame of the mMobile replay trace). The request decoder of the
-    streaming admission queue (``repro.runtime.stream``)."""
-    from repro.core.problem import (SplitInferenceProblem,
-                                    default_resnet101_problem,
-                                    default_vgg19_problem)
+    streaming admission queue (``repro.runtime.stream``).
 
-    if arch == "vgg19":
-        base = default_vgg19_problem()
-    elif arch == "resnet101":
-        base = default_resnet101_problem()
-    else:
-        raise ValueError(f"unknown request architecture {arch!r}")
+    ``arch`` covers the whole registry (:func:`request_archs`): the two
+    CNN backbones plus every LM decoder config (``default_lm_problem``
+    calibration), so arrival traces and the serving engines carry mixed
+    CNN+LM request streams. The decoded problem keeps the base
+    problem's ``p_min``/``p_max`` search space — a gain offset shifts
+    the channel, never the power bounds."""
+    from repro.core.problem import SplitInferenceProblem
+
+    base = _base_request_problem(arch)
     pb = SplitInferenceProblem(base.cm, base.gain_db + gain_offset_db,
-                               util=base.util)
+                               util=base.util, p_min=base.p_min,
+                               p_max=base.p_max)
     return Scenario(pb, seed=seed, budget=budget, deadline_s=deadline_s)
 
 

@@ -196,7 +196,7 @@ def utility(params, li, p):
     # deadline truncation: tail skipped, base accuracy retained
     trunc = params["base_acc"] * jnp.minimum(
         1.0, phi / params["completion_floor"])
-    acc_trunc = jnp.floor(trunc / params["quantum"]) * params["quantum"]
+    acc_trunc = jnp.floor(trunc / params["quantum"] + 1e-9) * params["quantum"]
     # full completion: feature-robustness bump + energy tie-break
     bump = params["bump"] * jnp.exp(
         -0.5 * jnp.square((li.astype(jnp.float32) - params["peak_layer"])

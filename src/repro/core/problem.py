@@ -165,7 +165,7 @@ class SplitInferenceProblem:
         if phi < 1.0:
             # deadline truncation: tail skipped, base accuracy retained
             smooth = u.base_acc * min(1.0, phi / u.completion_floor)
-            return smooth, np.floor(smooth / u.quantum) * u.quantum
+            return smooth, np.floor(smooth / u.quantum + 1e-9) * u.quantum
         bump = u.bump * np.exp(-0.5 * ((l - u.peak_layer) / u.sigma) ** 2)
         raw = u.base_acc + bump
         smooth = raw - u.eps_energy * e / b.e_max_j
@@ -207,6 +207,65 @@ def default_vgg19_problem(seed: int = 0, budgets: Budgets = Budgets(),
     cm = CostModel(vgg19_profile(), budgets=budgets)
     gain_db = cm.calibrate_gain_db(l_star=7, p_star=0.38)
     return SplitInferenceProblem(cm, gain_db, executor=executor)
+
+
+# nominal mMobile-class link used to derive LM budgets before the
+# per-arch channel anchoring (matches the historical serve.py default)
+LM_NOMINAL_GAIN_DB = -100.0
+
+
+def derive_lm_budgets(cm: CostModel, gain_db: float = LM_NOMINAL_GAIN_DB,
+                      p_max: float = 0.5) -> Budgets:
+    """Auto-budget calibration for an LM split-serving problem (lifted
+    from ``launch/serve.py:build_problem`` so every consumer of the
+    decoder pool derives the same constraints): ``tau_max`` = 1.25x the
+    best achievable end-to-end delay at ``p_max`` on the nominal link,
+    ``e_max`` = 2x the energy of an L/8 split at ``p_max`` — a
+    tight-but-feasible constrained problem for every arch."""
+    prof = cm.profile
+    ls = np.arange(1, prof.n_layers + 1)          # valid splits only
+    delays = (cm.device_delay_s(ls) + cm.server_delay_s(ls)
+              + cm.tx_delay_s(ls, p_max, gain_db))
+    best = int(np.argmin(delays))
+    # energy budget admits a handful of device-side layers: anchor at
+    # an L/8 split so the trade-off is non-degenerate
+    l_q = max(1, prof.n_layers // 8)
+    e_anchor = float(cm.energy_j(l_q, p_max, gain_db))
+    return Budgets(e_max_j=2.0 * e_anchor, tau_max_s=float(1.25 * delays[best]))
+
+
+def default_lm_problem(arch, seq: int = 128, budgets: Optional[Budgets] = None,
+                       executor=None, p_min: float = 0.0, p_max: float = 1.0):
+    """Calibrated constrained problem for one arch of the LM decoder
+    pool (``arch``: a registry name or a ``ModelConfig``). Budgets are
+    auto-derived from the profile (:func:`derive_lm_budgets`) and the
+    channel is then anchored per-arch so the L/8 split at P = 0.38 W is
+    exactly min-feasible on the delay boundary — the same
+    ``calibrate_gain_db`` anchoring the CNN defaults use. The power
+    range is wider than the CNN defaults (``p_max`` = 1 W): decode
+    continuation ships per-layer KV alongside the residual stream, so
+    the uplink payload is heavier."""
+    from repro.configs import get_config
+    from repro.core.profiles import lm_profile
+
+    cfg = get_config(arch) if isinstance(arch, str) else arch
+    prof = lm_profile(cfg, seq)
+    cm = CostModel(prof)
+    if budgets is None:
+        budgets = derive_lm_budgets(cm, p_max=p_max)
+    cm = CostModel(prof, budgets=budgets)
+    # per-arch anchor: deepest L/8 split whose compute alone still meets
+    # the deadline (calibrate_gain_db needs positive transmission slack)
+    l_star = max(1, prof.n_layers // 8)
+    while l_star > 1 and (budgets.tau_max_s - cm.device_delay_s(l_star)
+                          - cm.server_delay_s(l_star)) <= 0:
+        l_star -= 1
+    gain_db = cm.calibrate_gain_db(l_star=l_star,
+                                   p_star=min(0.38, 0.76 * p_max))
+    util = UtilityParams(peak_layer=l_star,
+                         sigma=max(1.0, prof.n_layers / 16.0))
+    return SplitInferenceProblem(cm, gain_db, util=util, executor=executor,
+                                 p_min=p_min, p_max=p_max)
 
 
 def default_resnet101_problem(seed: int = 0):

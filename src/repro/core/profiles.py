@@ -57,11 +57,13 @@ def _block_macs(cfg, kind: str, seq: int) -> float:
         win = cfg.window if (kind == "local" or cfg.attn_type == "swa") else 0
         kv_len = min(seq, win) if win else seq
         m += 2 * seq * kv_len * Hq * hd / 2          # causal scores+AV (avg)
-        if cfg.moe and kind == "attn":
+        mult = 3 if cfg.mlp_type in ("swiglu", "geglu") else 2
+        if cfg.moe and kind != "attn_dense":
+            # MoE MLP on every routed attention layer ("attn" AND windowed
+            # "local"); only the leading first_k_dense layers stay dense
             m += seq * D * cfg.n_experts             # router
-            m += seq * (cfg.top_k + cfg.n_shared_experts) * 3 * D * F
+            m += seq * (cfg.top_k + cfg.n_shared_experts) * mult * D * F
         else:
-            mult = 3 if cfg.mlp_type in ("swiglu", "geglu") else 2
             m += seq * mult * D * F
     elif kind == "rglru":
         R = cfg.lru_width or D
@@ -76,8 +78,13 @@ def _block_macs(cfg, kind: str, seq: int) -> float:
 
 
 def _boundary_bytes(cfg, l: int, seq: int, bytes_per_elem: int = 2) -> float:
-    """Bytes crossing the split after layer l: residual stream + any
-    recurrent state of completed layers (needed by decode continuation)."""
+    """Bytes crossing the split after layer l for a decode continuation:
+    the (seq, d_model) residual stream plus the per-layer state of every
+    device-side layer the server needs to keep decoding — the KV cache
+    for attention layers (2 * kv_len * n_kv_heads * head_dim elements,
+    window-bounded for swa/local) and the fixed-size f32 recurrent state
+    for RG-LRU / RWKV layers. The recurrent state is seq-independent,
+    which is what makes SSM/hybrid archs cheap to split."""
     b = seq * cfg.d_model * bytes_per_elem
     kinds = cfg.layer_kinds()[:l]
     for k in kinds:
@@ -85,6 +92,10 @@ def _boundary_bytes(cfg, l: int, seq: int, bytes_per_elem: int = 2) -> float:
             b += (cfg.lru_width or cfg.d_model) * 4
         elif k == "rwkv":
             b += cfg.n_rwkv_heads * cfg.rwkv_head_dim ** 2 * 4
+        else:  # attn / local / attn_dense: per-layer KV cache
+            win = cfg.window if (k == "local" or cfg.attn_type == "swa") else 0
+            kv_len = min(seq, win) if win else seq
+            b += 2 * kv_len * cfg.n_kv_heads * cfg.hd * bytes_per_elem
     return float(b)
 
 

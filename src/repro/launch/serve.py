@@ -9,7 +9,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.core.bo import BayesSplitEdge
@@ -22,29 +21,21 @@ from repro.runtime.splitpoint import SplitRunner
 
 def build_problem(cfg, seq: int, budgets: Budgets = None, executor=None,
                   gain_db: float = -100.0, p_max: float = 0.5):
-    """Auto-budgeted split-serving problem for an LM arch: a nominal
-    mMobile-class link (-100 dB) sets the channel; budgets are derived
-    from the profile (tau_max = 1.25x the best achievable end-to-end
-    delay at P_max, e_max = 2x the energy of that configuration) so every
-    arch gets a tight-but-feasible constrained problem."""
+    """Auto-budgeted split-serving problem for an LM arch on a FIXED
+    nominal link (-100 dB). The budget derivation lives in
+    ``core.problem.derive_lm_budgets``; ``core.problem
+    .default_lm_problem`` is the same construction with per-arch
+    channel anchoring instead of the fixed gain — this CLI keeps the
+    explicit-gain variant so ``--arch``/budget overrides stay scriptable."""
+    from repro.core.problem import derive_lm_budgets
     prof = lm_profile(cfg, seq)
-    cm = CostModel(prof)
     if budgets is None:
-        ls = np.arange(1, prof.n_layers + 1)      # valid splits only
-        delays = (cm.device_delay_s(ls) + cm.server_delay_s(ls)
-                  + cm.tx_delay_s(ls, p_max, gain_db))
-        best = int(np.argmin(delays))
-        # energy budget admits a handful of device-side layers: anchor at
-        # an L/8 split so the trade-off is non-degenerate
-        l_q = max(1, prof.n_layers // 8)
-        e_anchor = float(cm.energy_j(l_q, p_max, gain_db))
-        budgets = Budgets(e_max_j=2.0 * e_anchor,
-                          tau_max_s=float(1.25 * delays[best]))
-    # (re)build with the effective budgets — caller-supplied ones included,
+        budgets = derive_lm_budgets(CostModel(prof), gain_db=gain_db,
+                                    p_max=p_max)
+    # build with the effective budgets — caller-supplied ones included,
     # which the pre-engine code silently dropped
     cm = CostModel(prof, budgets=budgets)
-    pb = SplitInferenceProblem(cm, gain_db, executor=executor, p_max=p_max)
-    return pb
+    return SplitInferenceProblem(cm, gain_db, executor=executor, p_max=p_max)
 
 
 def main(argv=None):

@@ -141,7 +141,10 @@ class StreamResult:
 def requests_from_trace(trace: dict) -> List[Scenario]:
     """Decode an arrival trace (``wireless.traces.arrival_trace``) into
     the Scenario feed, one per arrival, in arrival order. Traces with a
-    ``deadline_s`` column yield deadline-carrying scenarios."""
+    ``deadline_s`` column yield deadline-carrying scenarios. The arch
+    column covers the whole request registry
+    (``core.batch_bo.request_archs()``) — CNN and LM-decoder arrivals
+    decode into one mixed feed, padded to the serving ``l_pad``."""
     deadlines = trace.get("deadline_s") or [None] * len(trace["arch"])
     return [scenario_from_request(arch, off, budget, seed, deadline_s=d)
             for arch, off, budget, seed, d in zip(

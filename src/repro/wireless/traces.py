@@ -59,6 +59,16 @@ def frame_stats(trace_db: np.ndarray) -> dict:
 
 ARRIVAL_KINDS = ("poisson", "bursty", "replay")
 
+# canonical LM-decoder request mix: L spread 24..61 (qwen2-moe 24 ->
+# kimi-k2 61) with an MoE pair and an SSM + hybrid pair, so arch-aware
+# shard packing has real padding to win back. Any name
+# ``core.batch_bo.request_archs()`` lists is a valid trace arch; these
+# tuples are the mixes bench_engine's lm section and the mixed CNN+LM
+# serving benchmarks replay.
+LM_TRACE_ARCHS = ("qwen2-moe-a2.7b", "recurrentgemma-2b", "rwkv6-3b",
+                  "kimi-k2-1t-a32b")
+MIXED_TRACE_ARCHS = ("vgg19", "resnet101") + LM_TRACE_ARCHS
+
 
 def poisson_arrivals(n: int, rate_hz: float = 50.0,
                      seed: int = 0) -> np.ndarray:
@@ -98,7 +108,10 @@ def arrival_trace(kind: str = "poisson", n: int = 100, seed: int = 0,
     state from the seeded mMobile-like gain trace (``gain_offset_db`` =
     frame gain minus the trace mean, i.e. the fading excursion around
     the calibrated operating point), its budget and backbone from the
-    given mixes, and its init seed from the arrival index.
+    given mixes, and its init seed from the arrival index. ``archs``
+    accepts any request-registry name — CNN backbones and LM decoder
+    configs mix freely in one trace (``MIXED_TRACE_ARCHS`` is the
+    canonical CNN+LM blend).
 
     ``deadline_slack`` (optional ``(lo_s, hi_s)``) gives every arrival
     an absolute completion deadline ``deadline_s[i] = t[i] + slack_i``

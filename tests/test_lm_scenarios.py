@@ -1,0 +1,191 @@
+"""LM-decoder scenarios: calibrated default problems, the request
+registry, power-bounds round-trip, the truncated-accuracy quantization
+fix, and mixed CNN+LM engine parity (the acceptance batch).
+
+The parity tests mirror the contracts of tests/test_mixed_arch.py and
+tests/test_streaming.py on the CNN+LM blend the serving benchmarks
+replay (wireless.traces.MIXED_TRACE_ARCHS, L 24..61): cold fits are
+bitwise equal to per-architecture runs through both engines.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_configs
+from repro.core import (
+    Budgets, CostModel, WholeRunBayesSplitEdge, default_lm_problem,
+    default_vgg19_problem, derive_lm_budgets, make_hetero_scenarios,
+    request_archs, scenario_from_request,
+)
+from repro.core.cost_model import LayerProfile
+from repro.core.problem import SplitInferenceProblem, UtilityParams
+from repro.runtime.stream import StreamingBayesSplitEdge
+from repro.wireless.traces import LM_TRACE_ARCHS, MIXED_TRACE_ARCHS
+
+
+def _assert_bitwise(res_a, res_b):
+    for a, b in zip(res_a, res_b):
+        assert a.n_evals == b.n_evals
+        assert a.utilities == b.utilities
+        assert a.incumbent_trace == b.incumbent_trace
+        assert a.feasible == b.feasible
+        assert a.best_accuracy == b.best_accuracy
+
+
+# ---------------------------------------------------------------------------
+# truncated-accuracy quantization (regression: floor one quantum low)
+# ---------------------------------------------------------------------------
+
+
+def _toy_truncated_problem():
+    """phi = 0.95 at (l=1, P=0.3): truncated branch, smooth exactly
+    base_acc."""
+    prof = LayerProfile("toy", np.array([0.0, 1e9, 2e9]), 4e9,
+                        np.array([8e5, 8e5, 8e5]), 2)
+    cm = CostModel(prof)
+    t = float(cm.delay_s(1, 0.3, -100.0))
+    cm = CostModel(prof, budgets=Budgets(e_max_j=50.0, tau_max_s=0.95 * t))
+    return SplitInferenceProblem(
+        cm, -100.0, util=UtilityParams(base_acc=0.7, quantum=0.1))
+
+
+def test_truncated_accuracy_quantization_boundary():
+    """smooth = base_acc * min(1, phi/0.9) = 0.7 exactly at phi = 0.95,
+    but 0.7/0.1 is 6.999... in float64 — the truncated branch floored
+    one quantum low and reported 0.6. Regression for the +1e-9 floor
+    guard (the full-completion branch already had it)."""
+    pb = _toy_truncated_problem()
+    phi = float(pb.cm.completion_fraction(1, 0.3, pb.gain_db))
+    assert 0.9 < phi < 1.0              # truncated branch, not a hard fail
+    smooth, acc = pb._accuracy(1, 0.3)
+    assert smooth == pytest.approx(0.7)
+    assert acc == pytest.approx(0.7)    # pre-fix: 0.6
+
+
+def test_quantized_accuracy_device_host_parity_dyadic():
+    """The +1e-9 floor guard is mirrored in jax_cost.utility and must
+    not perturb the paper's dyadic grid (quantum 100/64): device and
+    host report the identical accuracy at the calibrated optimum."""
+    import jax.numpy as jnp
+
+    from repro.core import jax_cost
+
+    pb = default_vgg19_problem()
+    params = pb.jax_params()
+    # p_max: comfortably inside the deadline, full-completion branch
+    l, p = pb.denormalize(pb.normalize(7, 0.5))
+    _, acc_host = pb._accuracy(l, p)
+    _, acc_dev, _ = jax_cost.utility(params, jnp.asarray(l),
+                                     jnp.asarray(p, jnp.float32))
+    assert float(acc_dev) == acc_host == 87.5   # 56/64
+
+
+# ---------------------------------------------------------------------------
+# calibrated per-arch default problems
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", list_configs())
+def test_default_lm_problem_calibrated_feasible(arch):
+    """Every decoder config yields a finite-budget problem whose
+    analytic feasible region is non-empty and whose best boundary
+    candidate reaches a full-completion (nonzero) utility."""
+    pb = default_lm_problem(arch)
+    b = pb.cm.budgets
+    assert np.isfinite(b.e_max_j) and b.e_max_j > 0
+    assert np.isfinite(b.tau_max_s) and b.tau_max_s > 0
+    assert pb.L == get_config(arch).n_layers
+    assert (pb.p_min, pb.p_max) == (0.0, 1.0)
+    cands = pb.boundary_candidates()
+    assert len(cands) >= 1
+    assert max(pb.evaluate(c, record=False) for c in cands) > 0.0
+
+
+def test_derive_lm_budgets_scale_with_profile():
+    """Budgets derive from the arch's own profile: the 61-layer MoE is
+    granted a larger energy/deadline envelope than the 24-layer MoE."""
+    from repro.core.profiles import lm_profile
+    small = derive_lm_budgets(
+        CostModel(lm_profile(get_config("qwen2-moe-a2.7b"), 128)))
+    big = derive_lm_budgets(
+        CostModel(lm_profile(get_config("kimi-k2-1t-a32b"), 128)))
+    assert big.e_max_j > small.e_max_j
+    assert big.tau_max_s > small.tau_max_s
+
+
+# ---------------------------------------------------------------------------
+# request registry + power-bounds round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_request_registry_covers_all_archs():
+    archs = request_archs()
+    assert archs[:2] == ["vgg19", "resnet101"]
+    assert set(list_configs()) <= set(archs)
+    for arch in archs:
+        sc = scenario_from_request(arch, budget=6)
+        if arch in list_configs():
+            assert sc.problem.L == get_config(arch).n_layers
+        assert len(sc.problem.boundary_candidates()) >= 1
+    with pytest.raises(ValueError):
+        scenario_from_request("vgg16")
+
+
+def test_scenario_from_request_keeps_power_bounds():
+    """Regression: the request decoder rebuilt the problem with the
+    constructor-default power range, silently shrinking an LM problem's
+    [0, 1] W search space to [0, 0.5] W — every denormalized power (and
+    so every eval) in the decoded scenario disagreed with the base
+    problem's."""
+    base = default_lm_problem("rwkv6-3b")
+    sc = scenario_from_request("rwkv6-3b", gain_offset_db=-3.0, budget=8)
+    assert (sc.problem.p_min, sc.problem.p_max) == (base.p_min, base.p_max)
+    assert sc.problem.p_max == 1.0      # LM default, not the 0.5 ctor default
+    assert sc.problem.gain_db == pytest.approx(base.gain_db - 3.0)
+    # normalize/denormalize round-trips agree with the base problem
+    l, p = 16, 0.77
+    np.testing.assert_allclose(sc.problem.normalize(l, p),
+                               base.normalize(l, p))
+    ld, pd = sc.problem.denormalize(base.normalize(l, p))
+    assert (ld, pd) == (l, pytest.approx(p))
+
+
+# ---------------------------------------------------------------------------
+# mixed CNN+LM batches: engine parity on the acceptance blend
+# ---------------------------------------------------------------------------
+
+
+def _lm_batch():
+    # VGG19 + ResNet101 + the 4-arch LM mix: L = 37,36,24,26,32,61
+    return make_hetero_scenarios(seeds=(0,), budgets=(12,),
+                                 archs=MIXED_TRACE_ARCHS)
+
+
+def test_lm_batch_spans_the_acceptance_mix():
+    scs = _lm_batch()
+    ls = [sc.problem.L for sc in scs]
+    assert max(ls) >= 2 * min(ls)                    # L span >= 2x
+    assert get_config("kimi-k2-1t-a32b").moe         # >= 1 MoE
+    assert "rwkv6-3b" in LM_TRACE_ARCHS              # >= 1 SSM
+    assert {"vgg19", "resnet101"} < set(MIXED_TRACE_ARCHS)
+
+
+def test_mixed_lm_wholerun_matches_per_arch():
+    """Cold whole-run over the mixed CNN+LM batch is bitwise equal to
+    per-architecture runs: padding an LM lane to the batch L_max = 61
+    never changes an eval."""
+    mixed = WholeRunBayesSplitEdge(_lm_batch(), warm_start=False,
+                                   compact=False).run()
+    per = [WholeRunBayesSplitEdge([sc], warm_start=False,
+                                  compact=False).run()[0]
+           for sc in _lm_batch()]
+    _assert_bitwise(mixed, per)
+
+
+def test_mixed_lm_streaming_matches_wholerun():
+    """The streaming admission queue serves the CNN+LM blend bitwise
+    identically to the offline one-dispatch batch (cold fits)."""
+    r_s = StreamingBayesSplitEdge(_lm_batch(), n_lanes=8,
+                                  warm_start=False).run()
+    r_o = WholeRunBayesSplitEdge(_lm_batch(), warm_start=False,
+                                 compact=False).run()
+    _assert_bitwise(r_s, r_o)

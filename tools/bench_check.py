@@ -85,6 +85,14 @@ gate breaks:
     bursty deadlined trace, every request emits exactly one
     post-dedup result and the deadline hit rate stays within 0.9x of
     the fault-free fleet on the same trace;
+  * lm_matches_per_arch — the mixed CNN+LM batch (VGG19/ResNet101 plus
+    the LM decoder mix, L 24..61) is bitwise equal to per-arch runs
+    through the wholerun engine, the streaming engine AND the packed
+    shards (cold fits);
+  * lm_packing_padding_win — on that L=24..61 batch, arch-aware shard
+    packing's padding waste is strictly below the global-pad layout
+    (the win the packing machinery was built for — ~0 on the CNN-only
+    batch where L is 36..37);
   * trend_deadline_hit_rate / trend_streaming_throughput — the two
     serving headline numbers (EDF deadline hit rate, streaming
     arrivals/s) must not regress more than 10% against the median of
@@ -277,6 +285,21 @@ def main() -> int:
          n_degraded=fl["lossy_n_degraded"],
          transport=fl["lossy_transport"])
 
+    # LM-decoder scenarios: mixed CNN+LM parity + the packing payoff
+    lm = r["lm"]
+    gate("lm_matches_per_arch", r["lm_matches_per_arch"],
+         wholerun_bitwise=lm["wholerun_bitwise_match"],
+         streaming_bitwise=lm["streaming_bitwise_match"],
+         packing_bitwise=lm["packing_bitwise_match"],
+         n_scenarios=lm["n_scenarios"], archs=list(lm["archs"]),
+         l_values=lm["l_values"])
+    gate("lm_packing_padding_win", r["lm_packing_padding_win"],
+         padding_waste_ratio=lm["padding_waste_ratio"],
+         padding_waste_ratio_packed=lm["padding_waste_ratio_packed"],
+         l_min=lm["l_min"], l_max=lm["l_max"],
+         wholerun_s=lm["wholerun_s"],
+         wholerun_packed_s=lm["wholerun_packed_s"])
+
     # perf trend: the serving headline numbers must not regress >10%
     # against the median of the last 5 recorded runs. The history is
     # read BEFORE this run's record is appended, so the gate compares
@@ -337,6 +360,10 @@ def main() -> int:
           f"fleet match={r['fleet_matches_single_host']} "
           f"lossy-once={r['fleet_lossy_exactly_once']} "
           f"(hit {fl['lossy_hit_rate']} vs {fl['faultfree_hit_rate']}), "
+          f"lm match={r['lm_matches_per_arch']} "
+          f"(L {lm['l_min']}..{lm['l_max']}, padding "
+          f"{lm['padding_waste_ratio']:.2f}->"
+          f"{lm['padding_waste_ratio_packed']:.2f}), "
           f"zero-rejits={r['zero_rejits_after_warmup']}")
     print("BENCH_CHECK_SUMMARY " + json.dumps(gates, sort_keys=True))
 
@@ -373,6 +400,10 @@ def main() -> int:
             fleet_s=fl["fleet_s"],
             fleet_lossy_hit_rate=fl["lossy_hit_rate"],
             fleet_faultfree_hit_rate=fl["faultfree_hit_rate"],
+            lm_padding_waste=lm["padding_waste_ratio"],
+            lm_padding_waste_packed=lm["padding_waste_ratio_packed"],
+            lm_wholerun_s=lm["wholerun_s"],
+            lm_packed_s=lm["wholerun_packed_s"],
             gates=gates)
         with open(hist, "a") as f:
             f.write(json.dumps(record, sort_keys=True) + "\n")
